@@ -1,0 +1,75 @@
+"""Shared benchmark utilities: timing, memory tracking, workload builders."""
+
+from __future__ import annotations
+
+import time
+import tracemalloc
+
+from repro.core.engine import HamletRuntime
+from repro.core.pattern import EventType, Kleene, Seq
+from repro.core.query import Pred, Query, Workload, count_star
+from repro.streams.generator import (RIDESHARING_SCHEMA, SMARTHOME_SCHEMA,
+                                     STOCK_SCHEMA, TAXI_SCHEMA)
+
+
+def timed(fn):
+    """Run fn once; returns (wall_s, peak_python_bytes, result)."""
+    tracemalloc.start()
+    try:
+        t0 = time.perf_counter()
+        out = fn()
+        dt = time.perf_counter() - t0
+        _, peak = tracemalloc.get_traced_memory()
+    finally:
+        tracemalloc.stop()
+    return dt, peak, out
+
+
+def kleene_workload(schema, n_queries: int, *, kleene_type: str,
+                    head_types: list[str], within: int = 60, slide: int = 30,
+                    pred_attr: str | None = None) -> Workload:
+    """Paper workload 1 shape: shared Kleene sub-pattern, same windows; the
+    queries differ in their head type and (optionally) predicates."""
+    T = EventType(kleene_type)
+    qs = []
+    for i in range(n_queries):
+        head = EventType(head_types[i % len(head_types)])
+        preds = None
+        if pred_attr and i % 3 == 2:
+            preds = {kleene_type: [Pred(pred_attr, "<", 4.0 + (i % 5))]}
+        qs.append(Query(f"q{i}", Seq(head, Kleene(T)), aggs=(count_star(),),
+                        preds=preds, within=within, slide=slide))
+    return Workload(schema, qs)
+
+
+def diverse_workload(schema, n_queries: int, *, kleene_type: str,
+                     head_types: list[str], attr: str) -> Workload:
+    """Paper workload 2 shape: Kleene patterns of length 1-3, window sizes
+    5-20 ticks-of-60, varied aggregates and predicates."""
+    from repro.core.query import agg_avg, agg_max, agg_sum, count_type
+
+    T = EventType(kleene_type)
+    aggs_pool = [
+        (count_star(),),
+        (count_star(), agg_sum(kleene_type, attr)),
+        (count_star(), agg_avg(kleene_type, attr)),
+        (count_star(), agg_max(kleene_type, attr)),
+        (count_star(), count_type(kleene_type)),
+    ]
+    qs = []
+    for i in range(n_queries):
+        head = EventType(head_types[i % len(head_types)])
+        tail = EventType(head_types[(i + 1) % len(head_types)])
+        if i % 3 == 0:
+            pat = Seq(head, Kleene(T))
+        elif i % 3 == 1:
+            pat = Seq(head, Kleene(T), tail)
+        else:
+            pat = Kleene(T)
+        preds = None
+        if i % 2:
+            preds = {kleene_type: [Pred(attr, "<", 3.0 + (i % 6))]}
+        qs.append(Query(f"q{i}", pat, aggs=aggs_pool[i % len(aggs_pool)],
+                        preds=preds, within=(5 + 5 * (i % 4)) * 6,
+                        slide=30, group_by=()))
+    return Workload(schema, qs)

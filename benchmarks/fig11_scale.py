@@ -1,0 +1,61 @@
+"""Figure 11: HAMLET vs GRETA on the NYC-taxi-like and smart-home-like
+streams, varying event rate and workload size."""
+
+from __future__ import annotations
+
+from repro.core.baselines.greta import greta_run
+from repro.core.engine import HamletRuntime
+from repro.core.optimizer import DynamicPolicy
+from repro.streams.generator import (SMARTHOME_SCHEMA, TAXI_SCHEMA,
+                                     nyc_taxi_stream, smarthome_stream)
+
+from .common import kleene_workload, timed
+
+
+def run(dataset: str, events_per_minute: int, n_queries: int, minutes=2):
+    if dataset == "taxi":
+        wl = kleene_workload(TAXI_SCHEMA, n_queries, kleene_type="Travel",
+                             head_types=["Request", "Pickup", "Dropoff"],
+                             within=60, slide=30, pred_attr="speed")
+        stream = nyc_taxi_stream(events_per_minute=events_per_minute,
+                                 minutes=minutes)
+    else:
+        wl = kleene_workload(SMARTHOME_SCHEMA, n_queries,
+                             kleene_type="Measure",
+                             head_types=["Load", "Work", "Idle"],
+                             within=60, slide=30, pred_attr="value")
+        stream = smarthome_stream(events_per_minute=events_per_minute,
+                                  minutes=minutes)
+    t_end = minutes * 60
+    rows = []
+    for name, fn in [
+        ("hamlet", lambda: HamletRuntime(wl, policy=DynamicPolicy()).run(
+            stream, t_end)),
+        ("greta", lambda: greta_run(wl, stream, t_end)),
+    ]:
+        dt, peak, _ = timed(fn)
+        rows.append({"dataset": dataset, "approach": name,
+                     "events_per_min": events_per_minute,
+                     "queries": n_queries,
+                     "latency_s": round(dt, 4),
+                     "throughput_ev_s": round(len(stream) / dt, 1),
+                     "peak_mem_mb": round(peak / 1e6, 2)})
+    return rows
+
+
+def main(quick=True):
+    rows = []
+    for ds in ("taxi", "smarthome"):
+        rates = [120] if quick else [120, 240, 480]
+        ks = [5] if quick else [5, 15, 25]
+        for r in rates:
+            rows += run(ds, r, 5)
+        for k in ks:
+            if not quick or k != 5:
+                rows += run(ds, 120, k)
+    return rows
+
+
+if __name__ == "__main__":
+    for row in main(quick=False):
+        print(row)

@@ -1,0 +1,52 @@
+"""Propagation-kernel microbenchmark: numpy oracle vs jnp scan vs blocked
+Neumann (the Pallas algorithm in jnp) vs Pallas interpret, across burst
+sizes and basis widths.  On CPU the interpret-mode Pallas timing is not
+meaningful for TPU perf; the benchmark's role here is correctness-at-scale
+plus FLOP accounting for the roofline."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.kernels import ops
+
+
+def run(b: int, d: int, reps: int = 3, backends=("np", "jax", "jax_blocked",
+                                                 "pallas")):
+    rng = np.random.default_rng(b)
+    # weighted mask keeps magnitudes bounded (0/1 counts double per event and
+    # saturate f32 past b ~ 120; the engine's f64 host path is the exact one)
+    mask = np.tril((rng.random((b, b)) < 0.5), k=-1).astype(np.float32)
+    mask *= rng.uniform(0, 2.0 / b, (b, b)).astype(np.float32)
+    base = rng.standard_normal((b, d)).astype(np.float32) * 0.01
+    rows = []
+    ref = None
+    for backend in backends:
+        out = np.asarray(ops.propagate(base, mask, backend=backend))
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            out = ops.propagate(base, mask, backend=backend)
+        np.asarray(out)
+        dt = (time.perf_counter() - t0) / reps
+        if ref is None:
+            ref = np.asarray(out)
+        rows.append({"backend": backend, "b": b, "d": d,
+                     "us_per_call": round(dt * 1e6, 1),
+                     "max_err": float(np.max(np.abs(np.asarray(out) - ref)))})
+    return rows
+
+
+def main(quick=True):
+    rows = []
+    shapes = [(128, 8), (256, 16)] if quick else [(128, 8), (256, 16),
+                                                  (512, 32), (1024, 8)]
+    for b, d in shapes:
+        rows += run(b, d)
+    return rows
+
+
+if __name__ == "__main__":
+    for row in main(quick=False):
+        print(row)

@@ -1,0 +1,112 @@
+"""Roofline analysis from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch x shape x mesh) cell:
+
+    compute    = HLO_FLOPs / (chips * 197 TFLOP/s)      (global, trip-exact)
+    memory     = HBM bytes per device / 819 GB/s        (trip-aware estimate)
+    collective = collective bytes per device / 50 GB/s  (trip-aware, per-kind)
+
+plus MODEL_FLOPS = 6*N*D (train) / 2*N*D (prefill) / 2*N_active*B (decode)
+and the useful-compute ratio MODEL_FLOPS / HLO_FLOPs (catching remat and
+dispatch waste).  Hardware: TPU v5e-like — 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "artifacts")
+
+
+def model_flops(arch: str, cell: str) -> float:
+    import jax
+
+    from repro.configs import get_config
+    from repro.configs.base import SHAPE_CELLS
+    from repro.models.lm import init_params
+
+    cfg = get_config(arch)
+    seq, batch, step = SHAPE_CELLS[cell]
+    shapes = jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+    flat = jax.tree_util.tree_flatten_with_path(shapes)[0]
+    n_total = 0.0
+    n_active = 0.0
+    for path, leaf in flat:
+        p = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                     for k in path)
+        n = float(leaf.size)
+        n_total += n
+        if "moe/w_" in p and "shared" not in p:
+            n_active += n * cfg.top_k / max(1, cfg.n_experts)
+        else:
+            n_active += n
+    if step == "train":
+        return 6.0 * n_active * batch * seq
+    if step == "prefill":
+        return 2.0 * n_active * batch * seq
+    return 2.0 * n_active * batch  # decode: one token per sequence
+
+
+def analyze(records: list[dict]) -> list[dict]:
+    rows = []
+    for r in records:
+        if r.get("status") != "ok" or r["arch"].startswith("hamlet"):
+            if r.get("status") == "skipped":
+                rows.append({"arch": r["arch"], "cell": r["cell"],
+                             "mesh": r["mesh"], "status": "skipped",
+                             "reason": r.get("reason", "")[:60]})
+            continue
+        chips = 1
+        for part in r["mesh"].split("x"):
+            chips *= int(part.split("=")[1])
+        flops = r.get("flops_exact") or r.get("flops", 0.0)
+        t_c = flops / (chips * PEAK_FLOPS)
+        t_m = r.get("traffic_bytes_per_device", 0.0) / HBM_BW
+        coll = r.get("collectives", {})
+        t_x = coll.get("total", 0.0) / ICI_BW
+        terms = {"compute": t_c, "memory": t_m, "collective": t_x}
+        dom = max(terms, key=terms.get)
+        mf = model_flops(r["arch"], r["cell"])
+        bound = max(terms.values())
+        mfu_bound = (mf / (chips * PEAK_FLOPS)) / bound if bound else 0.0
+        rows.append({
+            "arch": r["arch"], "cell": r["cell"], "mesh": r["mesh"],
+            "status": "ok",
+            "t_compute_s": f"{t_c:.3e}", "t_memory_s": f"{t_m:.3e}",
+            "t_collective_s": f"{t_x:.3e}", "bottleneck": dom,
+            "model_flops": f"{mf:.3e}", "hlo_flops": f"{flops:.3e}",
+            "useful_ratio": round(mf / flops, 3) if flops else 0.0,
+            "roofline_fraction": round(min(1.0, mfu_bound), 3),
+            "mem_gb_per_chip": round(
+                (r.get("temp_size_in_bytes", 0) +
+                 r.get("argument_size_in_bytes", 0)) / 2**30, 2),
+        })
+    return rows
+
+
+def load(mesh: str = "single") -> list[dict]:
+    path = os.path.join(ARTIFACT_DIR, f"dryrun_{mesh}.json")
+    with open(path) as f:
+        return json.load(f)
+
+
+def main(quick: bool = True):
+    rows = []
+    for mesh in ("single", "multi"):
+        try:
+            rows += analyze(load(mesh))
+        except FileNotFoundError:
+            rows.append({"mesh": mesh, "status": "missing artifacts — run "
+                         "python -m repro.launch.dryrun first"})
+    return rows
+
+
+if __name__ == "__main__":
+    for row in main(quick=False):
+        print(row)

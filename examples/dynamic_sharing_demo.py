@@ -1,0 +1,72 @@
+"""Dynamic split/merge decisions on a constructed stream (paper Fig. 6).
+
+Four queries share B+; mid-stream, a burst arrives whose events diverge
+under the queries' predicates (event-level snapshots would be needed), so
+the optimizer splits; when predicates align again it merges back.
+
+    PYTHONPATH=src python examples/dynamic_sharing_demo.py
+"""
+
+import numpy as np
+
+from repro.core.engine import HamletRuntime, PaneProcessor
+from repro.core.events import EventBatch, StreamSchema
+from repro.core.optimizer import AlwaysShare, DynamicPolicy
+from repro.core.pattern import EventType, Kleene, Seq
+from repro.core.query import Pred, Query, Workload
+
+schema = StreamSchema(types=("A", "B"), attrs=("v",))
+A, B = EventType("A"), EventType("B")
+
+queries = [Query(f"q{i}", Seq(A, Kleene(B)),
+                 preds={"B": [Pred("v", "<", 100.0 if i < 3 else 2.0)]},
+                 within=60, slide=60)
+           for i in range(4)]
+wl = Workload(schema, queries)
+
+rng = np.random.default_rng(0)
+# burst 1: v < 2 for all events -> all queries agree -> share
+# burst 2: v in [2, 100) -> q3 diverges on every event -> split decision
+# burst 3: v < 2 again -> merge back into one shared graphlet
+types, times, vals = [0], [0], [0.0]
+t = 1
+for lo, hi, n in [(0.0, 2.0, 12), (2.0, 99.0, 12), (0.0, 2.0, 12)]:
+    types.append(0)                   # an A event separates the bursts
+    times.append(t)
+    vals.append(0.0)
+    t += 1
+    for _ in range(n):
+        types.append(1)
+        times.append(t)
+        vals.append(float(rng.uniform(lo, hi)))
+        t += 1
+
+batch = EventBatch(schema, np.array(types), np.array(times),
+                   np.array(vals)[:, None])
+
+decisions = []
+orig = PaneProcessor._process_group
+
+
+def spy(self, g, el, type_id, attrs, b, *a, **k):
+    if schema.types[type_id] == "B":
+        decisions.append((len(g), b))
+    return orig(self, g, el, type_id, attrs, b, *a, **k)
+
+
+PaneProcessor._process_group = spy
+
+for policy in (DynamicPolicy(), AlwaysShare()):
+    decisions.clear()
+    rt = HamletRuntime(wl, policy=policy)
+    res = rt.run(batch, t_end=60)
+    shared = [f"{k}q/b={b}" for k, b in decisions if k > 1]
+    split = [f"{k}q/b={b}" for k, b in decisions if k == 1]
+    print(f"{type(policy).__name__}: snapshots={rt.stats.snapshots_created} "
+          f"shared groups={shared} singletons={len(split)}")
+    print("  q0 count:", res[("q0", 0, 0)]["COUNT(*)"],
+          " q3 count:", res[("q3", 0, 0)]["COUNT(*)"])
+
+PaneProcessor._process_group = orig
+print("\nDynamic shares bursts 1 & 3, splits the divergent burst 2 "
+      "(fewer snapshots at equal results) — the Fig. 6 behaviour.")

@@ -1,0 +1,2 @@
+"""HAMLET core: the paper's contribution — shared online event trend
+aggregation with dynamic sharing decisions — implemented in JAX."""

@@ -1,0 +1,3 @@
+"""Baselines from the paper's evaluation (Table 1): GRETA (non-shared online),
+MCEP-style two-step construction, SHARON-style flattened sequences, plus a
+brute-force trend enumeration oracle used by the tests."""

@@ -1,0 +1,618 @@
+"""HAMLET executor (paper Sec. 3.3 / Algorithm 1) and windowed runtime.
+
+Execution model
+---------------
+Events arrive in panes (gcd of all windows/slides).  Within a pane, events of
+the types relevant to a sharable component are segmented into *bursts*
+(maximal same-type runs — Def. 10); each burst forms a new *graphlet*
+(Def. 6).  Per burst the sharing policy decides which queries share the
+graphlet (Sec. 4).  Shared propagation maintains per-event *coefficient rows*
+over a small local snapshot basis:
+
+    idx 0          gate entry      (start contributions; value = query's gate)
+    idx 1..nu      x_u             graphlet-level snapshot per linear unit
+                                   (Def. 8: value = sum of predecessor-type
+                                   running aggregates)
+    idx nu+1..     z               event-level snapshots for divergent events
+                                   (Def. 9: predicate differences)
+
+The within-burst recurrence (Eq. 1) is solved by the masked prefix-propagation
+primitive (``repro.kernels``) — a unit-lower-triangular solve on the MXU.
+Afterwards the coefficient column-sums are folded, per query, into *state
+functionals* (linear maps over the pane-entry state channels), so the pane
+yields one transfer matrix ``M[q]`` per query.  Sliding-window instances then
+advance with a single [C×C] matvec per pane — overlapping windows share all
+per-event work (the paper's pane sharing, Sec. 3.1).
+
+Trend counts grow like 2^g and overflow fixed-width types for realistic panes
+(the paper is silent on this); the engine computes in float64 by default.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from ..kernels import ops
+from .events import EventBatch, StreamSchema, pane_size_for, split_panes
+from .query import AtomicQuery, Workload
+from .template import QueryTemplate, build_template
+
+__all__ = ["ComponentContext", "PaneProcessor", "HamletRuntime", "RunStats"]
+
+
+# --------------------------------------------------------------------------
+# static per-component context
+# --------------------------------------------------------------------------
+
+
+@dataclass
+class _NegRule:
+    kind: str                 # "leading" | "mid" | "trailing"
+    before_local: np.ndarray  # local type indices whose A-sums are cut (mid)
+
+
+class ComponentContext:
+    """Prepared static info for one sharable component of the workload."""
+
+    def __init__(self, schema: StreamSchema, queries: list[AtomicQuery]):
+        self.schema = schema
+        self.queries = list(queries)
+        self.k = len(queries)
+        self.templates: list[QueryTemplate] = [build_template(schema, q) for q in queries]
+
+        pos: set[int] = set()
+        neg: set[int] = set()
+        for t in self.templates:
+            pos |= set(np.nonzero(t.match)[0].tolist())
+            neg |= set(np.nonzero(t.negative)[0].tolist())
+        self.pos_type_ids = sorted(pos)
+        self.neg_type_ids = sorted(neg)
+        self.relevant_type_ids = sorted(pos | neg)
+        self.local = {e: i for i, e in enumerate(self.pos_type_ids)}
+
+        units: set[tuple] = set()
+        for q in queries:
+            units |= set(u for u in q.units if u[0] in ("count", "sum"))
+        from .snapshot import ChannelLayout
+
+        self.units = tuple(sorted(units, key=lambda u: (u[0] != "count",
+                                                        tuple(str(x) for x in u))))
+        self.layout = ChannelLayout(list(self.units), self.pos_type_ids)
+        self.nu = len(self.units)
+
+        t = len(self.pos_type_ids)
+        self.start_flag = np.zeros((self.k, t), dtype=bool)
+        self.end_flag = np.zeros((self.k, t), dtype=bool)
+        self.match_flag = np.zeros((self.k, t), dtype=bool)
+        self.kleene_flag = np.zeros((self.k, t), dtype=bool)
+        # pt_mask[q, e, e'] over local positive types
+        self.pt_mask = np.zeros((self.k, t, t), dtype=bool)
+        for qi, tmpl in enumerate(self.templates):
+            for e, el in self.local.items():
+                self.start_flag[qi, el] = tmpl.start[e]
+                self.end_flag[qi, el] = tmpl.end[e]
+                self.match_flag[qi, el] = tmpl.match[e]
+                self.kleene_flag[qi, el] = tmpl.kleene[e]
+                for e2, el2 in self.local.items():
+                    self.pt_mask[qi, el, el2] = tmpl.pred_type[e, e2]
+
+        # negation rules: neg type id -> list[(query idx, _NegRule)]
+        self.neg_rules: dict[int, list[tuple[int, _NegRule]]] = {}
+        for qi, q in enumerate(self.queries):
+            for nc in q.info.negatives:
+                nid = schema.type_id(nc.neg_type)
+                if nc.before is None:
+                    rule = _NegRule("leading", np.array([], dtype=int))
+                elif nc.after is None:
+                    rule = _NegRule("trailing", np.array([], dtype=int))
+                else:
+                    bl = np.array(sorted(self.local[schema.type_id(b)]
+                                         for b in nc.before), dtype=int)
+                    rule = _NegRule("mid", bl)
+                self.neg_rules.setdefault(nid, []).append((qi, rule))
+
+        # per-(query,type) predicate/edge-pred lookup
+        self._preds = {}
+        self._edge_preds = {}
+        for qi, q in enumerate(self.queries):
+            for tname, ps in q.preds:
+                self._preds[(qi, schema.type_id(tname))] = ps
+            for tname, eps in q.edge_preds:
+                self._edge_preds[(qi, schema.type_id(tname))] = eps
+
+        # queries that share E+ (Def. 4): kleene flag per local type
+        self.kleene_queries = {
+            el: [qi for qi in range(self.k) if self.kleene_flag[qi, el]]
+            for el in range(t)
+        }
+        # which queries need the min/max side path
+        self.minmax_queries = [qi for qi, q in enumerate(self.queries)
+                               if any(u[0] == "minmax" for u in q.units)]
+
+    def match_vec(self, qi: int, type_id: int, attrs: np.ndarray) -> np.ndarray:
+        ps = self._preds.get((qi, type_id), ())
+        m = np.ones(len(attrs), dtype=bool)
+        for p in ps:
+            m &= p.eval(attrs, self.schema)
+        return m
+
+    def edge_mask(self, qi: int, type_id: int, attrs: np.ndarray) -> np.ndarray | None:
+        """[successor, predecessor]-oriented edge-predicate mask, or None."""
+        eps = self._edge_preds.get((qi, type_id), ())
+        if not eps:
+            return None
+        b = len(attrs)
+        m = np.ones((b, b), dtype=bool)
+        for ep in eps:
+            col = attrs[:, self.schema.attr_col(ep.attr)]
+            m &= ep.eval_pairs(col, col).T
+        return m
+
+
+# --------------------------------------------------------------------------
+# statistics (drives the benefit model and the benchmark metrics)
+# --------------------------------------------------------------------------
+
+
+@dataclass
+class RunStats:
+    events: int = 0
+    bursts: int = 0
+    shared_bursts: int = 0
+    split_bursts: int = 0
+    graphlets: int = 0
+    shared_graphlets: int = 0
+    snapshots_created: int = 0
+    snapshots_propagated: int = 0
+    propagate_cells: int = 0      # total solved cells (rows x basis cols)
+    decisions: int = 0
+    panes: int = 0
+    windows_emitted: int = 0
+
+    def merge(self, o: "RunStats") -> None:
+        for f in self.__dataclass_fields__:
+            setattr(self, f, getattr(self, f) + getattr(o, f))
+
+
+# --------------------------------------------------------------------------
+# pane processor (Algorithm 1 over one pane, producing transfer matrices)
+# --------------------------------------------------------------------------
+
+
+class PaneProcessor:
+    def __init__(self, ctx: ComponentContext, policy, backend: str = "np",
+                 max_local_basis: int = 512):
+        self.ctx = ctx
+        self.policy = policy
+        self.backend = backend
+        self.max_local_basis = max_local_basis
+
+    # -- burst segmentation (Def. 10) --
+
+    @staticmethod
+    def _segment(type_ids: np.ndarray) -> list[tuple[int, slice]]:
+        if len(type_ids) == 0:
+            return []
+        cut = np.nonzero(np.diff(type_ids))[0] + 1
+        bounds = np.concatenate([[0], cut, [len(type_ids)]])
+        return [(int(type_ids[bounds[i]]), slice(int(bounds[i]), int(bounds[i + 1])))
+                for i in range(len(bounds) - 1)]
+
+    # -- main entry --
+
+    def process(self, pane: EventBatch, stats: RunStats) -> np.ndarray:
+        """Process one pane; returns per-query transfer matrices M [k, C, C]."""
+        ctx = self.ctx
+        C = ctx.layout.size
+        k = ctx.k
+        nu = ctx.nu
+        t = len(ctx.pos_type_ids)
+
+        # state functionals over pane-entry channels
+        arow = np.zeros((k, nu, t, C))
+        for qi in range(k):
+            for ui, u in enumerate(ctx.units):
+                for el in range(t):
+                    arow[qi, ui, el, ctx.layout.a_idx(u, ctx.pos_type_ids[el])] = 1.0
+        rrow = np.zeros((k, nu, C))
+        for qi in range(k):
+            for ui, u in enumerate(ctx.units):
+                rrow[qi, ui, ctx.layout.rp_idx(u)] = 1.0
+        gaterow = np.zeros((k, C))
+        gaterow[:, ctx.layout.GATE] = 1.0
+
+        keep = np.isin(pane.type_id, ctx.relevant_type_ids)
+        ev = pane.select(np.nonzero(keep)[0])
+        stats.events += len(ev)
+        stats.panes += 1
+
+        for type_id, sl in self._segment(ev.type_id):
+            attrs = ev.attrs[sl]
+            b = sl.stop - sl.start
+            stats.bursts += 1
+
+            # negative-type handling (Sec. 5): applies per query with a rule
+            for qi, rule in ctx.neg_rules.get(type_id, []):
+                if not ctx.match_vec(qi, type_id, attrs).any():
+                    continue
+                if rule.kind == "leading":
+                    gaterow[qi, :] = 0.0
+                elif rule.kind == "trailing":
+                    rrow[qi, :, :] = 0.0
+                else:
+                    arow[qi, :, rule.before_local, :] = 0.0
+
+            if type_id not in ctx.local:
+                continue
+            el = ctx.local[type_id]
+            q_pos = [qi for qi in range(k) if ctx.match_flag[qi, el]]
+            if not q_pos:
+                continue
+
+            mvec = np.stack([ctx.match_vec(qi, type_id, attrs) for qi in q_pos])
+            epm = [ctx.edge_mask(qi, type_id, attrs) for qi in q_pos]
+
+            # sharing decision (Sec. 4): candidates are queries with E+ (Def. 4)
+            kle = [qi for qi in q_pos if ctx.kleene_flag[qi, el]]
+            groups: list[list[int]] = []
+            if len(kle) >= 2:
+                d_rows = self._divergence_rows(q_pos, kle, el, mvec, epm)
+                shared_sets = self.policy.decide(
+                    ctx=ctx, el=el, candidates=kle, d_rows=d_rows, b=b,
+                    n=stats.events, stats=stats)
+                in_shared = set(qq for s in shared_sets for qq in s)
+                groups.extend([s for s in shared_sets if len(s) >= 2])
+                groups.extend([[qi] for s in shared_sets if len(s) == 1 for qi in s])
+                groups.extend([[qi] for qi in kle if qi not in in_shared])
+            else:
+                groups.extend([[qi] for qi in kle])
+            groups.extend([[qi] for qi in q_pos if qi not in kle])
+
+            for g in groups:
+                if len(g) >= 2:
+                    stats.shared_bursts += 1
+                    stats.shared_graphlets += 1
+                stats.graphlets += 1
+                self._process_group(
+                    g, el, type_id, attrs, b,
+                    mvec[[q_pos.index(qi) for qi in g]],
+                    [epm[q_pos.index(qi)] for qi in g],
+                    arow, rrow, gaterow, stats)
+
+        # assemble transfer matrices
+        M = np.zeros((k, C, C))
+        for qi in range(k):
+            M[qi, ctx.layout.CONST, ctx.layout.CONST] = 1.0
+            M[qi, ctx.layout.GATE, :] = gaterow[qi]
+            for ui, u in enumerate(ctx.units):
+                for eli in range(t):
+                    M[qi, ctx.layout.a_idx(u, ctx.pos_type_ids[eli]), :] = arow[qi, ui, eli]
+                M[qi, ctx.layout.rp_idx(u), :] = rrow[qi, ui]
+        return M
+
+    # -- divergence detection (per-event signature differences) --
+
+    def _divergence_rows(self, q_pos, kle, el, mvec, epm) -> dict[int, np.ndarray]:
+        """Per-candidate boolean rows: events where q's signature differs from
+        the reference (first candidate).  Drives Thms 4.1/4.2."""
+        ctx = self.ctx
+        ref = kle[0]
+        ri = q_pos.index(ref)
+        b = mvec.shape[1]
+        ref_edge = epm[ri]
+        d: dict[int, np.ndarray] = {}
+        for qi in kle:
+            i = q_pos.index(qi)
+            diff = mvec[i] != mvec[ri]
+            if ctx.start_flag[qi, el] != ctx.start_flag[ref, el]:
+                diff = diff | mvec[i] | mvec[ri]
+            a, bq = ref_edge, epm[i]
+            if (a is None) != (bq is None) or (
+                    a is not None and bq is not None and not np.array_equal(a, bq)):
+                am = np.ones((b, b), dtype=bool) if a is None else a
+                bm = np.ones((b, b), dtype=bool) if bq is None else bq
+                diff = diff | np.any(np.tril(am != bm, k=-1), axis=1)
+            d[qi] = diff
+        return d
+
+    # -- group (graphlet) processing --
+
+    def _process_group(self, g, el, type_id, attrs, b, mvec, epm,
+                       arow, rrow, gaterow, stats: RunStats) -> None:
+        ctx = self.ctx
+        C = ctx.layout.size
+        nu = ctx.nu
+        shared = len(g) >= 2
+        kleene = all(ctx.kleene_flag[qi, el] for qi in g)
+        assert shared is False or kleene, "shared groups must be Kleene (Def. 4)"
+
+        # per-event divergence flags within this group
+        if shared:
+            div = np.zeros(b, dtype=bool)
+            m0 = mvec[0]
+            e0 = epm[0]
+            s0 = ctx.start_flag[g[0], el]
+            for i in range(1, len(g)):
+                div |= mvec[i] != m0
+                if ctx.start_flag[g[i], el] != s0:
+                    div |= mvec[i] | m0
+                a, bq = e0, epm[i]
+                if (a is None) != (bq is None) or (
+                        a is not None and bq is not None and not np.array_equal(a, bq)):
+                    am = np.ones((b, b), dtype=bool) if a is None else a
+                    bm = np.ones((b, b), dtype=bool) if bq is None else bq
+                    div |= np.any(np.tril(am != bm, k=-1), axis=1)
+        else:
+            div = np.zeros(b, dtype=bool)
+
+        d = int(div.sum())
+        n_z = d * nu
+        B_local = 1 + nu + n_z
+        if B_local > self.max_local_basis and shared:
+            # basis would blow up: force split (the optimizer should normally
+            # have prevented this; AlwaysShare can reach it)
+            for qi in g:
+                self._process_group([qi], el, type_id, attrs, b,
+                                    mvec[[g.index(qi)]], [epm[g.index(qi)]],
+                                    arow, rrow, gaterow, stats)
+            stats.split_bursts += 1
+            return
+
+        live = mvec.all(axis=0) & ~div
+        dead = ~mvec.any(axis=0) & ~div
+
+        # local basis: 0 = gate, 1..nu = x_u, nu+1.. = z snapshots
+        W = np.zeros((len(g), B_local, C))
+        for gi, qi in enumerate(g):
+            W[gi, 0] = gaterow[qi]
+            for ui in range(nu):
+                W[gi, 1 + ui] = ctx.pt_mask[qi, el] @ arow[qi, ui]
+        z_ids = {}
+        nxt = 1 + nu
+        div_rows = np.nonzero(div)[0]
+        for i in div_rows:
+            for ui in range(nu):
+                z_ids[(int(i), ui)] = nxt
+                nxt += 1
+        if shared:
+            # snapshots are a *shared-execution* artifact (Defs. 8/9); the
+            # non-shared path keeps plain per-query aggregates
+            stats.snapshots_created += nu + n_z
+            stats.snapshots_propagated += B_local
+
+        # common in-burst adjacency
+        if kleene:
+            em = np.tril(np.ones((b, b)), k=-1)
+            if epm[0] is not None:
+                em *= np.tril(epm[0], k=-1)
+        else:
+            em = np.zeros((b, b))
+        em[div | dead, :] = 0.0
+        if not shared:
+            em[~mvec[0], :] = 0.0
+
+        start_q0 = ctx.start_flag[g[0], el]
+
+        # dense fast path: no edge predicates and no divergent/dead rows
+        # means the in-burst adjacency is exactly strictly-lower all-ones,
+        # with the O(b) closed form (beyond-paper; see kernels/ops.py)
+        dense = (kleene and epm[0] is None and d == 0 and not dead.any()
+                 and b <= 512)
+
+        def solve(base):
+            if dense:
+                return np.asarray(ops.propagate_dense(base,
+                                                      backend=self.backend))
+            return np.asarray(ops.propagate(base, em, backend=self.backend))
+
+        # count-unit propagation
+        base_c = np.zeros((b, B_local))
+        base_c[live, 1 + 0] = 1.0                 # x_count entry
+        if start_q0:
+            base_c[live, 0] = 1.0                 # gate entry (start contribution)
+        for i in div_rows:
+            base_c[i, z_ids[(int(i), 0)]] = 1.0
+        ccoef = solve(base_c)
+        stats.propagate_cells += b * B_local
+
+        # sum-unit propagations (share the mask; injection includes attr*count)
+        scoefs = {}
+        for ui, u in enumerate(ctx.units):
+            if u[0] != "sum":
+                continue
+            _, e_name, attr = u
+            base_s = np.zeros((b, B_local))
+            base_s[live, 1 + ui] = 1.0
+            if ctx.schema.type_id(e_name) == type_id:
+                vals = (np.ones(b) if attr is None
+                        else attrs[:, ctx.schema.attr_col(attr)])
+                base_s[live] += vals[live, None] * ccoef[live]
+            for i in div_rows:
+                base_s[i, :] = 0.0
+                base_s[i, z_ids[(int(i), ui)]] = 1.0
+            scoefs[ui] = solve(base_s)
+            stats.propagate_cells += b * B_local
+
+        # event-level snapshot value functionals (Def. 9), ascending order.
+        # P[u] caches coef_u @ W[gi]; every snapshot fill is a rank-1 update
+        # so *live* rows that reference earlier z columns stay current.
+        if d:
+            coefs = {0: ccoef, **scoefs}
+            lower = np.tril(np.ones((b, b), dtype=bool), k=-1)
+            for gi, qi in enumerate(g):
+                P = {u: coefs[u] @ W[gi] for u in coefs}
+
+                def fill(zcol: int, f: np.ndarray) -> None:
+                    W[gi, zcol] = f
+                    for u in coefs:
+                        col = coefs[u][:, zcol]
+                        if col.any():
+                            P[u] += np.outer(col, f)
+
+                adj_q = lower.copy()
+                if epm[gi] is not None:
+                    adj_q &= epm[gi]
+                adj_q &= mvec[gi][None, :]
+                startq = 1.0 if ctx.start_flag[qi, el] else 0.0
+                for i in div_rows:
+                    i = int(i)
+                    row = adj_q[i].astype(float)
+                    if mvec[gi][i]:
+                        f_c = startq * gaterow[qi] + W[gi, 1 + 0] + row @ P[0]
+                    else:
+                        f_c = np.zeros(C)
+                    fill(z_ids[(i, 0)], f_c)
+                    for ui, u in enumerate(ctx.units):
+                        if u[0] != "sum":
+                            continue
+                        _, e_name, attr = u
+                        if mvec[gi][i]:
+                            f_s = W[gi, 1 + ui] + row @ P[ui]
+                            if ctx.schema.type_id(e_name) == type_id:
+                                v = 1.0 if attr is None else attrs[i, ctx.schema.attr_col(attr)]
+                                f_s = f_s + v * f_c
+                        else:
+                            f_s = np.zeros(C)
+                        fill(z_ids[(i, ui)], f_s)
+
+        # fold column sums into state functionals
+        col_c = ccoef.sum(axis=0)
+        for gi, qi in enumerate(g):
+            upd_c = col_c @ W[gi]
+            arow[qi, 0, el] += upd_c
+            if ctx.end_flag[qi, el]:
+                rrow[qi, 0] += upd_c
+            for ui in scoefs:
+                upd_s = scoefs[ui].sum(axis=0) @ W[gi]
+                arow[qi, ui, el] += upd_s
+                if ctx.end_flag[qi, el]:
+                    rrow[qi, ui] += upd_s
+
+
+# --------------------------------------------------------------------------
+# windowed runtime: panes -> sliding windows -> per-query results
+# --------------------------------------------------------------------------
+
+
+@dataclass
+class _Instance:
+    start: int
+    u: np.ndarray
+    events: list = field(default_factory=list)  # retained only for min/max
+
+
+class HamletRuntime:
+    """Evaluates a workload over a stream, pane by pane (Sec. 2.2 / 3.1)."""
+
+    def __init__(self, workload: Workload, policy=None, backend: str = "np"):
+        from .optimizer import DynamicPolicy
+
+        self.workload = workload
+        self.policy = policy if policy is not None else DynamicPolicy()
+        self.backend = backend
+        self.pane = pane_size_for(workload.windows)
+        self.components = workload.sharable_components()
+        self.ctxs = [ComponentContext(workload.schema,
+                                      [workload.atomic[i] for i in comp])
+                     for comp in self.components]
+        self.stats = RunStats()
+
+    def run(self, batch: EventBatch, t_end: int | None = None) -> dict:
+        """Process a stream; returns {(query, group, window_start): {agg: val}}.
+
+        Results for user queries with top-level Or/And are combined per
+        Sec. 5.  Windows are aligned to multiples of each query's slide,
+        starting at 0; only windows fully contained in [0, t_end) emit.
+        """
+        if t_end is None:
+            t_end = int(batch.time.max()) + 1 if len(batch) else 0
+        t_end = ((t_end + self.pane - 1) // self.pane) * self.pane
+
+        atomic_results: dict[tuple[int, int, int], dict] = {}
+        for group_key, gbatch in batch.partition_by_group().items():
+            self._run_partition(gbatch, t_end, group_key, atomic_results)
+
+        return self._combine(atomic_results)
+
+    # -- per group partition --
+
+    def _run_partition(self, batch: EventBatch, t_end: int, group_key: int,
+                       out: dict) -> None:
+        for comp, ctx in zip(self.components, self.ctxs):
+            proc = PaneProcessor(ctx, self.policy, backend=self.backend)
+            insts: list[dict[int, _Instance]] = [dict() for _ in comp]
+            for t0, pane_ev in split_panes(batch, self.pane, 0, t_end):
+                M = proc.process(pane_ev, self.stats)
+                for ci, aqi in enumerate(comp):
+                    q = self.workload.atomic[aqi]
+                    # open new instances whose window starts at this pane
+                    if t0 % q.slide == 0 and t0 + q.within <= t_end:
+                        insts[ci][t0] = _Instance(t0, ctx.layout.fresh_state())
+                    needs_minmax = ci in ctx.minmax_queries
+                    for w0, inst in list(insts[ci].items()):
+                        with np.errstate(over="ignore", invalid="ignore"):
+                            inst.u = M[ci] @ inst.u
+                        if needs_minmax and len(pane_ev):
+                            inst.events.append(pane_ev)
+                        if w0 + q.within == t0 + self.pane:
+                            out[(aqi, group_key, w0)] = self._emit(
+                                ctx, ci, q, inst, group_key)
+                            del insts[ci][w0]
+                            self.stats.windows_emitted += 1
+
+    def _emit(self, ctx: ComponentContext, ci: int, q: AtomicQuery,
+              inst: _Instance, group_key: int) -> dict:
+        from .query import Agg, AggKind
+
+        u = inst.u
+        vals: dict[str, float] = {}
+        for agg in q.aggs:
+            if agg.kind == AggKind.COUNT_STAR:
+                vals[repr(agg)] = float(u[ctx.layout.rp_idx(("count",))])
+            elif agg.kind == AggKind.COUNT_TYPE:
+                vals[repr(agg)] = float(u[ctx.layout.rp_idx(("sum", agg.type_name, None))])
+            elif agg.kind == AggKind.SUM:
+                vals[repr(agg)] = float(
+                    u[ctx.layout.rp_idx(("sum", agg.type_name, agg.attr))])
+            elif agg.kind == AggKind.AVG:
+                s = u[ctx.layout.rp_idx(("sum", agg.type_name, agg.attr))]
+                c = u[ctx.layout.rp_idx(("sum", agg.type_name, None))]
+                vals[repr(agg)] = float(s / c) if c else float("nan")
+            elif agg.kind in (AggKind.MIN, AggKind.MAX):
+                from .minmax import window_minmax
+
+                evs = (EventBatch.concat(inst.events) if inst.events
+                       else None)
+                vals[repr(agg)] = window_minmax(
+                    self.workload.schema, q, evs, agg,
+                    run_type_ids=ctx.relevant_type_ids, pane=self.pane)
+        return vals
+
+    # -- Or/And combination (Sec. 5) --
+
+    def _combine(self, atomic_results: dict) -> dict:
+        return combine_results(self.workload, atomic_results)
+
+
+def combine_results(workload: Workload, atomic_results: dict) -> dict:
+    """Combine atomic sub-query results into user-query results (Sec. 5)."""
+    out: dict = {}
+    for qname, idxs, comb in workload.combines:
+        if comb is None:
+            aqi = idxs[0]
+            for (ai, gk, w0), vals in atomic_results.items():
+                if ai == aqi:
+                    out[(qname, gk, w0)] = vals
+            continue
+        left, right = idxs
+        keys = set((gk, w0) for (ai, gk, w0) in atomic_results if ai == left)
+        keys |= set((gk, w0) for (ai, gk, w0) in atomic_results if ai == right)
+        for gk, w0 in keys:
+            lv = atomic_results.get((left, gk, w0), {})
+            rv = atomic_results.get((right, gk, w0), {})
+            c1 = lv.get("COUNT(*)", 0.0)
+            c2 = rv.get("COUNT(*)", 0.0)
+            out[(qname, gk, w0)] = {"COUNT(*)": comb.combine_counts(c1, c2)}
+    return out

@@ -1,0 +1,176 @@
+"""Dynamic sharing optimizer (paper Sec. 4).
+
+Per burst, the policy picks which subset of the candidate queries (those with
+a shareable ``E+``, Def. 4) share the new graphlet:
+
+* **Snapshot-driven pruning** (Thm. 4.1): queries that introduce no event-level
+  snapshots for this burst always share.
+* **Benefit-driven pruning** (Thm. 4.2): each snapshot-introducing query q is
+  classified by comparing ``Shared(Q)`` with ``Shared(Q\\{q}) + NonShared(q)``
+  — O(m) plan evaluations instead of the exponential plan space (Fig. 7).
+* The surviving set is shared only if its benefit (Def. 11/12) is positive.
+
+``AlwaysShare`` / ``NeverShare`` realise the paper's static baselines
+(Figs. 12-13); ``FlopPolicy`` is the beyond-paper variant whose cost model
+counts the actual dense-algebra FLOPs of this implementation.
+
+``d_rows`` maps each candidate query to a boolean per-event vector marking
+the burst events whose signature (match status / start status / edge-predicate
+row) differs from the reference query's — i.e. the events that would become
+event-level snapshots (Def. 9) if that query shares.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from . import benefit as B
+
+__all__ = ["DynamicPolicy", "AlwaysShare", "NeverShare", "FlopPolicy"]
+
+
+def _union_count(d_rows: dict[int, np.ndarray], S) -> int:
+    rows = [d_rows[q] for q in S if q in d_rows]
+    if not rows:
+        return 0
+    return int(np.any(np.stack(rows), axis=0).sum())
+
+
+class _PolicyBase:
+    def decide(self, *, ctx, el, candidates, d_rows, b, n, stats) -> list[list[int]]:
+        raise NotImplementedError
+
+
+class AlwaysShare(_PolicyBase):
+    """Static plan: share every shareable burst (paper's static optimizer)."""
+
+    def decide(self, *, ctx, el, candidates, d_rows, b, n, stats):
+        stats.decisions += 1
+        return [list(candidates)]
+
+
+class NeverShare(_PolicyBase):
+    """Non-shared execution for every burst (GRETA-equivalent plan)."""
+
+    def decide(self, *, ctx, el, candidates, d_rows, b, n, stats):
+        stats.decisions += 1
+        return [[q] for q in candidates]
+
+
+class DynamicPolicy(_PolicyBase):
+    """The HAMLET optimizer (Sec. 4.2/4.3) with the Def. 11 benefit model.
+
+    The Thm 4.1/4.2 classification is exactly optimal under the paper's
+    assumption that removing a query leaves the snapshot counts unchanged.
+    With *partially overlapping* per-query divergence sets that assumption
+    breaks (choosing the shared subset becomes set-cover-like), so we refine
+    the classification with a single-move local search (beyond-paper; still
+    O(m^2) plan evaluations per burst, m = snapshot-introducing queries)."""
+
+    def __init__(self, model: str = "v1", local_search: bool = True):
+        self.model = model
+        self.local_search = local_search
+
+    def _costs(self, *, s_new: int, b: int, n: int, k: int, g: int, t: int):
+        s_c = 1 + s_new          # graphlet snapshot x + event-level snapshots
+        s_p = 1 + s_new
+        if self.model == "v1":
+            return B.benefit_v1(b=b, n=n, s_p=s_p, s_c=s_c, k=k, g=g, t=t)
+        return B.benefit_v2(b=b, n=n, s_p=s_p, s_c=s_c, k=k, g=g, p=max(1, t // 2))
+
+    def decide(self, *, ctx, el, candidates, d_rows, b, n, stats):
+        stats.decisions += 1
+        n = max(n, b)
+        t = max(1, ctx.layout.t)
+        g = b
+
+        d_q = {q: int(d_rows[q].sum()) for q in candidates}
+        free = [q for q in candidates if d_q[q] == 0]   # Thm 4.1: share for free
+        snap = [q for q in candidates if d_q[q] > 0]
+
+        shared = list(free)
+        Q = list(candidates)
+        full = self._costs(s_new=_union_count(d_rows, Q), b=b, n=n, k=len(Q),
+                           g=g, t=t)
+        for q in snap:                                   # Thm 4.2 classification
+            without_q = [x for x in Q if x != q]
+            alt = (self._costs(s_new=_union_count(d_rows, without_q), b=b, n=n,
+                               k=len(without_q), g=g, t=t).shared
+                   + B.nonshared_cost_v1(b, n, 1))
+            if full.shared <= alt:
+                shared.append(q)
+
+        if self.local_search:
+            shared = self._refine(shared, candidates, d_rows, b, n, g, t)
+
+        if len(shared) < 2:
+            return [[q] for q in candidates]
+        final = self._costs(s_new=_union_count(d_rows, shared), b=b, n=n,
+                            k=len(shared), g=g, t=t)
+        if final.benefit <= 0:
+            stats.split_bursts += 1
+            return [[q] for q in candidates]
+        return [shared] + [[q] for q in candidates if q not in shared]
+
+    def _plan_cost(self, S, candidates, d_rows, b, n, g, t) -> float:
+        rest = len(candidates) - len(S)
+        cost = B.nonshared_cost_v1(b, n, rest) if rest else 0.0
+        if len(S) >= 2:
+            cost += self._costs(s_new=_union_count(d_rows, S), b=b, n=n,
+                                k=len(S), g=g, t=t).shared
+        elif len(S) == 1:
+            cost += B.nonshared_cost_v1(b, n, 1)
+        return cost
+
+    def _refine(self, shared, candidates, d_rows, b, n, g, t) -> list[int]:
+        """Multi-start single-move local search over shared-set membership."""
+
+        def descend(S: set) -> tuple[set, float]:
+            best = self._plan_cost(S, candidates, d_rows, b, n, g, t)
+            improved = True
+            while improved:
+                improved = False
+                for q in list(candidates):
+                    S2 = S ^ {q}
+                    if len(S2) == 1:
+                        continue
+                    c2 = self._plan_cost(S2, candidates, d_rows, b, n, g, t)
+                    if c2 < best - 1e-12:
+                        S, best, improved = S2, c2, True
+            return S, best
+
+        starts = [set(shared), set(candidates)]
+        # cheapest pair as a growth seed (single moves cannot leave |S| < 2)
+        if len(candidates) >= 2:
+            pair = min(
+                ((a, c) for i, a in enumerate(candidates)
+                 for c in candidates[i + 1:]),
+                key=lambda p: self._plan_cost(set(p), candidates, d_rows,
+                                              b, n, g, t))
+            starts.append(set(pair))
+        best_S, best_c = None, float("inf")
+        for s0 in starts:
+            S, c = descend(s0)
+            if c < best_c:
+                best_S, best_c = S, c
+        return sorted(best_S)
+
+
+class FlopPolicy(_PolicyBase):
+    """Beyond-paper cost model: counts the dense-algebra FLOPs this engine
+    actually executes.  Shared: one [b x B_local] solve plus per-query
+    snapshot resolution; non-shared: k solves of width ~nu."""
+
+    def decide(self, *, ctx, el, candidates, d_rows, b, n, stats):
+        stats.decisions += 1
+        k = len(candidates)
+        nu = ctx.nu
+        C = ctx.layout.size
+        u = _union_count(d_rows, candidates)
+        B_local = 1 + nu + u * nu
+        shared = b * b * B_local + u * k * (b * B_local + B_local * C) + k * B_local * C
+        nonshared = k * (b * b * (1 + nu) + (1 + nu) * C)
+        if k >= 2 and shared < nonshared:
+            return [list(candidates)]
+        stats.split_bursts += 1 if k >= 2 else 0
+        return [[q] for q in candidates]

@@ -1,0 +1,206 @@
+"""Streaming service wrapper: out-of-order arrival handling and dynamic
+workload changes.
+
+The paper assumes in-order arrival and a static workload, citing standard
+techniques for both relaxations (Sec. 2.1 [11,26,27,41] and [24,48]).  This
+module supplies those substrate pieces:
+
+* ``OutOfOrderBuffer`` — bounded-lateness reordering: events are released in
+  timestamp order once the watermark (max seen time − lateness) passes them;
+  stragglers inside the bound merge correctly, later ones are counted and
+  dropped.
+* ``HamletService`` — incremental execution in *epochs* (the LCM of all
+  windows/slides).  Because sliding windows span any boundary, each epoch is
+  evaluated over a replayed history tail of ``max(within)`` and only the
+  windows **closing** inside the epoch are emitted — bounded re-processing
+  (overlap factor ≤ 1 + max(within)/epoch), exact results.  Query add/remove
+  takes effect at the next epoch boundary (plan migration at epoch
+  granularity, after [48]).
+"""
+
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+from .engine import HamletRuntime, RunStats
+from .events import EventBatch
+from .query import Query, Workload
+
+__all__ = ["OutOfOrderBuffer", "HamletService"]
+
+
+class OutOfOrderBuffer:
+    """Bounded-lateness reordering buffer (accepts arbitrary arrival order)."""
+
+    def __init__(self, schema, lateness: int):
+        self.schema = schema
+        self.lateness = int(lateness)
+        self._held: list[tuple[int, int, int, np.ndarray, int]] = []
+        self._arrival = 0
+        self._released_upto = -(1 << 62)
+        self.dropped_late = 0
+
+    def feed_arrays(self, type_id, time, attrs=None, group=None) -> EventBatch:
+        n = len(type_id)
+        attrs = (np.zeros((n, max(1, len(self.schema.attrs))))
+                 if attrs is None else np.asarray(attrs))
+        group = np.zeros(n, np.int64) if group is None else np.asarray(group)
+        for i in range(n):
+            t = int(time[i])
+            if t < self._released_upto:
+                self.dropped_late += 1
+                continue
+            self._held.append((t, self._arrival, int(type_id[i]),
+                               attrs[i].copy(), int(group[i])))
+            self._arrival += 1
+        if not self._held:
+            return self._empty()
+        watermark = max(t for t, *_ in self._held) - self.lateness
+        return self._release(watermark)
+
+    def feed(self, batch: EventBatch) -> EventBatch:
+        return self.feed_arrays(batch.type_id, batch.time, batch.attrs,
+                                batch.group)
+
+    def flush(self) -> EventBatch:
+        return self._release(1 << 62)
+
+    def _release(self, watermark: int) -> EventBatch:
+        out = sorted([e for e in self._held if e[0] <= watermark])
+        self._held = [e for e in self._held if e[0] > watermark]
+        if not out:
+            return self._empty()
+        # events with time == the last released tick may still arrive (e.g.
+        # duplicate timestamps split across feeds); only strictly older
+        # arrivals are late
+        self._released_upto = max(self._released_upto, out[-1][0])
+        return EventBatch(
+            self.schema,
+            np.array([e[2] for e in out], np.int32),
+            np.array([e[0] for e in out], np.int64),
+            np.stack([e[3] for e in out]),
+            np.array([e[4] for e in out], np.int64),
+        )
+
+    def _empty(self) -> EventBatch:
+        return EventBatch(self.schema, np.array([], np.int32),
+                          np.array([], np.int64), None)
+
+
+class HamletService:
+    """Incremental HAMLET with dynamic workload changes at epoch boundaries."""
+
+    def __init__(self, schema, queries: list[Query], policy=None,
+                 lateness: int = 0, sharable_mode: str = "units"):
+        self.schema = schema
+        self.sharable_mode = sharable_mode
+        self.policy = policy
+        self._queries: dict[str, Query] = {q.name: q for q in queries}
+        self._pending_add: dict[str, Query] = {}
+        self._pending_remove: set[str] = set()
+        self._ooo = OutOfOrderBuffer(schema, lateness)
+        self._events: EventBatch | None = None   # history tail
+        self._t_done = 0                         # epochs emitted up to here
+        self.results: dict = {}
+        self.stats = RunStats()
+        self._refresh_derived()
+
+    def _refresh_derived(self) -> None:
+        self._epoch_len = 1
+        self._max_within = 1
+        for q in self._queries.values():
+            self._epoch_len = math.lcm(self._epoch_len, q.within, q.slide)
+            self._max_within = max(self._max_within, q.within)
+
+    # -- dynamic workload (takes effect at the next epoch boundary) --
+
+    def add_query(self, q: Query) -> None:
+        self._pending_add[q.name] = q
+
+    def remove_query(self, name: str) -> None:
+        self._pending_remove.add(name)
+
+    def _apply_pending(self) -> None:
+        if not (self._pending_add or self._pending_remove):
+            return
+        for name in self._pending_remove:
+            self._queries.pop(name, None)
+            self._pending_add.pop(name, None)
+        for name, q in self._pending_add.items():
+            self._queries[name] = q
+        self._pending_add.clear()
+        self._pending_remove.clear()
+        self._refresh_derived()
+
+    # -- streaming --
+
+    def feed(self, batch: EventBatch) -> dict:
+        ready = self._ooo.feed(batch)
+        self._append(ready)
+        return self._drain(final=False)
+
+    def close(self) -> dict:
+        self._append(self._ooo.flush())
+        return self._drain(final=True)
+
+    def _append(self, batch: EventBatch) -> None:
+        if not len(batch):
+            return
+        self._events = (batch if self._events is None
+                        else EventBatch.concat([self._events, batch]))
+
+    def _drain(self, final: bool) -> dict:
+        new: dict = {}
+        while self._events is not None and len(self._events):
+            horizon = int(self._events.time.max())
+            end = self._t_done + self._epoch_len
+            if horizon < end and not final:
+                break
+            if horizon < self._t_done and final:
+                break
+            new.update(self._run_epoch(end))
+            if final and (self._events is None or
+                          not len(self._events) or
+                          int(self._events.time.max()) < self._t_done):
+                break
+        return new
+
+    def _run_epoch(self, end: int) -> dict:
+        L = self._epoch_len
+        # replay shift: a multiple of L (window starts stay slide-aligned)
+        k_hist = math.ceil(self._max_within / L)
+        shift = max(0, (end // L - 1 - k_hist)) * L
+
+        ev = self._events
+        sel = np.nonzero((ev.time >= shift) & (ev.time < end))[0]
+        sub = ev.select(sel)
+        shifted = EventBatch(self.schema, sub.type_id, sub.time - shift,
+                             sub.attrs, sub.group)
+
+        wl = Workload(self.schema, list(self._queries.values()),
+                      sharable_mode=self.sharable_mode)
+        rt = (HamletRuntime(wl, policy=self.policy) if self.policy
+              else HamletRuntime(wl))
+        res = rt.run(shifted, t_end=end - shift)
+        self.stats.merge(rt.stats)
+
+        # emit only windows that close inside this epoch
+        out: dict = {}
+        for (qn, gk, w0), vals in res.items():
+            q = self._queries.get(qn)
+            if q is None:
+                continue
+            close_t = w0 + shift + q.within
+            if self._t_done < close_t <= end:
+                out[(qn, gk, w0 + shift)] = vals
+        self.results.update(out)
+
+        # retire history older than any future window needs
+        keep_from = end - self._max_within
+        keep = np.nonzero(ev.time >= keep_from)[0]
+        self._events = ev.select(keep) if len(keep) else None
+        self._t_done = end
+        self._apply_pending()
+        return out

@@ -1,0 +1,5 @@
+"""Distribution substrate: sharding rules (DP/TP/EP/SP/CP + pod axis),
+sharded elastic checkpointing, fault-tolerant training, error-feedback
+gradient compression, and a GPipe-style pipeline option."""
+
+from .sharding import param_pspecs, batch_pspecs, cache_pspecs  # noqa: F401

@@ -1,0 +1,208 @@
+"""Sharding rules: parameter/activation PartitionSpecs for the production
+meshes.
+
+Logical placement:
+  * TP ("model"): attention heads / head_dim, FFN hidden, vocab, experts.
+  * FSDP ("data"): the other matrix dimension of every large parameter.
+  * DP: batch over ("pod", "data") — pods replicate parameters, so the
+    gradient all-reduce crossing the (slow) pod links touches each parameter
+    once, and is the hook for gradient compression.
+  * SP/CP: when the per-cell batch is smaller than the data axis (long_500k,
+    batch=1), activations and KV caches shard their *sequence* axis over
+    "data" instead; GSPMD inserts the split-K softmax collectives.
+
+Every rule is divisibility-checked against the actual dimension; a
+non-divisible axis falls back to replication for that dim (reported by
+``explain``), so lowering never fails on an odd head count.
+"""
+
+from __future__ import annotations
+
+import re
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["param_pspecs", "batch_pspecs", "cache_pspecs", "shardings_for",
+           "explain"]
+
+# (path regex, spec template) — templates name logical axes per dim;
+# first match wins.  "tp" -> model, "fsdp" -> data, None -> replicate.
+_PARAM_RULES: list[tuple[str, tuple]] = [
+    (r"embed$", ("tp", "fsdp")),
+    (r"lm_head$", ("fsdp", "tp")),
+    (r"(final_norm|ln\w*|.*norm|post_ln\d)$", (None,)),
+    (r"attn/w[qkv]$", ("fsdp", "tp")),
+    (r"attn/wo$", ("tp", "fsdp")),
+    (r"(attn|cross)/[qk]_norm$", (None,)),
+    (r"cross/w[qkv]$", ("fsdp", "tp")),
+    (r"cross/wo$", ("tp", "fsdp")),
+    (r"mlp/w_(gate|up)$", ("fsdp", "tp")),
+    (r"mlp/w_down$", ("tp", "fsdp")),
+    (r"moe/router$", ("fsdp", None)),
+    (r"moe/w_(gate|up)$", ("tp", "fsdp", None)),   # experts over model (EP)
+    (r"moe/w_down$", ("tp", None, "fsdp")),
+    (r"moe/shared/w_(gate|up)$", ("fsdp", "tp")),
+    (r"moe/shared/w_down$", ("tp", "fsdp")),
+    (r"mamba/in_proj$", ("fsdp", "tp")),
+    (r"mamba/out_proj$", ("tp", "fsdp")),
+    (r"mamba/conv_w$", (None, "tp")),
+    (r"mamba/(A_log|D|dt_bias)$", (None,)),
+    (r"rwkv/w[rkvgo]$", ("fsdp", "tp")),
+    (r"rwkv/w0$", (None,)),
+    (r"rwkv/w1$", ("fsdp", None)),
+    (r"rwkv/w2$", (None, "fsdp")),
+    (r"rwkv/u$", (None, None)),
+    (r"rwkv/mu$", (None, None)),
+    (r"rwkv/cmu$", (None, None)),
+    (r"rwkv/ck$", ("fsdp", "tp")),
+    (r"rwkv/cv$", ("tp", "fsdp")),
+    (r"rwkv/cr$", ("fsdp", "tp")),
+    (r".*", (None,)),
+]
+
+
+def _axis_name(logical: str | None, mesh: Mesh) -> str | None:
+    if logical is None:
+        return None
+    if logical == "tp":
+        return "model" if "model" in mesh.axis_names else None
+    if logical == "fsdp":
+        return "data" if "data" in mesh.axis_names else None
+    raise ValueError(logical)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def _spec_for(path: str, shape: tuple[int, ...], mesh: Mesh,
+              notes: list | None = None) -> P:
+    # scan-stacked params have a leading group axis: detect via rule arity
+    for pat, template in _PARAM_RULES:
+        if re.search(pat, path):
+            extra = len(shape) - len(template)
+            dims: list[str | None] = [None] * max(0, extra) + list(template)
+            dims = dims[: len(shape)]
+            out = []
+            for dim, logical in zip(shape, dims):
+                ax = _axis_name(logical, mesh)
+                if ax is not None and dim % mesh.shape[ax] != 0:
+                    if notes is not None:
+                        notes.append((path, shape, logical,
+                                      f"{dim} % {mesh.shape[ax]} != 0"))
+                    ax = None
+                out.append(ax)
+            return P(*out)
+    return P()
+
+
+def param_pspecs(params_tree, mesh: Mesh, notes: list | None = None):
+    """PartitionSpec pytree for a parameter (or optimizer-state) pytree.
+    Works on pytrees of arrays or ShapeDtypeStructs."""
+
+    def f(path, leaf):
+        return _spec_for(_path_str(path), leaf.shape, mesh, notes)
+
+    return jax.tree_util.tree_map_with_path(f, params_tree)
+
+
+def batch_pspecs(batch_tree, mesh: Mesh, *, global_batch: int):
+    """Input-batch specs: batch over (pod, data) when divisible, otherwise
+    sequence over data (context parallelism for long_500k)."""
+    dp_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    dp = int(np.prod([mesh.shape[a] for a in dp_axes]))
+
+    def f(path, leaf):
+        p = _path_str(path)
+        shape = leaf.shape
+        if p.endswith("positions"):          # [3, B, S]
+            if global_batch % dp == 0:
+                return P(None, dp_axes, None)
+            return P(None, None, "data")
+        if p.endswith("pos"):                # [B]
+            if global_batch % dp == 0:
+                return P(dp_axes)
+            return P(None)
+        if len(shape) >= 2 and shape[0] == global_batch and global_batch % dp == 0:
+            return P(dp_axes, *([None] * (len(shape) - 1)))
+        if len(shape) >= 2 and shape[1] % mesh.shape.get("data", 1) == 0:
+            # batch too small: shard the sequence axis (CP)
+            return P(None, "data", *([None] * (len(shape) - 2)))
+        return P(*([None] * len(shape)))
+
+    return jax.tree_util.tree_map_with_path(f, batch_tree)
+
+
+def cache_pspecs(cache_tree, mesh: Mesh, *, batch: int):
+    """Decode-state specs.  K/V caches [.., B, S, KV, hd]: batch over
+    (pod,data) when divisible, else sequence over data; head_dim over model
+    (always divisible for the assigned pool).  Recurrent states shard their
+    head axis."""
+    dp_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    dp = int(np.prod([mesh.shape[a] for a in dp_axes]))
+    data = mesh.shape.get("data", 1)
+    model = mesh.shape.get("model", 1)
+
+    def f(path, leaf):
+        p = _path_str(path)
+        shape = leaf.shape
+        nd = len(shape)
+        if p.endswith("pos"):                # ring positions [.., B, span]
+            lead = [None] * (nd - 2)
+            if batch % dp == 0:
+                return P(*lead, dp_axes, None)
+            return P(*lead, None, "data" if shape[-1] % data == 0 else None)
+        if re.search(r"(^|/)(x?[kv])$", p) and nd >= 4:
+            # split-K decode layout: the cache *sequence* axis shards over
+            # "model" (and over "data" too when the batch cannot), so
+            # attention reduces over local KV slices and combines partial
+            # softmax statistics with tiny all-reduces — the KV cache is
+            # never gathered.
+            lead = [None] * (nd - 4)
+            b, s, kv, hd = shape[-4:]
+            if batch % dp == 0:
+                s_ax = "model" if s % model == 0 else None
+                return P(*lead, dp_axes, s_ax, None, None)
+            if s % (data * model) == 0:
+                return P(*lead, None, ("data", "model"), None, None)
+            s_ax = "data" if s % data == 0 else None
+            return P(*lead, None, s_ax, None, None)
+        if "mamba_state" in p or "rwkv_state" in p:
+            lead: list = [None] * nd
+            # find the batch axis: first dim equal to batch
+            for i, d in enumerate(shape):
+                if d == batch and batch % dp == 0:
+                    lead[i] = dp_axes
+                    break
+            else:
+                # shard the head axis over data instead (B too small)
+                for i, d in enumerate(shape):
+                    if i >= nd - 3 and d % data == 0 and d != batch:
+                        lead[i] = "data"
+                        break
+            return P(*lead)
+        return P(*([None] * nd))
+
+    return jax.tree_util.tree_map_with_path(f, cache_tree)
+
+
+def shardings_for(tree_of_pspecs, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_of_pspecs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def explain(params_tree, mesh: Mesh) -> list:
+    """Return the list of (path, shape, logical_axis, reason) fallbacks."""
+    notes: list = []
+    param_pspecs(params_tree, mesh, notes)
+    return notes

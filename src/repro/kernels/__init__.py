@@ -1,0 +1,4 @@
+"""Pallas TPU kernels for HAMLET hot paths (masked prefix propagation),
+with jnp/numpy oracles and jit wrappers.  See hamlet_propagate.py."""
+
+from .ops import propagate, propagate_batched  # noqa: F401

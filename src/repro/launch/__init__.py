@@ -1,0 +1,2 @@
+"""Launchers: production mesh construction, the multi-pod dry-run, the
+training driver, the serving driver, and the distributed HAMLET service."""

@@ -1,0 +1,354 @@
+"""Multi-pod dry-run: lower + compile every (architecture x shape x mesh)
+cell against ShapeDtypeStruct inputs, on 512 placeholder host devices.
+
+Usage::
+
+    PYTHONPATH=src python -m repro.launch.dryrun --mesh single --arch gemma2-2b
+    PYTHONPATH=src python -m repro.launch.dryrun --mesh multi          # all
+
+Artifacts (per cell: HLO flops/bytes, per-device collective bytes by kind,
+memory analysis, sharding fallbacks) land in benchmarks/artifacts/ for the
+roofline analysis (EXPERIMENTS.md §Roofline).
+"""
+
+# The placeholder-device flag must precede EVERY jax import (jax locks the
+# device count on first init), hence the top-of-module environment poke.
+import os
+
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+
+import argparse        # noqa: E402
+import json            # noqa: E402
+import re              # noqa: E402
+import time            # noqa: E402
+import traceback       # noqa: E402
+from dataclasses import replace  # noqa: E402
+
+import jax             # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from ..configs import ARCHS, get_config, input_specs  # noqa: E402
+from ..configs.base import SHAPE_CELLS  # noqa: E402
+from ..distributed.sharding import (batch_pspecs, cache_pspecs,  # noqa: E402
+                                    param_pspecs)
+from ..models import lm  # noqa: E402
+from ..models.partitioning import activation_specs, unrolled_scans  # noqa: E402
+from ..train.optimizer import AdamW  # noqa: E402
+from .mesh import describe_mesh, make_production_mesh  # noqa: E402
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__),
+                            "../../../benchmarks/artifacts")
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"=\s*(?:\(([^)]*)\)|(\S+))\s+"
+                       r"(all-gather|all-reduce|reduce-scatter|all-to-all|"
+                       r"collective-permute)(?:-start|-done)?\(")
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4,
+                "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1, "s64": 8,
+                "u64": 8}
+
+
+def _tensor_bytes(ty: str) -> int:
+    m = re.match(r"(\w+)\[([\d,]*)\]", ty.strip())
+    if not m:
+        return 0
+    dt, dims = m.groups()
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dt, 4)
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-device bytes moved by collectives, from the post-SPMD HLO.
+    Uses each collective's result shape (per-partition)."""
+    out = {k: 0 for k in _COLLECTIVES}
+    count = {k: 0 for k in _COLLECTIVES}
+    for m in _SHAPE_RE.finditer(hlo_text):
+        tuple_tys, single_ty, kind = m.groups()
+        tys = (tuple_tys.split(",") if tuple_tys else [single_ty])
+        # tuple entries look like "f32[128,64]{1,0}"; keep tensor-typed ones
+        b = sum(_tensor_bytes(t) for t in tys if "[" in t)
+        out[kind] += b
+        count[kind] += 1
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    out["counts"] = count
+    return out
+
+
+def _spec_tree_to_shardings(tree, mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _lower_plain(cfg, cell):
+    """Lower (no mesh, no compile) with all scans unrolled; returns the
+    cost_analysis dict — exact global FLOP/byte counts (XLA's HloCostAnalysis
+    counts while bodies once, so the production scanned module undercounts by
+    the trip count; see EXPERIMENTS.md §Method)."""
+    seq, batch, step = SHAPE_CELLS[cell]
+    specs = input_specs(cfg, cell)
+    params_shapes = jax.eval_shape(
+        lambda: lm.init_params(cfg, jax.random.PRNGKey(0)))
+    with unrolled_scans(True):
+        if step == "train":
+            opt = AdamW(lr=1e-4)
+            opt_shapes = jax.eval_shape(opt.init, params_shapes)
+            lowered = jax.jit(lm.train_step_fn(cfg, opt)).lower(
+                params_shapes, opt_shapes, specs)
+        elif step == "prefill":
+            lowered = jax.jit(lm.prefill_fn(cfg)).lower(params_shapes, specs)
+        else:
+            cache_shapes = jax.eval_shape(
+                lambda: lm.init_cache(cfg, batch, cap=seq))
+            lowered = jax.jit(lm.decode_fn(cfg)).lower(
+                params_shapes, cache_shapes, specs)
+    return lowered.cost_analysis()
+
+
+def exact_cost(cfg, cell) -> dict:
+    """Exact HLO flops/bytes via 1-group/2-group extrapolation (groups are
+    homogeneous, so the marginal is exact), plus the unrolled tail."""
+    cyc, n_groups, tail = cfg.layer_plan()
+
+    def costs(cfg2):
+        ca = _lower_plain(cfg2, cell)
+        return float(ca.get("flops", 0.0)), float(ca.get("bytes accessed", 0.0))
+
+    f1, b1 = costs(replace(cfg, n_layers=len(cyc)))
+    f2, b2 = costs(replace(cfg, n_layers=2 * len(cyc)))
+    mf, mb = f2 - f1, b2 - b1
+    f0, b0 = f1 - mf, b1 - mb
+    flops = f0 + n_groups * mf
+    byts = b0 + n_groups * mb
+    if tail:
+        ft, bt = costs(replace(cfg, attn_pattern=tuple(tail),
+                               n_layers=len(tail)))
+        flops += ft - f0
+        byts += bt - b0
+    return {"flops_exact": flops, "bytes_lowered_exact": byts}
+
+
+def _act_specs_for(mesh, cfg, cell) -> dict:
+    seq, batch, step = SHAPE_CELLS[cell]
+    dp_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    model = mesh.shape["model"]
+    dp = 1
+    for a in dp_axes:
+        dp *= mesh.shape[a]
+    specs: dict = {}
+    if step == "decode" or batch % dp:
+        return specs
+    if step == "train":
+        # residual stream [B, S, D]: batch over dp, sequence over model (SP)
+        specs["act"] = (P(dp_axes, "model", None)
+                        if seq % model == 0 else P(dp_axes, None, None))
+        specs["logits"] = (P(dp_axes, None, "model")
+                           if cfg.vocab % model == 0 else
+                           P(dp_axes, None, None))
+    if step == "prefill" and cfg.n_heads % model != 0:
+        # per-chunk sequence-parallel attention for head counts that don't
+        # divide TP: q/k/v replicate over model, each query chunk's rows
+        # shard over model (local softmax), outputs re-concatenate.
+        # Prefill only: in training the constraint's backward inserts
+        # per-chunk gather/scatter pairs that cost more than the forward
+        # saves (A/B in EXPERIMENTS.md §Perf it.8).
+        specs["attn_kv"] = P(dp_axes, None, None, None)
+        specs["attn_chunk"] = P(dp_axes, "model", None, None)
+        specs["attn_chunks"] = P(None, dp_axes, "model", None, None)
+    return specs
+
+
+def lower_cell(arch: str, cell: str, mesh, *, compile_: bool = True) -> dict:
+    cfg = get_config(arch)
+    rec: dict = {"arch": arch, "cell": cell, "mesh": describe_mesh(mesh),
+                 "status": "ok"}
+    skip = cfg.supports_cell(cell)
+    if skip:
+        rec.update(status="skipped", reason=skip)
+        return rec
+
+    seq, batch, step = SHAPE_CELLS[cell]
+    specs = input_specs(cfg, cell)
+    notes: list = []
+
+    params_shapes = jax.eval_shape(
+        lambda: lm.init_params(cfg, jax.random.PRNGKey(0)))
+    p_spec = param_pspecs(params_shapes, mesh, notes)
+    p_shard = _spec_tree_to_shardings(p_spec, mesh)
+    b_spec = batch_pspecs(specs, mesh, global_batch=batch)
+    b_shard = _spec_tree_to_shardings(b_spec, mesh)
+
+    t0 = time.time()
+    with mesh, activation_specs(**_act_specs_for(mesh, cfg, cell)):
+        if step == "train":
+            opt = AdamW(lr=1e-4, state_dtype="bfloat16"
+                        if "400b" in arch else None)
+            opt_shapes = jax.eval_shape(opt.init, params_shapes)
+            o_spec = param_pspecs(opt_shapes, mesh, notes)
+            o_shard = _spec_tree_to_shardings(o_spec, mesh)
+            fn = lm.train_step_fn(cfg, opt)
+            lowered = jax.jit(fn, in_shardings=(p_shard, o_shard, b_shard),
+                              donate_argnums=(0, 1)).lower(
+                params_shapes, opt_shapes, specs)
+        elif step == "prefill":
+            fn = lm.prefill_fn(cfg)
+            lowered = jax.jit(fn, in_shardings=(p_shard, b_shard)).lower(
+                params_shapes, specs)
+        else:  # decode
+            cache_shapes = jax.eval_shape(
+                lambda: lm.init_cache(cfg, batch, cap=seq))
+            c_spec = cache_pspecs(cache_shapes, mesh, batch=batch)
+            c_shard = _spec_tree_to_shardings(c_spec, mesh)
+            fn = lm.decode_fn(cfg)
+            lowered = jax.jit(fn, in_shardings=(p_shard, c_shard, b_shard),
+                              donate_argnums=(1,)).lower(
+                params_shapes, cache_shapes, specs)
+        rec["lower_s"] = round(time.time() - t0, 2)
+        if not compile_:
+            return rec
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 2)
+
+    try:
+        cost = compiled.cost_analysis()
+        rec["flops"] = float(cost.get("flops", 0.0))
+        rec["bytes_accessed"] = float(cost.get("bytes accessed", 0.0))
+    except Exception as e:  # pragma: no cover
+        rec["cost_error"] = repr(e)
+    try:
+        mem = compiled.memory_analysis()
+        for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes",
+                  "alias_size_in_bytes"):
+            if hasattr(mem, k):
+                rec[k] = int(getattr(mem, k))
+    except Exception as e:  # pragma: no cover
+        rec["memory_error"] = repr(e)
+    try:
+        from .hlo_analysis import analyze_hlo
+
+        rep = analyze_hlo(compiled.as_text())
+        rec["collectives"] = {k: v for k, v in rep.collective_bytes.items()}
+        rec["collective_counts"] = {k: v for k, v in
+                                    rep.collective_counts.items() if v}
+        rec["traffic_bytes_per_device"] = rep.traffic_bytes
+        rec["whiles"] = [(c, n) for c, _, n in rep.whiles]
+    except Exception as e:  # pragma: no cover
+        rec["hlo_analysis_error"] = repr(e)
+    rec["sharding_fallbacks"] = [f"{p}: {r}" for p, s, l, r in notes]
+
+    # exact trip-count-corrected global FLOPs (unrolled-lowered extrapolation)
+    try:
+        rec.update(exact_cost(cfg, cell))
+    except Exception as e:  # pragma: no cover
+        rec["exact_cost_error"] = repr(e)
+    return rec
+
+
+def hamlet_pane_step(mesh, dense_frac: float = 0.9):
+    """Lower the HAMLET dataplane on the production mesh: group-partitioned
+    burst propagation + per-query snapshot resolution (beyond the 40 cells).
+
+    Mirrors the engine's production mix (§Perf it.5): ~90% of bursts have no
+    edge predicates / divergence and use the O(b) dense closed form; the
+    rest run the blocked Neumann solve (the Pallas kernel's algorithm)."""
+    from ..kernels import ref
+    from .hlo_analysis import analyze_hlo
+
+    G, b, B, k, C = 4096, 256, 8, 64, 16   # groups, burst, basis, queries, C
+    shards = 512 if "pod" in mesh.axis_names else 256
+    dp_size = shards // mesh.shape["model"]
+    Gd = (int(G * dense_frac) // dp_size) * dp_size   # dp-divisible split
+    Gm = G - Gd
+
+    def pane_step(base_d, base_m, masks, W, u):
+        coef_d = jax.vmap(ref.prefix_propagate_dense)(base_d)
+        coef_m = jax.vmap(lambda bb, mm: ref.masked_prefix_propagate_blocked(
+            bb, mm, tile=128))(base_m, masks)
+        coef = jnp.concatenate([coef_d, coef_m], axis=0)
+        counts = jnp.einsum("gbB,gkBC,gkC->gbk", coef, W, u)
+        return coef.sum(axis=1), counts.sum(axis=1)
+
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    sh = lambda *spec: NamedSharding(mesh, P(*spec))
+    args = (
+        jax.ShapeDtypeStruct((Gd, b, B), jnp.float32),
+        jax.ShapeDtypeStruct((Gm, b, B), jnp.float32),
+        jax.ShapeDtypeStruct((Gm, b, b), jnp.float32),
+        jax.ShapeDtypeStruct((G, k, B, C), jnp.float32),
+        jax.ShapeDtypeStruct((G, k, C), jnp.float32),
+    )
+    in_sh = (sh(dp, None, None), sh(dp, None, None), sh(dp, None, None),
+             sh(dp, "model", None, None), sh(dp, "model", None))
+    with mesh:
+        lowered = jax.jit(pane_step, in_shardings=in_sh).lower(*args)
+        compiled = lowered.compile()
+    cost = compiled.cost_analysis()
+    rep = analyze_hlo(compiled.as_text())
+    return {"arch": "hamlet-pane-step",
+            "cell": f"G{G}xb{b}xB{B}xk{k}-dense{dense_frac}",
+            "mesh": describe_mesh(mesh), "status": "ok",
+            "flops": float(cost.get("flops", 0)),
+            "flops_exact": float(cost.get("flops", 0)),  # no while loops
+            "traffic_bytes_per_device": rep.traffic_bytes,
+            "collectives": dict(rep.collective_bytes)}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="both")
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--cell", default="all")
+    ap.add_argument("--no-compile", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    assert len(jax.devices()) == 512, "dry-run expects 512 placeholder devices"
+
+    archs = ARCHS if args.arch == "all" else [args.arch]
+    cells = list(SHAPE_CELLS) if args.cell == "all" else [args.cell]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    os.makedirs(ARTIFACT_DIR, exist_ok=True)
+    records = []
+    for multi in meshes:
+        mesh = make_production_mesh(multi_pod=multi)
+        try:
+            records.append(hamlet_pane_step(mesh))
+            print(json.dumps(records[-1]))
+        except Exception:
+            traceback.print_exc()
+        for arch in archs:
+            for cell in cells:
+                try:
+                    rec = lower_cell(arch, cell, mesh,
+                                     compile_=not args.no_compile)
+                except Exception as e:
+                    rec = {"arch": arch, "cell": cell,
+                           "mesh": describe_mesh(mesh), "status": "error",
+                           "error": repr(e),
+                           "trace": traceback.format_exc()[-2000:]}
+                records.append(rec)
+                print(json.dumps({k: v for k, v in rec.items()
+                                  if k != "trace"}))
+        out = args.out or os.path.join(
+            ARTIFACT_DIR, f"dryrun_{'multi' if multi else 'single'}.json")
+        with open(out, "w") as f:
+            json.dump([r for r in records
+                       if r["mesh"] == describe_mesh(mesh)], f, indent=1)
+
+    n_err = sum(r["status"] == "error" for r in records)
+    print(f"\n{len(records)} cells, {n_err} errors")
+    return 1 if n_err else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,24 @@
+"""Production mesh construction.
+
+Importing this module never touches jax device state; call
+``make_production_mesh`` only after the runtime's device count is final
+(the dry-run forces 512 placeholder host devices *before* any jax import).
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "describe_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: (16, 16) = 256 chips, axes (data, model).
+    Multi-pod: (2, 16, 16) = 512 chips, axes (pod, data, model)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def describe_mesh(mesh) -> str:
+    return "x".join(f"{a}={mesh.shape[a]}" for a in mesh.axis_names)

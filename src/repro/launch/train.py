@@ -1,0 +1,45 @@
+"""Training driver.
+
+    PYTHONPATH=src python -m repro.launch.train --arch gemma2-2b --smoke \
+        --steps 100 --ckpt /tmp/ckpt
+
+``--smoke`` runs the reduced config on the local device(s); on a real TPU
+fleet the same entry point shards over the production mesh (params/opt via
+``param_pspecs``, batch over (pod, data)); checkpoint/restart and straggler
+mitigation come from the fault-tolerant loop in repro.train.trainer.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+from ..configs import get_config, reduce_for_smoke
+from ..train.trainer import TrainLoopConfig, run_training
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma2-2b")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--ckpt", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-interval", type=int, default=10)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-sized)")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = reduce_for_smoke(cfg)
+    loop = TrainLoopConfig(steps=args.steps, batch=args.batch, seq=args.seq,
+                           ckpt_dir=args.ckpt,
+                           ckpt_interval=args.ckpt_interval, lr=args.lr)
+    params, losses, resumed = run_training(cfg, loop)
+    print(f"arch={cfg.name} resumed_from={resumed} "
+          f"first_loss={losses[0]:.4f} last_loss={losses[-1]:.4f}")
+
+
+if __name__ == "__main__":
+    main()

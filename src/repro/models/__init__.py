@@ -1,0 +1,4 @@
+"""Model zoo: the 10 assigned architectures as one composable JAX stack
+(scan-over-layer-groups, GQA/SWA attention, MoE, Mamba2, RWKV6, enc-dec)."""
+
+from .lm import init_params, train_step_fn, prefill_fn, decode_fn, init_cache  # noqa: F401

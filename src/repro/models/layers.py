@@ -1,0 +1,293 @@
+"""Shared neural layers: RMSNorm, RoPE / M-RoPE / sinusoidal positions,
+GQA attention (full / sliding-window, logit softcap, QK-norm, KV cache),
+and gated/plain MLPs.  Pure functions over parameter pytrees."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "rms_norm", "apply_rope", "apply_mrope", "sincos_positions",
+    "attention_block", "mlp_block", "init_attention", "init_mlp",
+]
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+# ---------------------------------------------------------------- positions
+
+
+def _rope_angles(positions: jax.Array, dims: int, theta: float) -> jax.Array:
+    """positions [...]; returns [..., dims/2] angles."""
+    freqs = 1.0 / (theta ** (jnp.arange(0, dims, 2, dtype=jnp.float32) / dims))
+    return positions.astype(jnp.float32)[..., None] * freqs
+
+
+def _rotate(x: jax.Array, angles: jax.Array) -> jax.Array:
+    """x [..., H, hd]; angles [..., hd/2] broadcast over heads."""
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    c = jnp.cos(angles)[..., None, :]
+    s = jnp.sin(angles)[..., None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1).astype(dt)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x [B, S, H, hd]; positions [B, S]."""
+    return _rotate(x, _rope_angles(positions, x.shape[-1], theta))
+
+
+def apply_mrope(x: jax.Array, positions: jax.Array, theta: float,
+                sections: tuple[int, int, int]) -> jax.Array:
+    """Qwen2-VL multimodal RoPE: positions [3, B, S] (temporal, h, w);
+    the hd/2 rotary frequencies are partitioned into three sections, each
+    driven by its own position stream."""
+    hd = x.shape[-1]
+    assert sum(sections) == hd // 2, (sections, hd)
+    angles = []
+    for stream, sec in enumerate(sections):
+        a = _rope_angles(positions[stream], hd, theta)  # [B, S, hd/2]
+        angles.append(a[..., sum(sections[:stream]):sum(sections[:stream]) + sec])
+    return _rotate(x, jnp.concatenate(angles, axis=-1))
+
+
+def sincos_positions(seq: int, d_model: int, offset: int = 0) -> jax.Array:
+    """Whisper-style sinusoidal absolute position embedding [seq, d_model]."""
+    pos = np.arange(offset, offset + seq)[:, None]
+    dim = np.arange(d_model // 2)[None, :]
+    inv = np.exp(-math.log(10000.0) * dim / max(1, d_model // 2 - 1))
+    ang = pos * inv
+    return jnp.asarray(np.concatenate([np.sin(ang), np.cos(ang)], axis=-1),
+                       dtype=jnp.float32)
+
+
+# ---------------------------------------------------------------- attention
+
+
+def init_attention(key, cfg, dtype) -> dict:
+    d, qd, kvd = cfg.d_model, cfg.q_dim, cfg.kv_dim
+    ks = jax.random.split(key, 4)
+    sd = 1.0 / math.sqrt(d)
+    p = {
+        "wq": (jax.random.normal(ks[0], (d, qd)) * sd).astype(dtype),
+        "wk": (jax.random.normal(ks[1], (d, kvd)) * sd).astype(dtype),
+        "wv": (jax.random.normal(ks[2], (d, kvd)) * sd).astype(dtype),
+        "wo": (jax.random.normal(ks[3], (qd, d)) / math.sqrt(qd)).astype(dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((cfg.head_dim,), dtype)
+        p["k_norm"] = jnp.zeros((cfg.head_dim,), dtype)
+    return p
+
+
+def _positional(q, k, cfg, kind, positions, k_positions=None):
+    if cfg.enc_dec:
+        return q, k  # whisper: sinusoidal embeddings added at the stem
+    theta = cfg.rope_theta
+    if kind == "local" and cfg.rope_local_theta is not None:
+        theta = cfg.rope_local_theta
+    kp = positions if k_positions is None else k_positions
+    if cfg.mrope_sections is not None:
+        q = apply_mrope(q, positions, theta, cfg.mrope_sections)
+        k = apply_mrope(k, kp, theta, cfg.mrope_sections)
+    else:
+        q = apply_rope(q, positions, theta)
+        k = apply_rope(k, kp, theta)
+    return q, k
+
+
+def _sdpa(q, k, v, mask, cfg):
+    """q [B,S,H,hd]; k/v [B,T,KV,hd]; mask [B,1,1,S,T] or broadcastable.
+
+    Operands stay in their storage dtype with f32 *accumulation*
+    (`preferred_element_type`): upcasting k/v first makes XLA materialise an
+    f32 copy of the whole KV cache per layer (§Perf it.7 — 40x the decode
+    memory floor); the MXU multiplies bf16 with f32 accumulation natively."""
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    rep = H // KV
+    q = q.reshape(B, S, KV, rep, hd)
+    logits = jnp.einsum("bsgrh,btgh->bgrst", q, k,
+                        preferred_element_type=jnp.float32) / math.sqrt(hd)
+    if cfg.attn_logit_softcap:
+        c = cfg.attn_logit_softcap
+        logits = jnp.tanh(logits / c) * c
+    logits = jnp.where(mask, logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bgrst,btgh->bsgrh", w.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, S, H * hd).astype(v.dtype)
+
+
+ATTN_Q_CHUNK = 512
+
+
+def sdpa_chunked(q, k, v, cfg, mask_fn, q_offset: int = 0,
+                 chunk: int = ATTN_Q_CHUNK, local_window: int | None = None):
+    """Memory-bounded attention: scan over query chunks so the [S, T] logits
+    never materialise — the live set is one [chunk, T] slab per head group
+    (the TPU-memory-hierarchy analogue of flash attention at the XLA level).
+
+    For sliding-window layers (``local_window``), each chunk only reads the
+    [window + chunk] K/V band that can be attended — prefill traffic and
+    FLOPs drop by T/(window+chunk) (§Perf it.9).
+
+    mask_fn(qpos [Cq], kpos [T]) -> bool [Cq, T]; q [B,S,H,hd]; k/v [B,T,..].
+    """
+    B, S, H, hd = q.shape
+    T = k.shape[1]
+    if S <= chunk:
+        mask = mask_fn(jnp.arange(S) + q_offset, jnp.arange(T))
+        return _sdpa(q, k, v, mask[None, None, None, :, :], cfg)
+    assert q_offset == 0, "banded path assumes self-attention alignment"
+    n = S // chunk
+    rem = S - n * chunk
+    kpos = jnp.arange(T)
+
+    from .partitioning import constrain, scan_unroll
+
+    band = None
+    if local_window is not None and local_window + chunk < T:
+        W = local_window
+        band = W + chunk
+        kpad = jnp.pad(k, ((0, 0), (W, 0), (0, 0), (0, 0)))
+        vpad = jnp.pad(v, ((0, 0), (W, 0), (0, 0), (0, 0)))
+
+    @jax.checkpoint
+    def one(qc, qpos, qstart):
+        # per-chunk sequence parallelism: the chunk's rows shard over the
+        # model axis (set when head counts don't divide TP), so every shard
+        # computes a slice of softmax rows with local reductions
+        qc = constrain(qc, "attn_chunk")
+        if band is not None:
+            kk = jax.lax.dynamic_slice_in_dim(kpad, qstart, band, 1)
+            vv = jax.lax.dynamic_slice_in_dim(vpad, qstart, band, 1)
+            kp = qstart - W + jnp.arange(band)   # pads land at kp < 0
+            mask = mask_fn(qpos, kp)
+            return _sdpa(qc, kk, vv, mask[None, None, None, :, :], cfg)
+        mask = mask_fn(qpos, kpos)
+        return _sdpa(qc, k, v, mask[None, None, None, :, :], cfg)
+
+    unroll = True if scan_unroll() else 1
+    if rem == 0:
+        # scan over *stacked* chunks: slicing the (unsharded) leading chunk
+        # axis is shard-local, so per-iteration q slices never reshard
+        # (a traced-index dynamic_slice on a sharded tensor makes GSPMD
+        # gather the whole operand every layer)
+        qs = q.reshape(B, n, chunk, H, hd).swapaxes(0, 1)
+        qs = constrain(qs, "attn_chunks")
+
+        def body(_, xs):
+            qc, i = xs
+            qpos = i * chunk + jnp.arange(chunk) + q_offset
+            return None, one(qc, qpos, i * chunk)
+
+        _, outs = jax.lax.scan(body, None, (qs, jnp.arange(n)),
+                               unroll=unroll)
+        return outs.swapaxes(0, 1).reshape(B, S, H * hd)
+
+    def body(_, i):
+        qc = jax.lax.dynamic_slice_in_dim(q, i * chunk, chunk, 1)
+        qpos = i * chunk + jnp.arange(chunk) + q_offset
+        return None, one(qc, qpos, i * chunk)
+
+    _, outs = jax.lax.scan(body, None, jnp.arange(n), unroll=unroll)
+    out = outs.swapaxes(0, 1).reshape(B, n * chunk, H * hd)
+    if rem:
+        tail = one(q[:, n * chunk:], jnp.arange(n * chunk, S) + q_offset,
+                   n * chunk)
+        out = jnp.concatenate([out, tail], axis=1)
+    return out
+
+
+def attention_block(p: dict, x: jax.Array, cfg, kind: str,
+                    positions: jax.Array, *, causal: bool = True,
+                    cache: dict | None = None, cache_pos: jax.Array | None = None,
+                    kv_from: jax.Array | None = None,
+                    kv_positions: jax.Array | None = None):
+    """One attention op.
+
+    Modes:
+      * full-sequence (train / prefill): ``cache is None`` — returns
+        (out, {"k","v"}) so prefill can build a cache;
+      * incremental decode: ``cache`` holds [B, Smax, KV, hd]; the new k/v is
+        written at ``cache_pos`` and attention runs over the whole cache;
+      * cross attention: ``kv_from`` supplies the keys/values source
+        (encoder output), no causal mask.
+    """
+    B, S, d = x.shape
+    hd, H, KV = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    src = x if kv_from is None else kv_from
+    q = (x @ p["wq"]).reshape(B, S, H, hd)
+    k = (src @ p["wk"]).reshape(B, src.shape[1], KV, hd)
+    v = (src @ p["wv"]).reshape(B, src.shape[1], KV, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    if kv_from is None:
+        q, k = _positional(q, k, cfg, kind, positions, kv_positions)
+
+    if cache is not None and kv_from is None:
+        # incremental decode: write new kv at cache_pos, attend over cache
+        bidx = jnp.arange(B)
+        ck = cache["k"].at[bidx, cache_pos].set(k[:, 0])
+        cv = cache["v"].at[bidx, cache_pos].set(v[:, 0])
+        T = ck.shape[1]
+        tpos = jnp.arange(T)[None, :]                      # [1, T]
+        mask = tpos <= cache_pos[:, None]
+        if kind == "local":
+            mask &= tpos > cache_pos[:, None] - cfg.window
+        mask = mask[:, None, None, None, :]                # [B,1,1,1,T]
+        out = _sdpa(q, ck, cv, mask, cfg)
+        new_cache = {"k": ck, "v": cv}
+        return (out @ p["wo"]), new_cache
+
+    T = src.shape[1]
+    if kv_from is not None:
+        mask = jnp.ones((1, 1, 1, S, T), dtype=bool)       # cross: dense
+    else:
+        qpos = positions[..., :, None] if positions.ndim == 2 else \
+            jnp.arange(S)[:, None]
+        kpos = jnp.arange(T)[None, :]
+        if causal:
+            mask = kpos <= qpos
+            if kind == "local":
+                mask = mask & (kpos > qpos - cfg.window)
+        else:
+            mask = jnp.ones((S, T), dtype=bool)
+            if kind == "local":
+                mask = jnp.abs(kpos - qpos) < cfg.window
+        mask = mask[..., None, None, :, :] if mask.ndim == 3 else \
+            mask[None, None, None, :, :]
+    out = _sdpa(q, k, v, mask, cfg)
+    return (out @ p["wo"]), {"k": k, "v": v}
+
+
+# ---------------------------------------------------------------- MLP
+
+
+def init_mlp(key, d_model: int, d_ff: int, gated: bool, dtype) -> dict:
+    ks = jax.random.split(key, 3)
+    si, so = 1.0 / math.sqrt(d_model), 1.0 / math.sqrt(d_ff)
+    p = {"w_up": (jax.random.normal(ks[0], (d_model, d_ff)) * si).astype(dtype),
+         "w_down": (jax.random.normal(ks[1], (d_ff, d_model)) * so).astype(dtype)}
+    if gated:
+        p["w_gate"] = (jax.random.normal(ks[2], (d_model, d_ff)) * si).astype(dtype)
+    return p
+
+
+def mlp_block(p: dict, x: jax.Array, act: str = "silu") -> jax.Array:
+    f = jax.nn.silu if act == "silu" else jax.nn.gelu
+    if "w_gate" in p:
+        return (f(x @ p["w_gate"]) * (x @ p["w_up"])) @ p["w_down"]
+    return f(x @ p["w_up"]) @ p["w_down"]

@@ -1,0 +1,608 @@
+"""Unified LM assembly for the assigned architecture pool.
+
+A model is a stack of layer *cycles* (cfg.attn_pattern) executed as
+``lax.scan`` over stacked per-cycle parameters, plus an unrolled tail when
+``n_layers % len(cycle) != 0``.  Layer kinds:
+
+    "global" / "local"            GQA attention (full / sliding window) + MLP
+    "global+moe" / "local+moe"    attention + MoE FFN
+    "mamba2"                      Mamba2/SSD block
+    "mamba2+shared"               Mamba2 + the weight-tied shared attention
+                                  block (zamba2)
+    "rwkv6"                       RWKV-6 time mix + channel mix
+
+Steps: ``train`` (loss + grads + optimizer update), ``prefill`` (forward; can
+also fill KV caches / recurrent states), ``decode`` (one token against the
+cache; local layers use a ring buffer bounded by the window).  Encoder-decoder
+(whisper) runs a bidirectional encoder over stub frame embeddings and a causal
+decoder with cross attention (cross K/V cached for decode).  Modality
+frontends are stubs per the assignment: frames / patch embeddings arrive
+precomputed.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .layers import (apply_rope, init_attention, init_mlp, mlp_block,
+                     rms_norm, sincos_positions, sdpa_chunked, _sdpa)
+from .partitioning import constrain, scan_unroll
+
+
+def _scan(f, init, xs, length=None):
+    return jax.lax.scan(f, init, xs, length=length,
+                        unroll=True if scan_unroll() else 1)
+from .mamba2 import (init_mamba2, init_mamba2_state, mamba2_block,
+                     mamba2_decode)
+from .moe import init_moe, moe_block
+from .rwkv6 import init_rwkv6, init_rwkv6_state, rwkv6_block, rwkv6_decode
+
+__all__ = ["init_params", "init_cache", "forward", "loss_fn",
+           "train_step_fn", "prefill_fn", "decode_fn"]
+
+
+def _dtype(cfg):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def _ffn_is_moe(kind: str) -> bool:
+    return kind.endswith("+moe")
+
+
+# ------------------------------------------------------------------ params
+
+
+def _init_layer(key, cfg: ModelConfig, kind: str, cross: bool = False) -> dict:
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, 8)
+    d = cfg.d_model
+    if kind == "rwkv6":
+        return {"ln": jnp.zeros((d,), dt), "rwkv": init_rwkv6(ks[0], cfg, dt)}
+    if kind.startswith("mamba2"):
+        return {"ln": jnp.zeros((d,), dt), "mamba": init_mamba2(ks[0], cfg, dt)}
+    p = {
+        "ln1": jnp.zeros((d,), dt),
+        "attn": init_attention(ks[0], cfg, dt),
+        "ln2": jnp.zeros((d,), dt),
+    }
+    if _ffn_is_moe(kind):
+        p["moe"] = init_moe(ks[1], cfg, dt)
+    else:
+        ff = cfg.moe_dense_ff if cfg.moe_dense_ff else cfg.d_ff
+        p["mlp"] = init_mlp(ks[2], d, ff, cfg.mlp_gated, dt)
+    if cfg.post_block_norm:
+        p["post_ln1"] = jnp.zeros((d,), dt)
+        p["post_ln2"] = jnp.zeros((d,), dt)
+    if cross:
+        p["ln_cross"] = jnp.zeros((d,), dt)
+        p["cross"] = init_attention(ks[3], cfg, dt)
+    return p
+
+
+def _stack(trees):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def init_params(cfg: ModelConfig, key=None) -> dict:
+    key = jax.random.PRNGKey(0) if key is None else key
+    dt = _dtype(cfg)
+    cyc, n_groups, tail = cfg.layer_plan()
+    keys = jax.random.split(key, 16)
+
+    params: dict = {
+        "embed": (jax.random.normal(keys[0], (cfg.vocab, cfg.d_model)) * 0.02
+                  ).astype(dt),
+        "final_norm": jnp.zeros((cfg.d_model,), dt),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = (jax.random.normal(keys[1], (cfg.d_model, cfg.vocab))
+                             / math.sqrt(cfg.d_model)).astype(dt)
+
+    cross = cfg.enc_dec
+    params["scan"] = tuple(
+        _stack([_init_layer(jax.random.fold_in(keys[2], g * 64 + ci),
+                            cfg, kind, cross) for g in range(n_groups)])
+        for ci, kind in enumerate(cyc)) if n_groups else tuple()
+    params["tail"] = tuple(
+        _init_layer(jax.random.fold_in(keys[3], i), cfg, kind, cross)
+        for i, kind in enumerate(tail))
+
+    if cfg.shared_block_period:
+        params["shared_block"] = {
+            "ln1": jnp.zeros((cfg.d_model,), dt),
+            "attn": init_attention(keys[4], cfg, dt),
+            "ln2": jnp.zeros((cfg.d_model,), dt),
+            "mlp": init_mlp(keys[5], cfg.d_model, cfg.d_ff, cfg.mlp_gated, dt),
+        }
+
+    if cfg.enc_dec:
+        params["enc"] = {
+            "scan": _stack([_init_layer(jax.random.fold_in(keys[6], g),
+                                        cfg, "global")
+                            for g in range(cfg.n_enc_layers)]),
+            "final_norm": jnp.zeros((cfg.d_model,), dt),
+        }
+    return params
+
+
+# ------------------------------------------------------------------ caches
+
+
+def init_cache(cfg: ModelConfig, batch: int, cap: int) -> dict:
+    """Decode-state pytree for a KV capacity of ``cap`` tokens.  Local
+    (sliding-window) layers allocate only ``min(cap, window)`` slots."""
+    dt = _dtype(cfg)
+    cyc, n_groups, tail = cfg.layer_plan()
+
+    def layer_cache(kind: str, stack_n: int | None):
+        def z(*s, dtype=dt):
+            shape = (stack_n, *s) if stack_n is not None else s
+            return jnp.zeros(shape, dtype)
+
+        if kind == "rwkv6":
+            st = init_rwkv6_state(cfg, batch)
+            return {"rwkv_state": jax.tree.map(
+                lambda a: (jnp.zeros((stack_n, *a.shape), a.dtype)
+                           if stack_n is not None else a), st)}
+        if kind.startswith("mamba2"):
+            st = init_mamba2_state(cfg, batch)
+            c = {"mamba_state": jax.tree.map(
+                lambda a: (jnp.zeros((stack_n, *a.shape), a.dtype)
+                           if stack_n is not None else a), st)}
+            if kind == "mamba2+shared":
+                c["k"] = z(batch, cap, cfg.n_kv_heads, cfg.head_dim)
+                c["v"] = z(batch, cap, cfg.n_kv_heads, cfg.head_dim)
+            return c
+        span = min(cap, cfg.window) if kind.startswith("local") else cap
+        c = {"k": z(batch, span, cfg.n_kv_heads, cfg.head_dim),
+             "v": z(batch, span, cfg.n_kv_heads, cfg.head_dim)}
+        if kind.startswith("local"):
+            c["pos"] = jnp.full((stack_n, batch, span) if stack_n is not None
+                                else (batch, span), -1, jnp.int32)
+        if cfg.enc_dec:
+            c["xk"] = z(batch, cap, cfg.n_kv_heads, cfg.head_dim)
+            c["xv"] = z(batch, cap, cfg.n_kv_heads, cfg.head_dim)
+            c["x_len"] = jnp.zeros((stack_n,) if stack_n is not None else (),
+                                   jnp.int32)
+        return c
+
+    return {
+        "scan": tuple(layer_cache(kind, n_groups) for kind in cyc)
+        if n_groups else tuple(),
+        "tail": tuple(layer_cache(kind, None) for kind in tail),
+    }
+
+
+def _cache_cap(cache) -> int:
+    caps = [l.shape[-3] for l in jax.tree.leaves(cache)
+            if hasattr(l, "ndim") and l.ndim >= 4]
+    return max(caps) if caps else 0
+
+
+# ------------------------------------------------------------------ layers
+
+
+def _project_kv(ap, h, cfg, kind, positions):
+    B, S, _ = h.shape
+    k = (h @ ap["wk"]).reshape(B, S, cfg.n_kv_heads, cfg.head_dim)
+    v = (h @ ap["wv"]).reshape(B, S, cfg.n_kv_heads, cfg.head_dim)
+    if cfg.qk_norm:
+        k = rms_norm(k, ap["k_norm"], cfg.norm_eps)
+    if not cfg.enc_dec:
+        theta = (cfg.rope_local_theta if (kind == "local" and
+                                          cfg.rope_local_theta) else
+                 cfg.rope_theta)
+        if cfg.mrope_sections is not None:
+            from .layers import apply_mrope
+
+            k = apply_mrope(k, positions, theta, cfg.mrope_sections)
+        else:
+            k = apply_rope(k, positions, theta)
+    return k, v
+
+
+def _project_q(ap, h, cfg, kind, positions):
+    B, S, _ = h.shape
+    q = (h @ ap["wq"]).reshape(B, S, cfg.n_heads, cfg.head_dim)
+    if cfg.qk_norm:
+        q = rms_norm(q, ap["q_norm"], cfg.norm_eps)
+    if not cfg.enc_dec:
+        theta = (cfg.rope_local_theta if (kind == "local" and
+                                          cfg.rope_local_theta) else
+                 cfg.rope_theta)
+        if cfg.mrope_sections is not None:
+            from .layers import apply_mrope
+
+            q = apply_mrope(q, positions, theta, cfg.mrope_sections)
+        else:
+            q = apply_rope(q, positions, theta)
+    return q
+
+
+def _self_attention(ap, h, cfg, kind, positions, cache, pos, decode, causal):
+    """Self attention in three modes: full-sequence, prefill-fill, decode."""
+    akind = kind.split("+")[0]
+    new_cache = {}
+    if decode:
+        q = _project_q(ap, h, cfg, akind, pos[:, None]
+                       if positions is None else positions)
+        k, v = _project_kv(ap, h, cfg, akind,
+                           pos[:, None] if positions is None else positions)
+        bidx = jnp.arange(h.shape[0])
+        if "pos" in cache:                      # local ring buffer
+            span = cache["k"].shape[-3]
+            slot = pos % span
+            ck = cache["k"].at[bidx, slot].set(k[:, 0])
+            cv = cache["v"].at[bidx, slot].set(v[:, 0])
+            cp = cache["pos"].at[bidx, slot].set(pos)
+            mask = ((cp <= pos[:, None]) & (cp >= 0) &
+                    (cp > (pos - cfg.window)[:, None]))
+            new_cache.update({"k": ck, "v": cv, "pos": cp})
+        else:
+            ck = cache["k"].at[bidx, pos].set(k[:, 0])
+            cv = cache["v"].at[bidx, pos].set(v[:, 0])
+            tpos = jnp.arange(ck.shape[-3])[None, :]
+            mask = tpos <= pos[:, None]
+            new_cache.update({"k": ck, "v": cv})
+        out = _sdpa(q, ck, cv, mask[:, None, None, None, :], cfg)
+        return out @ ap["wo"], new_cache
+
+    B, S, _ = h.shape
+    q = _project_q(ap, h, cfg, akind, positions)
+    k, v = _project_kv(ap, h, cfg, akind, positions)
+    # sequence-parallel attention: when the head count does not divide the
+    # model axis, GSPMD would otherwise shard the contraction over head_dim
+    # and all-reduce every [chunk, T] logits slab; sharding the query
+    # *sequence* instead keeps softmax rows local (k/v replicate over model,
+    # which is cheap for GQA's small KV heads).
+    q = constrain(q, "attn_q")
+    k = constrain(k, "attn_kv")
+    v = constrain(v, "attn_kv")
+
+    def mask_fn(qpos, kpos):
+        qp, kp = qpos[:, None], kpos[None, :]
+        m = (kp <= qp) if causal else jnp.ones((qpos.shape[0],
+                                                kpos.shape[0]), bool)
+        m = m & (kpos >= 0)[None, :]            # banded path left-pads K/V
+        if akind == "local":
+            m = m & (jnp.abs(kp - qp) < cfg.window)
+        return m
+
+    out = sdpa_chunked(q, k, v, cfg, mask_fn,
+                       local_window=cfg.window if (akind == "local" and
+                                                   causal) else None)
+    out = constrain(out, "attn_out")
+    if cache is not None:                       # prefill: fill the cache
+        if "pos" in cache:
+            span = cache["k"].shape[-3]
+            take = min(S, span)
+            idx = (jnp.arange(S - take, S) % span)
+            ck = cache["k"].at[:, idx].set(k[:, S - take:])
+            cv = cache["v"].at[:, idx].set(v[:, S - take:])
+            cp = cache["pos"].at[:, idx].set(
+                jnp.arange(S - take, S, dtype=jnp.int32)[None, :])
+            new_cache.update({"k": ck, "v": cv, "pos": cp})
+        else:
+            ck = cache["k"].at[:, :S].set(k)
+            cv = cache["v"].at[:, :S].set(v)
+            new_cache.update({"k": ck, "v": cv})
+    return out @ ap["wo"], new_cache
+
+
+def _cross_attention(p, x, cfg, enc_out, cache, decode):
+    """Whisper cross attention; caches encoder K/V at prefill."""
+    new_cache = {}
+    h = rms_norm(x, p["ln_cross"], cfg.norm_eps)
+    B, S, _ = h.shape
+    q = (h @ p["cross"]["wq"]).reshape(B, S, cfg.n_heads, cfg.head_dim)
+    if decode:
+        xk, xv = cache["xk"], cache["xv"]
+        mask = (jnp.arange(xk.shape[1])[None, :] < cache["x_len"]
+                )[:, None, None, None, :] if cache["x_len"].ndim else \
+            (jnp.arange(xk.shape[1]) < cache["x_len"])[None, None, None, None, :]
+    else:
+        T = enc_out.shape[1]
+        xk = (enc_out @ p["cross"]["wk"]).reshape(B, T, cfg.n_kv_heads,
+                                                  cfg.head_dim)
+        xv = (enc_out @ p["cross"]["wv"]).reshape(B, T, cfg.n_kv_heads,
+                                                  cfg.head_dim)
+        if cache is not None:
+            cap = cache["xk"].shape[-3]
+            new_cache["xk"] = cache["xk"].at[:, :T].set(xk[:, :cap])
+            new_cache["xv"] = cache["xv"].at[:, :T].set(xv[:, :cap])
+            new_cache["x_len"] = jnp.asarray(min(T, cap), jnp.int32)
+        mask = jnp.ones((1, 1, 1, S, xk.shape[1]), bool)
+    out = _sdpa(q, xk, xv, mask, cfg)
+    return x + out @ p["cross"]["wo"], new_cache
+
+
+def _attn_layer(p, x, cfg, kind, positions, cache, pos, enc_out, decode,
+                causal):
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    a, new_cache = _self_attention(p["attn"], h, cfg, kind, positions,
+                                   cache, pos, decode, causal)
+    if cfg.post_block_norm:
+        a = rms_norm(a, p["post_ln1"], cfg.norm_eps)
+    x = x + a
+
+    if "cross" in p and (enc_out is not None or
+                         (cache is not None and "xk" in cache)):
+        x, nc = _cross_attention(p, x, cfg, enc_out, cache, decode)
+        new_cache.update(nc)
+
+    h = rms_norm(x, p["ln2"], cfg.norm_eps)
+    aux = jnp.zeros((), jnp.float32)
+    if "moe" in p:
+        f, aux = moe_block(p["moe"], h, cfg)
+    else:
+        f = mlp_block(p["mlp"], h, cfg.act)
+    if cfg.post_block_norm:
+        f = rms_norm(f, p["post_ln2"], cfg.norm_eps)
+    return x + f, aux, new_cache
+
+
+def _layer_apply(p, x, cfg, kind, positions, shared_p, cache, pos, enc_out,
+                 decode, causal):
+    if kind == "rwkv6":
+        h = rms_norm(x, p["ln"], cfg.norm_eps)
+        st = cache["rwkv_state"] if cache is not None else None
+        if decode:
+            delta, st = rwkv6_decode(p["rwkv"], h, cfg, st)
+        else:
+            delta, st = rwkv6_block(p["rwkv"], h, cfg, st if cache is not None
+                                    else None)
+        nc = {"rwkv_state": st} if cache is not None else {}
+        return x + delta, jnp.zeros((), jnp.float32), nc
+    if kind.startswith("mamba2"):
+        h = rms_norm(x, p["ln"], cfg.norm_eps)
+        nc = {}
+        if decode:
+            S, conv = cache["mamba_state"]
+            delta, (S, conv) = mamba2_decode(p["mamba"], h, cfg, S, conv)
+            nc["mamba_state"] = (S, conv)
+        else:
+            st = cache["mamba_state"] if cache is not None else None
+            delta, st2 = mamba2_block(
+                p["mamba"], h, cfg,
+                state=None if st is None else st[0],
+                conv_state=None if st is None else st[1])
+            if cache is not None:
+                nc["mamba_state"] = st2
+        x = x + delta
+        if kind == "mamba2+shared":
+            sub = None
+            if cache is not None and "k" in cache:
+                sub = {"k": cache["k"], "v": cache["v"]}
+            x, aux, snc = _attn_layer(shared_p, x, cfg, "global", positions,
+                                      sub, pos, None, decode, causal)
+            nc.update(snc)
+            return x, aux, nc
+        return x, jnp.zeros((), jnp.float32), nc
+    return _attn_layer(p, x, cfg, kind, positions, cache, pos, enc_out,
+                       decode, causal)
+
+
+# ------------------------------------------------------------------ stacks
+
+
+def _run_stack(params, x, cfg, positions, *, cache=None, pos=None,
+               enc_out=None, decode=False, causal=True):
+    cyc, n_groups, tail = cfg.layer_plan()
+    shared_p = params.get("shared_block")
+    aux_total = jnp.zeros((), jnp.float32)
+
+    if n_groups:
+        def group_body(carry, scanned):
+            x, aux = carry
+            x = constrain(x, "act")
+            layer_ps, layer_cs = scanned
+            new_cs = []
+            for ci, kind in enumerate(cyc):
+                c = None if layer_cs is None else layer_cs[ci]
+                x, a, nc = _layer_apply(layer_ps[ci], x, cfg, kind, positions,
+                                        shared_p, c, pos, enc_out, decode,
+                                        causal)
+                aux = aux + a
+                new_cs.append(nc)
+            x = constrain(x, "act")
+            return (x, aux), tuple(new_cs)
+
+        if not decode:
+            group_body = jax.checkpoint(group_body)   # remat per layer group
+        scan_caches = cache["scan"] if cache is not None else None
+        (x, aux_total), new_scan = _scan(
+            group_body, (x, aux_total), (params["scan"], scan_caches))
+    else:
+        new_scan = tuple()
+
+    new_tail = []
+    for i, kind in enumerate(tail):
+        c = None if cache is None else cache["tail"][i]
+        x, a, nc = _layer_apply(params["tail"][i], x, cfg, kind, positions,
+                                shared_p, c, pos, enc_out, decode, causal)
+        aux_total = aux_total + a
+        new_tail.append(nc)
+
+    new_cache = None
+    if cache is not None:
+        new_cache = {"scan": new_scan, "tail": tuple(new_tail)}
+    return x, aux_total, new_cache
+
+
+# ------------------------------------------------------------------ forward
+
+
+def _embed_inputs(params, cfg, batch: dict):
+    dt = _dtype(cfg)
+    if cfg.enc_dec:
+        tok = batch["tokens"]
+        x = params["embed"][tok].astype(dt)
+        x = x + sincos_positions(tok.shape[1], cfg.d_model).astype(dt)[None]
+        positions = jnp.broadcast_to(jnp.arange(tok.shape[1]),
+                                     tok.shape).astype(jnp.int32)
+        return x, positions
+    if cfg.frontend == "patches" and "patch_embeds" in batch:
+        te = params["embed"][batch["tokens"]].astype(dt)
+        x = jnp.concatenate([batch["patch_embeds"].astype(dt), te], axis=1)
+    else:
+        x = params["embed"][batch["tokens"]].astype(dt)
+    S = x.shape[1]
+    if cfg.mrope_sections is not None and "positions" in batch:
+        positions = batch["positions"]
+    else:
+        positions = jnp.broadcast_to(jnp.arange(S), (x.shape[0], S)
+                                     ).astype(jnp.int32)
+    return x, positions
+
+
+def _encode(params, cfg, frames):
+    dt = _dtype(cfg)
+    x = frames.astype(dt) + sincos_positions(frames.shape[1],
+                                             cfg.d_model).astype(dt)[None]
+    positions = jnp.broadcast_to(jnp.arange(frames.shape[1]),
+                                 frames.shape[:2]).astype(jnp.int32)
+
+    def body(carry, layer_ps):
+        y, _, _ = _layer_apply(layer_ps, carry, cfg, "global", positions,
+                               None, None, None, None, False, False)
+        return y, None
+
+    x, _ = _scan(body, x, params["enc"]["scan"])
+    return rms_norm(x, params["enc"]["final_norm"], cfg.norm_eps)
+
+
+def _logits(params, cfg, x):
+    head = params.get("lm_head")
+    if head is None:
+        head = params["embed"].T
+    logits = (x @ head).astype(jnp.float32)
+    if cfg.final_logit_softcap:
+        c = cfg.final_logit_softcap
+        logits = jnp.tanh(logits / c) * c
+    return logits
+
+
+def forward(params, cfg: ModelConfig, batch: dict, *, cache=None,
+            decode=False, last_only=False, return_hidden=False):
+    """Returns (logits | hidden, aux_loss, new_cache).
+
+    ``last_only``: project only the final position to logits (prefill).
+    ``return_hidden``: skip the LM head entirely (the chunked-CE loss
+    projects per sequence chunk to bound logits memory)."""
+    enc_out = None
+    if cfg.enc_dec and "frames" in batch:
+        enc_out = _encode(params, cfg, batch["frames"])
+
+    if decode:
+        tok = batch["token"]
+        pos = batch["pos"]
+        dt = _dtype(cfg)
+        x = params["embed"][tok].astype(dt)
+        if cfg.enc_dec:
+            table = sincos_positions(_cache_cap(cache), cfg.d_model).astype(dt)
+            x = x + table[pos][:, None, :]
+            positions = None
+        elif cfg.mrope_sections is not None:
+            positions = batch["positions"]
+        else:
+            positions = None
+        x, aux, new_cache = _run_stack(params, x, cfg, positions, cache=cache,
+                                       pos=pos, enc_out=enc_out, decode=True)
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        return _logits(params, cfg, x), aux, new_cache
+
+    x, positions = _embed_inputs(params, cfg, batch)
+    x, aux, new_cache = _run_stack(params, x, cfg, positions, cache=cache,
+                                   enc_out=enc_out, decode=False)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if return_hidden:
+        return x, aux, new_cache
+    if last_only:
+        return _logits(params, cfg, x[:, -1:, :]), aux, new_cache
+    return _logits(params, cfg, x), aux, new_cache
+
+
+# ------------------------------------------------------------------ steps
+
+
+CE_CHUNK = 512
+
+
+def _chunked_ce(params, cfg, x, labels, chunk: int = CE_CHUNK):
+    """Cross entropy with per-chunk LM-head projection: the [B, S, vocab]
+    logits tensor never materialises (live set: one [B, chunk, vocab] slab,
+    vocab-sharded via the "logits" constraint)."""
+    B, S, _ = x.shape
+    if S % chunk:
+        chunk = S
+    n = S // chunk
+    head = params.get("lm_head")
+    if head is None:
+        head = params["embed"].T
+
+    @jax.checkpoint
+    def one(xs, ls):
+        lg = constrain((xs @ head).astype(jnp.float32), "logits")
+        if cfg.final_logit_softcap:
+            c = cfg.final_logit_softcap
+            lg = jnp.tanh(lg / c) * c
+        lse = jax.nn.logsumexp(lg, axis=-1)
+        ll = jnp.take_along_axis(lg, ls[..., None], axis=-1)[..., 0]
+        return (lse - ll).sum()
+
+    def body(acc, i):
+        xs = jax.lax.dynamic_slice_in_dim(x, i * chunk, chunk, 1)
+        ls = jax.lax.dynamic_slice_in_dim(labels, i * chunk, chunk, 1)
+        return acc + one(xs, ls), None
+
+    total, _ = _scan(body, jnp.zeros((), jnp.float32), jnp.arange(n))
+    return total / (B * S)
+
+
+def loss_fn(params, cfg: ModelConfig, batch: dict):
+    hidden, aux, _ = forward(params, cfg, batch, return_hidden=True)
+    labels = batch["labels"]
+    S = min(hidden.shape[1], labels.shape[1])
+    ce = _chunked_ce(params, cfg, hidden[:, -S:, :], labels[:, -S:])
+    return ce + 0.01 * aux
+
+
+def train_step_fn(cfg: ModelConfig, optimizer):
+    """(params, opt_state, batch) -> (params, opt_state, loss)."""
+
+    def step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: loss_fn(p, cfg, batch))(params)
+        params, opt_state = optimizer.update(params, grads, opt_state)
+        return params, opt_state, loss
+
+    return step
+
+
+def prefill_fn(cfg: ModelConfig, with_cache: bool = False):
+    """Forward over the prompt.  ``with_cache``: also fill a decode cache."""
+
+    if not with_cache:
+        def prefill(params, batch):
+            logits, _, _ = forward(params, cfg, batch, last_only=True)
+            return logits[:, -1, :]
+        return prefill
+
+    def prefill_cache(params, cache, batch):
+        logits, _, new_cache = forward(params, cfg, batch, cache=cache)
+        return logits[:, -1, :], new_cache
+
+    return prefill_cache
+
+
+def decode_fn(cfg: ModelConfig):
+    def decode(params, cache, batch):
+        logits, _, new_cache = forward(params, cfg, batch, cache=cache,
+                                       decode=True)
+        return logits[:, -1, :], new_cache
+
+    return decode

@@ -1,0 +1,175 @@
+"""Mamba2 / SSD block (arXiv:2405.21060), TPU-shaped.
+
+State-space recurrence per head h with scalar decay:
+
+    S_t = a_t * S_{t-1} + (dt_t x_t) (x) B_t          S in R^{hd x state}
+    y_t = C_t . S_t + D * x_t,   a_t = exp(-exp(A) dt_t)
+
+Training/prefill uses the chunked (SSD) form: within a chunk of length L the
+recurrence unrolls into causal matmuls via cumulative log-decays; the state is
+carried across chunks with a lax.scan — everything is MXU-shaped, avoiding an
+O(T) elementwise dependence chain and the O(T x hd x state) associative-scan
+intermediates.  Decode is the single-step recurrence.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .layers import rms_norm
+
+__all__ = ["init_mamba2", "mamba2_block", "mamba2_decode", "init_mamba2_state"]
+
+# Chunk length trades intra-chunk [B, H, L, L] decay-matrix traffic against
+# per-chunk *fixed* costs (the [B, H, hd, state] carry is read+written every
+# chunk).  Measured on the zamba2 train cell (§Perf it.4): L=64 -> 370 s,
+# L=128 -> 226 s, L=256 -> 170 s of HBM time — the state carry dominates, so
+# larger chunks win on traffic, but L=256 blows the per-chip temp memory
+# (146 GB).  L=128 is the feasible optimum; the real fix is a Pallas SSD
+# kernel that keeps the decay matrices in VMEM.
+CHUNK = 128
+
+
+def init_mamba2(key, cfg, dtype) -> dict:
+    d, din = cfg.d_model, cfg.d_inner
+    H = cfg.ssm_heads
+    st = cfg.ssm_state
+    ks = jax.random.split(key, 6)
+    si = 1.0 / math.sqrt(d)
+    return {
+        # projections: z (gate), x, B, C, dt
+        "in_proj": (jax.random.normal(ks[0], (d, 2 * din + 2 * st + H)) * si
+                    ).astype(dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv, din)) /
+                   math.sqrt(cfg.ssm_conv)).astype(dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, float(max(2, H)), H)).astype(jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "norm": jnp.zeros((din,), dtype),
+        "out_proj": (jax.random.normal(ks[2], (din, d)) / math.sqrt(din)
+                     ).astype(dtype),
+    }
+
+
+def _split_proj(p, u, cfg):
+    din, st, H = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    z, x, Bm, Cm, dt = jnp.split(u @ p["in_proj"],
+                                 [din, 2 * din, 2 * din + st, 2 * din + 2 * st],
+                                 axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    return z, x, Bm, Cm, dt
+
+
+def _causal_conv(x, w, state=None):
+    """Depthwise causal conv; x [B, T, din], w [K, din].
+    With ``state`` [B, K-1, din] performs the incremental step."""
+    K = w.shape[0]
+    if state is not None:
+        xa = jnp.concatenate([state, x], axis=1)          # [B, K-1+T, din]
+        new_state = xa[:, -(K - 1):, :] if K > 1 else state
+    else:
+        xa = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+        new_state = xa[:, -(K - 1):, :] if K > 1 else None
+    out = sum(xa[:, i:i + x.shape[1], :] * w[i] for i in range(K))
+    return jax.nn.silu(out), new_state
+
+
+def _ssd_chunked(xh, Bm, Cm, dt, A_log, S0):
+    """Chunked SSD scan.
+
+    xh [B, T, H, hd]; Bm/Cm [B, T, st]; dt [B, T, H]; S0 [B, H, hd, st].
+    Returns (y [B, T, H, hd], S_final)."""
+    Bsz, T, H, hd = xh.shape
+    st = Bm.shape[-1]
+    L = min(CHUNK, T)
+    assert T % L == 0, (T, L)
+    nC = T // L
+
+    loga = (-jnp.exp(A_log)[None, :, None] *
+            dt.transpose(0, 2, 1).astype(jnp.float32))     # [B, H, T]
+    u = xh * dt[..., None].astype(xh.dtype)                # dt-weighted input
+
+    # the [B, H, L, L] transition matrix is the HBM hog; in bf16 production
+    # mode it is formed and consumed in bf16 (f32 accumulation in the dot),
+    # halving the dominant memory-roofline term (§Perf it.4)
+    m_dtype = xh.dtype if xh.dtype == jnp.bfloat16 else jnp.float32
+
+    def chunk_step(S, args):
+        u_c, B_c, C_c, la_c = args                         # [B,L,H,hd] etc
+        l = jnp.cumsum(la_c, axis=-1)                      # [B, H, L] inclusive
+        # intra-chunk: M[t, j] = (C_t . B_j) exp(l_t - l_j), j <= t
+        cb = jnp.einsum("bts,bjs->btj", C_c.astype(jnp.float32),
+                        B_c.astype(jnp.float32))           # [B, L, L]
+        dec = jnp.exp(l[..., :, None] - l[..., None, :])   # [B, H, L, L]
+        causal = jnp.tril(jnp.ones((L, L), bool))
+        M = jnp.where(causal, cb[:, None] * dec, 0.0).astype(m_dtype)
+        y = jnp.einsum("bhtj,bjhp->bthp", M, u_c.astype(m_dtype),
+                       preferred_element_type=jnp.float32)
+        # inter-chunk: y_t += exp(l_t) * (S0 @ C_t)
+        y = y + jnp.einsum("bht,bhps,bts->bthp", jnp.exp(l),
+                           S, C_c.astype(jnp.float32))
+        # state update: S' = exp(l_L) S + sum_j exp(l_L - l_j) u_j (x) B_j
+        w = jnp.exp(l[..., -1:] - l)                       # [B, H, L]
+        S = (S * jnp.exp(l[..., -1])[..., None, None] +
+             jnp.einsum("bhj,bjhp,bjs->bhps", w, u_c.astype(jnp.float32),
+                        B_c.astype(jnp.float32)))
+        return S, y
+
+    def resh(a):
+        return a.reshape(Bsz, nC, L, *a.shape[2:]).swapaxes(0, 1)
+
+    la = loga.reshape(Bsz, H, nC, L).transpose(2, 0, 1, 3)  # [nC, B, H, L]
+    from .partitioning import scan_unroll
+
+    S_fin, ys = jax.lax.scan(chunk_step, S0.astype(jnp.float32),
+                             (resh(u), resh(Bm), resh(Cm), la),
+                             unroll=True if scan_unroll() else 1)
+    y = ys.swapaxes(0, 1).reshape(Bsz, T, H, hd)
+    return y.astype(xh.dtype), S_fin
+
+
+def mamba2_block(p: dict, u: jax.Array, cfg, state=None, conv_state=None):
+    """Full-sequence Mamba2 block. u [B, T, d] -> (y, (S, conv_state))."""
+    B, T, d = u.shape
+    H, st = cfg.ssm_heads, cfg.ssm_state
+    hd = cfg.d_inner // H
+    z, x, Bm, Cm, dt = _split_proj(p, u, cfg)
+    x, conv_state = _causal_conv(x, p["conv_w"], conv_state)
+    xh = x.reshape(B, T, H, hd)
+    S0 = (jnp.zeros((B, H, hd, st), jnp.float32) if state is None else state)
+    y, S = _ssd_chunked(xh, Bm, Cm, dt, p["A_log"], S0)
+    y = y + xh.astype(jnp.float32) * p["D"][None, None, :, None]
+    y = y.reshape(B, T, cfg.d_inner).astype(u.dtype)
+    y = rms_norm(y, p["norm"], cfg.norm_eps) * jax.nn.silu(z)
+    return y @ p["out_proj"], (S, conv_state)
+
+
+def init_mamba2_state(cfg, batch: int):
+    H, st = cfg.ssm_heads, cfg.ssm_state
+    hd = cfg.d_inner // H
+    return (jnp.zeros((batch, H, hd, st), jnp.float32),
+            jnp.zeros((batch, cfg.ssm_conv - 1, cfg.d_inner), jnp.float32))
+
+
+def mamba2_decode(p: dict, u: jax.Array, cfg, state, conv_state):
+    """Single-step recurrence. u [B, 1, d]."""
+    B, _, d = u.shape
+    H, st = cfg.ssm_heads, cfg.ssm_state
+    hd = cfg.d_inner // H
+    z, x, Bm, Cm, dt = _split_proj(p, u, cfg)
+    x, conv_state = _causal_conv(x, p["conv_w"],
+                                 conv_state.astype(x.dtype))
+    xh = x.reshape(B, H, hd)
+    dt1 = dt[:, 0]                                          # [B, H]
+    a = jnp.exp(-jnp.exp(p["A_log"])[None] * dt1)           # [B, H]
+    upd = jnp.einsum("bhp,bs->bhps", xh.astype(jnp.float32) * dt1[..., None],
+                     Bm[:, 0].astype(jnp.float32))
+    S = state * a[..., None, None] + upd
+    y = jnp.einsum("bhps,bs->bhp", S, Cm[:, 0].astype(jnp.float32))
+    y = y + xh.astype(jnp.float32) * p["D"][None, :, None]
+    y = y.reshape(B, 1, cfg.d_inner).astype(u.dtype)
+    y = rms_norm(y, p["norm"], cfg.norm_eps) * jax.nn.silu(z)
+    return y @ p["out_proj"], (S, conv_state)

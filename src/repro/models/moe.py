@@ -1,0 +1,91 @@
+"""Mixture-of-Experts block: top-k routing with capacity-based dispatch
+(GShard-style), expert-parallel over the ``model`` mesh axis.
+
+Dispatch is computed per sequence (token groups of size S) so the position
+cumsum stays shard-local under batch sharding; decode (S = 1) dispatches over
+the batch axis instead.  Expert compute is a dense [E, C, d] x [E, d, ff]
+einsum — FLOPs proportional to *active* parameters (capacity-bounded), unlike
+a compute-all-experts dense dispatch.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .layers import init_mlp, mlp_block
+
+__all__ = ["init_moe", "moe_block"]
+
+
+def init_moe(key, cfg, dtype) -> dict:
+    d, ff, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 5)
+    si, so = 1.0 / math.sqrt(d), 1.0 / math.sqrt(ff)
+    p = {
+        "router": (jax.random.normal(ks[0], (d, E)) * si).astype(jnp.float32),
+        "w_gate": (jax.random.normal(ks[1], (E, d, ff)) * si).astype(dtype),
+        "w_up": (jax.random.normal(ks[2], (E, d, ff)) * si).astype(dtype),
+        "w_down": (jax.random.normal(ks[3], (E, ff, d)) * so).astype(dtype),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = init_mlp(ks[4], d, ff * cfg.n_shared_experts, True, dtype)
+    return p
+
+
+def _dispatch_group(p, x, cfg):
+    """x [N, d] one dispatch group; returns (y [N, d], aux_loss scalar)."""
+    N, d = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    ff = cfg.d_ff
+    cap = max(1, int(math.ceil(N * k * cfg.capacity_factor / E)))
+
+    logits = (x.astype(jnp.float32) @ p["router"])            # [N, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    w, idx = jax.lax.top_k(probs, k)                          # [N, k]
+    w = w / jnp.clip(w.sum(-1, keepdims=True), 1e-9)
+
+    onehot = jax.nn.one_hot(idx, E, dtype=jnp.float32)        # [N, k, E]
+    flat = onehot.reshape(N * k, E)                           # slot-major
+    pos = jnp.cumsum(flat, axis=0) - flat                     # position per expert
+    pos = (pos * flat).sum(-1).astype(jnp.int32)              # [N*k]
+    e_flat = idx.reshape(N * k)
+    keep = (pos < cap) & (w.reshape(N * k) > 0)
+
+    slot = jnp.where(keep, e_flat * cap + pos, E * cap)       # overflow -> dropped
+    buf = jnp.zeros((E * cap + 1, d), dtype=x.dtype)
+    tok = jnp.repeat(jnp.arange(N), k)
+    buf = buf.at[slot].add(x[tok])
+    buf = buf[:-1].reshape(E, cap, d)
+
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, p["w_gate"]))
+    h = h * jnp.einsum("ecd,edf->ecf", buf, p["w_up"])
+    out = jnp.einsum("ecf,efd->ecd", h, p["w_down"])          # [E, cap, d]
+
+    gathered = out.reshape(E * cap, d)
+    y_slots = jnp.where(keep[:, None], gathered[jnp.clip(slot, 0, E * cap - 1)],
+                        0.0)
+    y = jnp.zeros((N, d), dtype=x.dtype)
+    y = y.at[tok].add(y_slots * w.reshape(N * k, 1).astype(x.dtype))
+
+    # load-balancing auxiliary loss (Switch): E * sum_e f_e * P_e
+    f = onehot.sum(axis=(0, 1)) / max(1, N)                   # fraction routed
+    P = probs.mean(axis=0)
+    aux = E * jnp.sum(f * P)
+    return y, aux
+
+
+def moe_block(p: dict, x: jax.Array, cfg) -> tuple[jax.Array, jax.Array]:
+    """x [B, S, d] -> (y [B, S, d], aux loss scalar)."""
+    B, S, d = x.shape
+    if S == 1:
+        y, aux = _dispatch_group(p, x[:, 0, :], cfg)
+        y = y[:, None, :]
+    else:
+        y, aux = jax.vmap(lambda xb: _dispatch_group(p, xb, cfg))(x)
+        aux = aux.mean()
+    if cfg.n_shared_experts:
+        y = y + mlp_block(p["shared"], x, cfg.act)
+    return y, aux

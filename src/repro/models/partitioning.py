@@ -1,0 +1,66 @@
+"""Activation-partitioning hooks.
+
+Launchers configure global PartitionSpecs for the residual stream and the
+logits; the model applies them via ``constrain`` at layer-group boundaries.
+When unset (unit tests, single CPU), everything is a no-op.
+
+The residual-stream spec realises Megatron-style sequence parallelism: with
+``P(("pod","data"), "model", None)`` the scan-boundary activations shard
+their sequence axis over the model axis, cutting the per-device live
+activation set by the TP degree; GSPMD inserts the all-gather/reduce-scatter
+pairs around attention/MLP automatically.
+"""
+
+from __future__ import annotations
+
+from contextlib import contextmanager
+
+import jax
+
+_KEYS = ("act", "logits", "attn_q", "attn_kv", "attn_out", "attn_chunk",
+         "attn_chunks")
+_SPECS: dict[str, object] = {k: None for k in _KEYS}
+_SPECS["unroll"] = False
+
+
+def set_specs(**kw) -> None:
+    for k in _KEYS:
+        _SPECS[k] = kw.get(k)
+
+
+@contextmanager
+def activation_specs(**kw):
+    old = dict(_SPECS)
+    set_specs(**kw)
+    try:
+        yield
+    finally:
+        _SPECS.update(old)
+
+
+@contextmanager
+def unrolled_scans(on: bool = True):
+    """Unroll every lax.scan in the model stack.  XLA's HloCostAnalysis counts
+    a while body once regardless of trip count, so the roofline cost pass
+    lowers with scans unrolled (exact FLOP/byte counts); production lowering
+    keeps scans (compact HLO, fast compiles)."""
+    old = _SPECS["unroll"]
+    _SPECS["unroll"] = on
+    try:
+        yield
+    finally:
+        _SPECS["unroll"] = old
+
+
+def scan_unroll() -> bool:
+    return bool(_SPECS["unroll"])
+
+
+def constrain(x, which: str):
+    spec = _SPECS.get(which)
+    if spec is None:
+        return x
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except Exception:
+        return x

@@ -1,0 +1,178 @@
+"""RWKV-6 "Finch" block (arXiv:2404.05892): attention-free time mix with
+data-dependent per-channel decay, plus channel mix.
+
+Per head (key/value dim = hd):
+
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T            S in R^{hd x hd}
+    y_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T)
+    w_t = exp(-exp(w0 + lora(x_t)))                (data-dependent decay)
+
+Training/prefill uses a chunked parallel form (cumulative log-decay products
+inside a chunk, state carried across chunks by lax.scan) so the hot loop is
+matmuls; decode is the single-step recurrence.  Token-shift mixes x_{t-1}
+into the projections with learned per-channel coefficients (the static-mu
+simplification of the paper's dynamic mixing; noted in DESIGN.md).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .layers import rms_norm
+
+__all__ = ["init_rwkv6", "rwkv6_block", "rwkv6_decode", "init_rwkv6_state"]
+
+CHUNK = 64
+LORA = 64
+
+
+def init_rwkv6(key, cfg, dtype) -> dict:
+    d = cfg.d_model
+    hd = cfg.rwkv_head_size
+    H = d // hd
+    ks = jax.random.split(key, 12)
+    si = 1.0 / math.sqrt(d)
+    return {
+        "mu": jnp.full((5, d), 0.5, dtype),            # shift mix for r,k,v,g,w
+        "wr": (jax.random.normal(ks[0], (d, d)) * si).astype(dtype),
+        "wk": (jax.random.normal(ks[1], (d, d)) * si).astype(dtype),
+        "wv": (jax.random.normal(ks[2], (d, d)) * si).astype(dtype),
+        "wg": (jax.random.normal(ks[3], (d, d)) * si).astype(dtype),
+        "wo": (jax.random.normal(ks[4], (d, d)) * si).astype(dtype),
+        "w0": jnp.full((d,), -4.0, jnp.float32),       # decay bias: slow decay
+        "w1": (jax.random.normal(ks[5], (d, LORA)) * si).astype(dtype),
+        "w2": (jax.random.normal(ks[6], (LORA, d)) /
+               math.sqrt(LORA)).astype(dtype),
+        "u": (jax.random.normal(ks[7], (H, hd)) * 0.1).astype(jnp.float32),
+        "ln_x": jnp.zeros((d,), dtype),
+        # channel mix
+        "cmu": jnp.full((2, d), 0.5, dtype),
+        "ck": (jax.random.normal(ks[8], (d, cfg.d_ff)) * si).astype(dtype),
+        "cv": (jax.random.normal(ks[9], (cfg.d_ff, d)) /
+               math.sqrt(cfg.d_ff)).astype(dtype),
+        "cr": (jax.random.normal(ks[10], (d, d)) * si).astype(dtype),
+    }
+
+
+def _shift(x, mu, last):
+    """Token shift: mix x_{t-1} (or carry ``last`` for t=0) into x_t."""
+    prev = jnp.concatenate([last[:, None, :], x[:, :-1, :]], axis=1)
+    return x * mu + prev * (1.0 - mu)
+
+
+def _wkv_chunked(r, k, v, logw, u, H, hd):
+    """r/k/v [B, T, H, hd] (f32); logw [B, T, H, hd] (negative); u [H, hd]."""
+    B, T, _, _ = r.shape
+    L = min(CHUNK, T)
+    assert T % L == 0
+    nC = T // L
+
+    def chunk(S, args):
+        rc, kc, vc, lw = args                              # [B, L, H, hd]
+        l = jnp.cumsum(lw, axis=1)                         # inclusive logdecay
+        lprev = l - lw                                     # exclusive
+        rt = rc * jnp.exp(lprev)                           # r~_t = r_t P_{t-1}
+        kt = kc * jnp.exp(-l)                              # k~_j = k_j / P_j
+        A = jnp.einsum("bthc,bjhc->bhtj", rt, kt)          # [B, H, L, L]
+        strict = jnp.tril(jnp.ones((L, L), bool), k=-1)
+        A = jnp.where(strict, A, 0.0)
+        diag = jnp.einsum("bthc,hc,bthc->bth", rc, u, kc)  # bonus u term
+        y = jnp.einsum("bhtj,bjhd->bthd", A, vc)
+        y = y + diag[..., None] * vc
+        y = y + jnp.einsum("bthc,bhcd->bthd", rt, S)       # inter-chunk
+        # S' = diag(P_L) S + sum_j (P_L / P_j) k_j v_j^T
+        S = (S * jnp.exp(l[:, -1])[..., None] +
+             jnp.einsum("bjhc,bjhd->bhcd",
+                        kc * jnp.exp(l[:, -1:] - l), vc))
+        return S, y
+
+    def resh(a):
+        return a.reshape(B, nC, L, H, hd).swapaxes(0, 1)
+
+    S0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+    from .partitioning import scan_unroll
+
+    S_fin, ys = jax.lax.scan(chunk, S0, (resh(r), resh(k), resh(v), resh(logw)),
+                             unroll=True if scan_unroll() else 1)
+    return ys.swapaxes(0, 1).reshape(B, T, H, hd), S_fin
+
+
+def _projections(p, x, last, cfg):
+    d = cfg.d_model
+    hd = cfg.rwkv_head_size
+    H = d // hd
+    B, T, _ = x.shape
+    xr = _shift(x, p["mu"][0], last)
+    xk = _shift(x, p["mu"][1], last)
+    xv = _shift(x, p["mu"][2], last)
+    xg = _shift(x, p["mu"][3], last)
+    xw = _shift(x, p["mu"][4], last)
+    r = (xr @ p["wr"]).reshape(B, T, H, hd).astype(jnp.float32)
+    k = (xk @ p["wk"]).reshape(B, T, H, hd).astype(jnp.float32)
+    v = (xv @ p["wv"]).reshape(B, T, H, hd).astype(jnp.float32)
+    g = jax.nn.silu(xg @ p["wg"])
+    logw = -jnp.exp(p["w0"] +
+                    (jnp.tanh(xw @ p["w1"]) @ p["w2"]).astype(jnp.float32))
+    logw = logw.reshape(B, T, H, hd)
+    return r, k, v, g, logw
+
+
+def rwkv6_block(p: dict, x: jax.Array, cfg, state=None):
+    """Time mix + channel mix over a full sequence. x [B, T, d]."""
+    B, T, d = x.shape
+    hd = cfg.rwkv_head_size
+    H = d // hd
+    last = jnp.zeros((B, d), x.dtype) if state is None else state[0]
+    r, k, v, g, logw = _projections(p, x, last, cfg)
+    y, S = _wkv_chunked(r, k, v, logw, p["u"], H, hd)
+    y = y.reshape(B, T, d).astype(x.dtype)
+    y = rms_norm(y, p["ln_x"], cfg.norm_eps) * g
+    out = y @ p["wo"]
+
+    # channel mix
+    h = x + out
+    clast = jnp.zeros((B, d), x.dtype) if state is None else state[2]
+    hk = _shift(h, p["cmu"][0], clast)
+    hr = _shift(h, p["cmu"][1], clast)
+    cm = (jnp.square(jax.nn.relu(hk @ p["ck"])) @ p["cv"])
+    cm = jax.nn.sigmoid(hr @ p["cr"]) * cm
+    new_state = (x[:, -1, :], S, h[:, -1, :])
+    return out + cm, new_state
+
+
+def init_rwkv6_state(cfg, batch: int):
+    d = cfg.d_model
+    hd = cfg.rwkv_head_size
+    H = d // hd
+    return (jnp.zeros((batch, d), jnp.bfloat16 if cfg.dtype == "bfloat16"
+                      else jnp.float32),
+            jnp.zeros((batch, H, hd, hd), jnp.float32),
+            jnp.zeros((batch, d), jnp.bfloat16 if cfg.dtype == "bfloat16"
+                      else jnp.float32))
+
+
+def rwkv6_decode(p: dict, x: jax.Array, cfg, state):
+    """Single-token step. x [B, 1, d]; state (last_x, S, last_h)."""
+    B, _, d = x.shape
+    hd = cfg.rwkv_head_size
+    H = d // hd
+    last_x, S, last_h = state
+    r, k, v, g, logw = _projections(p, x, last_x, cfg)
+    r1, k1, v1 = r[:, 0], k[:, 0], v[:, 0]                 # [B, H, hd]
+    w1 = jnp.exp(logw[:, 0])                               # decay in (0, 1)
+    kv = jnp.einsum("bhc,bhd->bhcd", k1, v1)
+    y = jnp.einsum("bhc,bhcd->bhd", r1, S + p["u"][..., None] * kv)
+    S = S * w1[..., None] + kv
+    y = y.reshape(B, 1, d).astype(x.dtype)
+    y = rms_norm(y, p["ln_x"], cfg.norm_eps) * g
+    out = y @ p["wo"]
+
+    h = x + out
+    hk = _shift(h, p["cmu"][0], last_h)
+    hr = _shift(h, p["cmu"][1], last_h)
+    cm = (jnp.square(jax.nn.relu(hk @ p["ck"])) @ p["cv"])
+    cm = jax.nn.sigmoid(hr @ p["cr"]) * cm
+    return out + cm, (x[:, -1, :], S, h[:, -1, :])

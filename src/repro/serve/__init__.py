@@ -1,0 +1,4 @@
+"""Batched serving engine: request queue, gang-scheduled batched prefill +
+masked decode with per-request lengths and EOS early exit."""
+
+from .engine import ServeEngine, Request  # noqa: F401

@@ -1,0 +1,139 @@
+"""Batched serving engine.
+
+Gang-scheduled batching: admit up to ``max_batch`` queued requests, left-pad
+prompts to a common length, run one batched prefill, then a jitted decode
+loop where finished requests are masked (EOS or per-request ``max_new``).
+Greedy sampling by default; temperature sampling optional.  The KV cache is
+allocated once per gang at ``cap = max_prompt + max_new`` (ring-bounded for
+sliding-window layers by ``init_cache``).
+
+Iteration-level continuous batching (per-step slot admission) is the known
+next step; the queue/latency accounting here is the substrate for it.
+"""
+
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models.lm import decode_fn, init_cache, prefill_fn
+
+__all__ = ["Request", "ServeEngine"]
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                  # [len] int32
+    max_new: int = 16
+    eos_id: int | None = None
+    submitted_at: float = field(default_factory=time.perf_counter)
+    tokens: list = field(default_factory=list)
+    first_token_at: float | None = None
+    done_at: float | None = None
+
+
+class ServeEngine:
+    def __init__(self, cfg, params, *, max_batch: int = 8,
+                 temperature: float = 0.0, seed: int = 0):
+        self.cfg = cfg
+        self.params = params
+        self.max_batch = max_batch
+        self.temperature = temperature
+        self._queue: deque[Request] = deque()
+        self._next_rid = 0
+        self._key = jax.random.PRNGKey(seed)
+        self._prefill = jax.jit(prefill_fn(cfg, with_cache=True))
+        self._decode = jax.jit(decode_fn(cfg))
+        self.completed: dict[int, Request] = {}
+
+    def submit(self, prompt, max_new: int = 16, eos_id: int | None = None) -> int:
+        rid = self._next_rid
+        self._next_rid += 1
+        self._queue.append(Request(rid, np.asarray(prompt, np.int32),
+                                   max_new, eos_id))
+        return rid
+
+    # -- one gang: admit, prefill, decode to completion --
+
+    def _sample(self, logits: jax.Array) -> jax.Array:
+        if self.temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        self._key, k = jax.random.split(self._key)
+        return jax.random.categorical(k, logits / self.temperature,
+                                      axis=-1).astype(jnp.int32)
+
+    def run_once(self) -> list[Request]:
+        if not self._queue:
+            return []
+        gang = [self._queue.popleft()
+                for _ in range(min(self.max_batch, len(self._queue)))]
+        B = len(gang)
+        lp = max(len(r.prompt) for r in gang)
+        max_new = max(r.max_new for r in gang)
+        cap = lp + max_new
+
+        # left-pad prompts so every last prompt token sits at index lp-1
+        toks = np.zeros((B, lp), np.int32)
+        for i, r in enumerate(gang):
+            toks[i, lp - len(r.prompt):] = r.prompt
+
+        cache = init_cache(self.cfg, B, cap=cap)
+        batch = {"tokens": jnp.asarray(toks)}
+        if self.cfg.enc_dec:
+            batch["frames"] = jnp.zeros((B, lp, self.cfg.d_model),
+                                        jnp.float32)
+        logits, cache = self._prefill(self.params, cache, batch)
+        nxt = self._sample(logits)
+        now = time.perf_counter()
+        for i, r in enumerate(gang):
+            r.first_token_at = now
+            r.tokens.append(int(nxt[i]))
+
+        alive = np.ones(B, bool)
+        for i, r in enumerate(gang):
+            if r.eos_id is not None and r.tokens[-1] == r.eos_id:
+                alive[i] = False
+        for step in range(max_new - 1):
+            if not alive.any():
+                break
+            dec = {"token": nxt[:, None],
+                   "pos": jnp.full((B,), lp + step, jnp.int32)}
+            if self.cfg.mrope_sections:
+                dec["positions"] = jnp.broadcast_to(
+                    jnp.asarray(lp + step, jnp.int32), (3, B, 1))
+            logits, cache = self._decode(self.params, cache, dec)
+            nxt = self._sample(logits)
+            for i, r in enumerate(gang):
+                if not alive[i]:
+                    continue
+                tok = int(nxt[i])
+                r.tokens.append(tok)
+                if (len(r.tokens) >= r.max_new or
+                        (r.eos_id is not None and tok == r.eos_id)):
+                    alive[i] = False
+        now = time.perf_counter()
+        for r in gang:
+            r.done_at = now
+            r.tokens = r.tokens[: r.max_new]
+            self.completed[r.rid] = r
+        return gang
+
+    def run(self) -> dict:
+        """Drain the queue; returns latency/throughput stats."""
+        n_tokens = 0
+        t0 = time.perf_counter()
+        while self._queue:
+            for r in self.run_once():
+                n_tokens += len(r.tokens)
+        dt = time.perf_counter() - t0
+        ttfts = [r.first_token_at - r.submitted_at
+                 for r in self.completed.values()]
+        return {"requests": len(self.completed), "tokens": n_tokens,
+                "wall_s": dt, "tok_per_s": n_tokens / max(dt, 1e-9),
+                "mean_ttft_s": float(np.mean(ttfts)) if ttfts else 0.0}

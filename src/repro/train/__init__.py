@@ -1,0 +1,4 @@
+"""Training substrate: hand-rolled AdamW, synthetic LM data pipeline, and the
+fault-tolerant training loop."""
+
+from .optimizer import AdamW  # noqa: F401

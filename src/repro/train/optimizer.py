@@ -1,0 +1,70 @@
+"""Hand-rolled AdamW with optional low-precision moment states and optional
+error-feedback int8 gradient compression across the pod axis (see
+repro.distributed.compression)."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamW"]
+
+
+@dataclass(frozen=True)
+class AdamW:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    state_dtype: str | None = None     # None: grads' dtype; "bfloat16" to halve
+    grad_transform: object = None      # e.g. compression.PodCompressor
+
+    def _sdt(self, g):
+        if self.state_dtype == "bfloat16":
+            return jnp.bfloat16
+        return jnp.float32
+
+    def init(self, params):
+        zeros = lambda p: jnp.zeros(p.shape, self._sdt(p))
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+        }
+
+    def update(self, params, grads, state):
+        if self.grad_transform is not None:
+            grads, state = self.grad_transform.apply(grads, state)
+        step = state["step"] + 1
+        b1, b2 = self.b1, self.b2
+        c1 = 1.0 - b1 ** step.astype(jnp.float32)
+        c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, g, m, v):
+            g32 = g.astype(jnp.float32)
+            m32 = m.astype(jnp.float32) * b1 + (1 - b1) * g32
+            v32 = v.astype(jnp.float32) * b2 + (1 - b2) * g32 * g32
+            mh = m32 / c1
+            vh = v32 / c2
+            d = mh / (jnp.sqrt(vh) + self.eps)
+            if self.weight_decay:
+                d = d + self.weight_decay * p.astype(jnp.float32)
+            newp = p.astype(jnp.float32) - self.lr * d
+            return (newp.astype(p.dtype), m32.astype(m.dtype),
+                    v32.astype(v.dtype))
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_m = tdef.flatten_up_to(state["m"])
+        flat_v = tdef.flatten_up_to(state["v"])
+        out = [upd(p, g, m, v) for p, g, m, v in
+               zip(flat_p, flat_g, flat_m, flat_v)]
+        new_p = tdef.unflatten([o[0] for o in out])
+        new_m = tdef.unflatten([o[1] for o in out])
+        new_v = tdef.unflatten([o[2] for o in out])
+        new_state = dict(state)
+        new_state.update({"step": step, "m": new_m, "v": new_v})
+        return new_p, new_state

@@ -1,0 +1,11 @@
+"""Test-session configuration.
+
+Enables jax x64 so float64 oracle comparisons stay in float64 (model code
+uses explicit dtypes and is unaffected).  Deliberately does NOT set
+``xla_force_host_platform_device_count`` — smoke tests must see one device;
+only launch/dryrun.py forces 512 placeholder devices.
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)

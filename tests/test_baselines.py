@@ -1,0 +1,54 @@
+"""MCEP / SHARON / static baselines agree with brute force on small streams."""
+
+import numpy as np
+import pytest
+
+from repro.core.baselines.brute import brute_run
+from repro.core.baselines.mcep import mcep_run
+from repro.core.baselines.sharon import sharon_run
+from repro.core.events import EventBatch, StreamSchema
+from repro.core.pattern import EventType, Kleene, Not, Seq
+from repro.core.query import Pred, Query, Workload, count_star
+
+A, B, C, X = map(EventType, "ABCX")
+SCHEMA = StreamSchema(types=("A", "B", "C", "X"), attrs=("v", "w"))
+
+
+def _wl():
+    return Workload(SCHEMA, [
+        Query("q1", Seq(A, Kleene(B)), preds={"B": [Pred("v", "<", 3)]},
+              within=20, slide=10),
+        Query("q2", Seq(C, Kleene(B)), within=20, slide=20),
+        Query("q3", Kleene(B), within=20, slide=20),
+        Query("q4", Seq(A, Kleene(B), C, Not(X)), within=20, slide=20),
+    ])
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_mcep_matches_brute(seed):
+    rng = np.random.default_rng(seed)
+    n = 12
+    types = rng.integers(0, 4, n)
+    times = np.sort(rng.choice(np.arange(1, 40), size=n, replace=False))
+    attrs = rng.integers(0, 5, (n, 2)).astype(float)
+    batch = EventBatch(SCHEMA, types, times, attrs)
+    wl = _wl()
+    want = brute_run(wl, batch, 40)
+    got = mcep_run(wl, batch, 40)
+    for k in want:
+        assert got[k]["COUNT(*)"] == want[k]["COUNT(*)"], k
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_sharon_matches_brute(seed):
+    rng = np.random.default_rng(100 + seed)
+    n = 14
+    types = rng.integers(0, 4, n)
+    times = np.sort(rng.choice(np.arange(1, 40), size=n, replace=False))
+    attrs = rng.integers(0, 5, (n, 2)).astype(float)
+    batch = EventBatch(SCHEMA, types, times, attrs)
+    wl = _wl()
+    want = brute_run(wl, batch, 40)
+    got = sharon_run(wl, batch, 40)
+    for k in want:
+        assert abs(got[k]["COUNT(*)"] - want[k]["COUNT(*)"]) < 1e-6, k

@@ -1,0 +1,285 @@
+"""HAMLET engine correctness: paper worked examples + randomized equivalence
+against the brute-force trend-enumeration oracle and the independent GRETA
+implementation, under all three sharing policies."""
+
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.baselines.brute import brute_run
+from repro.core.baselines.greta import greta_run
+from repro.core.engine import HamletRuntime
+from repro.core.events import EventBatch, StreamSchema
+from repro.core.optimizer import AlwaysShare, DynamicPolicy, FlopPolicy, NeverShare
+from repro.core.pattern import EventType, Kleene, Not, Or, And, Seq
+from repro.core.query import (EdgePred, Pred, Query, Workload, agg_avg,
+                              agg_max, agg_min, agg_sum, count_star, count_type)
+
+A, B, C, X = map(EventType, "ABCX")
+SCHEMA = StreamSchema(types=("A", "B", "C", "X"), attrs=("v", "w"))
+POLICIES = [DynamicPolicy(), DynamicPolicy(model="v2"), AlwaysShare(),
+            NeverShare(), FlopPolicy()]
+
+
+def _close(a, b):
+    if isinstance(a, float) and isinstance(b, float):
+        if math.isnan(a) and math.isnan(b):
+            return True
+        return abs(a - b) <= 1e-6 * (1.0 + abs(b))
+    return a == b
+
+
+def assert_same(r1, r2, tag=""):
+    assert set(r1) == set(r2), f"{tag}: result keys differ"
+    for k in r1:
+        for ak in set(r1[k]) | set(r2[k]):
+            assert _close(r1[k].get(ak, float("nan")),
+                          r2[k].get(ak, float("nan"))), \
+                f"{tag}: {k} {ak}: {r1[k].get(ak)} != {r2[k].get(ak)}"
+
+
+def paper_stream():
+    """Fig. 4 stream: a1 a2 c1 | b3 b4 b5 b6 | a a c c c | b ..."""
+    types = [0, 0, 2, 1, 1, 1, 1]
+    times = [1, 2, 3, 4, 5, 6, 7]
+    return EventBatch(SCHEMA, np.array(types), np.array(times), None)
+
+
+def paper_workload(**kw):
+    q1 = Query("q1", Seq(A, Kleene(B)), within=10, slide=10, **kw)
+    q2 = Query("q2", Seq(C, Kleene(B)), within=10, slide=10, **kw)
+    return Workload(SCHEMA, [q1, q2])
+
+
+def test_paper_example4_counts():
+    """Example 4 / Table 3: snapshot doubling x, 2x, 4x, 8x; totals 15x."""
+    wl = paper_workload()
+    batch = paper_stream()
+    for pol in POLICIES:
+        res = HamletRuntime(wl, policy=pol).run(batch, t_end=10)
+        # x = 2 for q1 (a1, a2), 1 for q2 (c1); total = 15x
+        assert res[("q1", 0, 0)]["COUNT(*)"] == 30.0
+        assert res[("q2", 0, 0)]["COUNT(*)"] == 15.0
+
+
+def test_paper_table4_snapshot_chain():
+    """Table 4: graphlets A1{a1,a2} C2{c1} B3{b3..b6} A4{2 events}
+    C5{3 events} then b7: count(b7, q1) = y = 34, count(b7, q2) = 19."""
+    types = [0, 0, 2, 1, 1, 1, 1, 0, 0, 2, 2, 2, 1]
+    times = list(range(1, 14))
+    batch = EventBatch(SCHEMA, np.array(types), np.array(times), None)
+    q1 = Query("q1", Seq(A, Kleene(B)), within=20, slide=20)
+    q2 = Query("q2", Seq(C, Kleene(B)), within=20, slide=20)
+    wl = Workload(SCHEMA, [q1, q2])
+    for pol in POLICIES:
+        res = HamletRuntime(wl, policy=pol).run(batch, t_end=20)
+        # fcount = sum over B events: B3 contributes 15x; b7 contributes y
+        # q1: 15*2 + 34 = 64 ; q2: 15*1 + 19 = 34
+        assert res[("q1", 0, 0)]["COUNT(*)"] == 64.0
+        assert res[("q2", 0, 0)]["COUNT(*)"] == 34.0
+    assert_same(HamletRuntime(wl).run(batch, t_end=20),
+                brute_run(wl, batch, 20), "table4-brute")
+
+
+def test_event_level_snapshot_table5():
+    """Fig. 5(c)/Table 5: edge (b4, b5) holds for q1 but not q2."""
+    # encode the predicate difference with an edge predicate on w for q2
+    types = [0, 0, 2, 1, 1, 1, 1]
+    times = [1, 2, 3, 4, 5, 6, 7]
+    # w values: b3=1, b4=5, b5=2, b6=6 -> edge b4->b5 fails "w <=" for q2
+    attrs = np.zeros((7, 2))
+    attrs[:, 1] = [0, 0, 0, 1, 5, 2, 6]
+    batch = EventBatch(SCHEMA, np.array(types), np.array(times), attrs)
+    q1 = Query("q1", Seq(A, Kleene(B)), within=10, slide=10)
+    q2 = Query("q2", Seq(C, Kleene(B)), within=10, slide=10,
+               edge_preds={"B": [EdgePred("w", "<=")]})
+    wl = Workload(SCHEMA, [q1, q2])
+    want = brute_run(wl, batch, 10)
+    for pol in POLICIES:
+        got = HamletRuntime(wl, policy=pol).run(batch, t_end=10)
+        assert_same(got, want, f"table5-{type(pol).__name__}")
+    # q1 unaffected by q2's predicate
+    assert want[("q1", 0, 0)]["COUNT(*)"] == 30.0
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3, 4, 5, 6, 7])
+def test_fuzz_against_brute_and_greta(seed):
+    rng = np.random.default_rng(seed)
+    for trial in range(8):
+        n = int(rng.integers(4, 15))
+        types = rng.integers(0, 4, n)
+        times = np.sort(rng.choice(np.arange(1, 40), size=n, replace=False))
+        attrs = rng.integers(0, 5, (n, 2)).astype(float)
+        groups = rng.integers(0, 2, n)
+        batch = EventBatch(SCHEMA, types, times, attrs, groups)
+        qs = [
+            Query("q1", Seq(A, Kleene(B)),
+                  aggs=(count_star(), agg_sum("B", "v"), agg_avg("B", "v")),
+                  preds={"B": [Pred("v", "<", 4)]}, within=20, slide=10),
+            Query("q2", Seq(C, Kleene(B)),
+                  aggs=(count_star(), count_type("B")), within=40, slide=20),
+            Query("q3", Kleene(B), aggs=(count_star(), agg_min("B", "w")),
+                  edge_preds={"B": [EdgePred("v", "<=")]}, within=20, slide=20),
+            Query("q4", Seq(A, Kleene(B), C, Not(X)), aggs=(count_star(),),
+                  within=40, slide=40),
+            Query("q5", Seq(A, Not(X), Kleene(B)),
+                  aggs=(count_star(), agg_max("B", "v")), within=20, slide=20),
+            Query("q6", Kleene(Seq(A, Kleene(B))), aggs=(count_star(),),
+                  within=40, slide=40),
+        ]
+        wl = Workload(SCHEMA, qs)
+        want = brute_run(wl, batch, 40)
+        assert_same(greta_run(wl, batch, 40), want, f"greta-s{seed}t{trial}")
+        for pol in POLICIES:
+            got = HamletRuntime(wl, policy=pol).run(batch, 40)
+            assert_same(got, want, f"{type(pol).__name__}-s{seed}t{trial}")
+
+
+def test_or_and_workload():
+    rng = np.random.default_rng(9)
+    n = 12
+    types = rng.integers(0, 4, n)
+    times = np.sort(rng.choice(np.arange(1, 20), size=n, replace=False))
+    batch = EventBatch(SCHEMA, types, times, None)
+    qs = [
+        Query("qor", Or(Kleene(B), Kleene(X)), within=20, slide=20),
+        Query("qand", And(Kleene(B), Kleene(X)), within=20, slide=20),
+    ]
+    wl = Workload(SCHEMA, qs)
+    want = brute_run(wl, batch, 20)
+    got = HamletRuntime(wl).run(batch, 20)
+    # Or over disjoint patterns: counts add
+    assert_same(got, want)
+
+
+def test_sliding_windows_and_panes():
+    """Pane sharing across overlapping windows must not change results."""
+    rng = np.random.default_rng(11)
+    n = 25
+    types = rng.integers(0, 3, n)
+    times = np.sort(rng.choice(np.arange(0, 60), size=n, replace=False))
+    attrs = rng.integers(0, 5, (n, 2)).astype(float)
+    batch = EventBatch(SCHEMA, types, times, attrs)
+    qs = [
+        Query("q1", Seq(A, Kleene(B)), within=30, slide=10,
+              aggs=(count_star(), agg_sum("B", "v"))),
+        Query("q2", Seq(C, Kleene(B)), within=20, slide=5),
+    ]
+    wl = Workload(SCHEMA, qs)
+    want = brute_run(wl, batch, 60)
+    for pol in POLICIES:
+        assert_same(HamletRuntime(wl, policy=pol).run(batch, 60), want,
+                    type(pol).__name__)
+
+
+def test_group_by_partitioning():
+    rng = np.random.default_rng(13)
+    n = 30
+    types = rng.integers(0, 3, n)
+    times = np.sort(rng.choice(np.arange(0, 40), size=n, replace=False))
+    groups = rng.integers(0, 3, n)
+    batch = EventBatch(SCHEMA, types, times, None, groups)
+    wl = paper_workload()
+    want = brute_run(wl, batch, 40)
+    got = HamletRuntime(wl).run(batch, 40)
+    assert_same(got, want)
+    assert len({k[1] for k in got}) == 3  # three groups emitted
+
+
+def test_empty_stream():
+    # no events -> no group partitions -> no emissions
+    batch = EventBatch(SCHEMA, np.array([], dtype=np.int32),
+                       np.array([], dtype=np.int64), None)
+    wl = paper_workload()
+    res = HamletRuntime(wl).run(batch, t_end=10)
+    assert res == {}
+
+
+def test_quiet_group_emits_zero_windows():
+    # a group with events only early still emits zeros for later windows
+    batch = EventBatch(SCHEMA, np.array([1], dtype=np.int32),
+                       np.array([2], dtype=np.int64), None)
+    wl = paper_workload()
+    res = HamletRuntime(wl).run(batch, t_end=30)
+    assert res[("q1", 0, 0)]["COUNT(*)"] == 0.0
+    assert res[("q1", 0, 10)]["COUNT(*)"] == 0.0
+    assert res[("q1", 0, 20)]["COUNT(*)"] == 0.0
+
+
+def test_stats_sharing_counters():
+    wl = paper_workload()
+    batch = paper_stream()
+    rt = HamletRuntime(wl, policy=AlwaysShare())
+    rt.run(batch, t_end=10)
+    assert rt.stats.shared_bursts >= 1
+    assert rt.stats.snapshots_created >= 1
+    rt2 = HamletRuntime(wl, policy=NeverShare())
+    rt2.run(batch, t_end=10)
+    assert rt2.stats.shared_bursts == 0
+
+
+def test_regression_stale_snapshot_rank1():
+    """Regression: a live row between two divergent rows references the first
+    event-level snapshot; later snapshots must see its *filled* value (the
+    P-cache rank-1 update), not the zero placeholder."""
+    schema = StreamSchema(types=("R", "T"), attrs=("speed",))
+    R, T = EventType("R"), EventType("T")
+    types = [0, 1, 0, 0, 1, 1, 1, 1]
+    times = [4, 4, 5, 5, 6, 6, 6, 7]
+    speed = np.array([5.0, 5.0, 2.0, 2.0, 5.0, 0.0, 4.0, 1.0])[:, None]
+    batch = EventBatch(schema, np.array(types), np.array(times), speed)
+    wl = Workload(schema, [
+        Query("q1", Seq(R, Kleene(T)), within=6, slide=2),
+        Query("q4", Seq(R, Kleene(T)), preds={"T": [Pred("speed", "<", 3.0)]},
+              within=6, slide=2),
+    ])
+    want = brute_run(wl, batch, 8)
+    for pol in POLICIES:
+        assert_same(HamletRuntime(wl, policy=pol).run(batch, 8), want,
+                    type(pol).__name__)
+
+
+def test_regression_simultaneous_negative():
+    """Regression: negation ties at equal timestamps resolve by arrival order
+    in every implementation."""
+    schema = StreamSchema(types=("R", "T", "P"), attrs=("v",))
+    R, T, P = EventType("R"), EventType("T"), EventType("P")
+    types = [0, 1, 2]
+    times = [1, 4, 4]            # negative p arrives after t at the same tick
+    batch = EventBatch(schema, np.array(types), np.array(times), None)
+    wl = Workload(schema, [
+        Query("q", Seq(R, Kleene(T), Not(P)), within=6, slide=6),
+    ])
+    want = brute_run(wl, batch, 6)
+    assert want[("q", 0, 0)]["COUNT(*)"] == 0.0   # p after t by arrival
+    for pol in POLICIES:
+        assert_same(HamletRuntime(wl, policy=pol).run(batch, 6), want)
+
+
+def test_fuzz_duplicates_and_divergence():
+    """Dense duplicate-timestamp streams with divergent predicates — the
+    regime that exposed the stale-P bug."""
+    schema = StreamSchema(types=("R", "T", "P", "D"), attrs=("s", "r"))
+    R, T, P, D = (EventType(x) for x in "RTPD")
+    rng = np.random.default_rng(77)
+    for trial in range(25):
+        n = int(rng.integers(4, 14))
+        types = rng.choice([0, 1, 1, 1, 2, 3], size=n)
+        times = np.sort(rng.choice(np.arange(0, 10), size=n, replace=True))
+        attrs = rng.integers(0, 8, (n, 2)).astype(float)
+        batch = EventBatch(schema, types, times, attrs)
+        wl = Workload(schema, [
+            Query("q1", Seq(R, Kleene(T), Not(P)),
+                  aggs=(count_star(), agg_sum("T", "s")), within=6, slide=2),
+            Query("q2", Seq(R, Kleene(T), D),
+                  preds={"R": [Pred("r", "<", 5.0)]}, within=6, slide=2),
+            Query("q3", Seq(R, Kleene(T), Not(P)),
+                  preds={"T": [Pred("s", "<", 3.0)]}, within=6, slide=2),
+            Query("q4", Kleene(T), preds={"T": [Pred("s", ">=", 2.0)]},
+                  within=4, slide=2),
+        ])
+        want = brute_run(wl, batch, 10)
+        for pol in POLICIES:
+            got = HamletRuntime(wl, policy=pol).run(batch, 10)
+            assert_same(got, want, f"dup-t{trial}-{type(pol).__name__}")

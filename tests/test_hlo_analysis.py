@@ -1,0 +1,67 @@
+"""Trip-count-aware HLO analysis validated against hand-counted loops."""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch.hlo_analysis import analyze_hlo
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def test_while_trip_count_and_traffic():
+    def f(x, w):
+        def body(c, _):
+            return jnp.tanh(c @ w), None
+        y, _ = jax.lax.scan(body, x, None, length=12)
+        return y.sum()
+
+    comp = jax.jit(f).lower(jax.ShapeDtypeStruct((64, 64), jnp.float32),
+                            jax.ShapeDtypeStruct((64, 64), jnp.float32)
+                            ).compile()
+    rep = analyze_hlo(comp.as_text())
+    trips = [n for _, _, n in rep.whiles]
+    assert trips == [12], trips
+    # traffic must scale with the trip count: each iteration reads c and w
+    # and writes c (~3 * 64*64*4 = 48KB) -> total ~ 12 * 48KB within 3x
+    per_iter = 3 * 64 * 64 * 4
+    assert 12 * per_iter * 0.5 < rep.traffic_bytes < 12 * per_iter * 4, \
+        rep.traffic_bytes
+
+
+def test_collectives_trip_weighted():
+    code = """
+    import jax, jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.launch.hlo_analysis import analyze_hlo
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    def f(x, w):
+        def body(c, _):
+            h = jnp.tanh(c @ w)
+            return h @ w.T, None
+        y, _ = jax.lax.scan(body, x, None, length=10)
+        return y.sum()
+    x = jax.ShapeDtypeStruct((64, 256), jnp.float32)
+    w = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+    with mesh:
+        comp = jax.jit(f, in_shardings=(
+            NamedSharding(mesh, P("data", None)),
+            NamedSharding(mesh, P(None, "model")))).lower(x, w).compile()
+    rep = analyze_hlo(comp.as_text())
+    want = 10 * 32 * 256 * 4     # one [32,256] f32 all-reduce per iteration
+    got = rep.collective_bytes["all-reduce"]
+    assert abs(got - want) < 0.05 * want, (got, want)
+    print("collectives-ok")
+    """
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
+                        " --xla_force_host_platform_device_count=8")
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env, timeout=300)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "collectives-ok" in out.stdout

@@ -1,0 +1,158 @@
+"""Kernel sweeps: Pallas (interpret) vs jnp references vs numpy oracle."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops
+from repro.kernels import ref
+
+
+def _relerr(a, b):
+    return np.max(np.abs(a - b) / (1.0 + np.abs(b))) if a.size else 0.0
+
+
+@pytest.mark.parametrize("b,d", [(1, 1), (2, 1), (7, 3), (31, 1), (64, 64),
+                                 (128, 1), (129, 5), (257, 33), (384, 130)])
+@pytest.mark.parametrize("density", [0.0, 0.3, 1.0])
+def test_backends_agree_f32(b, d, density):
+    rng = np.random.default_rng(b * 1000 + d)
+    mask = np.tril(rng.random((b, b)) < density, k=-1).astype(np.float32)
+    if b > 130:
+        # keep magnitudes bounded (0/1 counts grow like 2^b and saturate f32)
+        mask *= rng.uniform(0.0, 0.02, (b, b)).astype(np.float32)
+    base = rng.standard_normal((b, d)).astype(np.float32)
+    want = ref.numpy_prefix_propagate(base.astype(np.float64),
+                                      mask.astype(np.float64))
+    for backend in ("jax", "jax_solve", "pallas"):
+        got = np.asarray(ops.propagate(base, mask, backend=backend),
+                         dtype=np.float64)
+        assert _relerr(got, want) < 5e-4, backend
+
+
+@pytest.mark.parametrize("b,d", [(257, 33), (300, 2)])
+def test_pallas_f64_dense_exact(b, d):
+    # f64 accumulate in interpret mode: dense 0/1 masks at large b
+    rng = np.random.default_rng(b)
+    mask = np.tril(rng.random((b, b)) < 0.5, k=-1).astype(np.float64)
+    base = rng.standard_normal((b, d))
+    want = ref.numpy_prefix_propagate(base, mask)
+    got = np.asarray(ops.propagate(base, mask, backend="pallas"))
+    assert _relerr(got, want) < 1e-9
+
+
+@pytest.mark.parametrize("b", [5, 130])
+def test_int32_exact(b):
+    rng = np.random.default_rng(b)
+    mask = np.tril(rng.random((b, b)) < 0.2, k=-1).astype(np.int32)
+    base = rng.integers(0, 3, (b, 2)).astype(np.int32)
+    want = ref.numpy_prefix_propagate(base, mask)
+    got = np.asarray(ops.propagate(base, mask, backend="pallas"))
+    # int32 wraparound semantics must match exactly
+    assert np.array_equal(got, want)
+
+
+def test_batched():
+    rng = np.random.default_rng(0)
+    nb, b, d = 3, 40, 4
+    mask = np.tril(rng.random((nb, b, b)) < 0.4, k=-1).astype(np.float32)
+    base = rng.standard_normal((nb, b, d)).astype(np.float32)
+    want = np.stack([ref.numpy_prefix_propagate(base[i].astype(np.float64),
+                                                mask[i].astype(np.float64))
+                     for i in range(nb)])
+    for backend in ("jax", "pallas"):
+        got = np.asarray(ops.propagate_batched(base, mask, backend=backend),
+                         dtype=np.float64)
+        assert _relerr(got, want) < 5e-4
+
+
+def test_doubling_closed_form():
+    # fully-connected graphlet: counts double (paper Table 3: x, 2x, 4x, 8x)
+    b = 10
+    mask = np.tril(np.ones((b, b)), k=-1).astype(np.float32)
+    base = np.ones((b, 1), dtype=np.float32)
+    got = np.asarray(ops.propagate(base, mask, backend="pallas"))[:, 0]
+    assert np.allclose(got, 2.0 ** np.arange(b))
+
+
+def test_upper_triangle_ignored():
+    # the primitive must be causal: anything above the diagonal is dropped
+    rng = np.random.default_rng(1)
+    b = 33
+    full = rng.random((b, b)).astype(np.float32)
+    base = rng.standard_normal((b, 2)).astype(np.float32)
+    got_full = np.asarray(ops.propagate(base, full, backend="jax"))
+    got_tril = np.asarray(ops.propagate(base, np.tril(full, k=-1),
+                                        backend="jax"))
+    assert np.allclose(got_full, got_tril)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(1, 50), st.integers(1, 6), st.integers(0, 2**31 - 1))
+def test_property_linear_in_base(b, d, seed):
+    """Propagation is linear in the injection rows."""
+    rng = np.random.default_rng(seed)
+    mask = np.tril(rng.random((b, b)) < 0.4, k=-1).astype(np.float64)
+    b1 = rng.standard_normal((b, d))
+    b2 = rng.standard_normal((b, d))
+    c1 = ref.numpy_prefix_propagate(b1, mask)
+    c2 = ref.numpy_prefix_propagate(b2, mask)
+    c12 = ref.numpy_prefix_propagate(2.0 * b1 + 3.0 * b2, mask)
+    assert np.allclose(c12, 2.0 * c1 + 3.0 * c2)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 40), st.integers(0, 2**31 - 1))
+def test_property_mask_monotone(b, seed):
+    """With non-negative injections, adding edges never decreases counts."""
+    rng = np.random.default_rng(seed)
+    m1 = np.tril(rng.random((b, b)) < 0.3, k=-1)
+    extra = np.tril(rng.random((b, b)) < 0.2, k=-1)
+    m2 = m1 | extra
+    base = rng.random((b, 1))
+    c1 = ref.numpy_prefix_propagate(base, m1.astype(np.float64))
+    c2 = ref.numpy_prefix_propagate(base, m2.astype(np.float64))
+    assert (c2 >= c1 - 1e-12).all()
+
+
+@pytest.mark.parametrize("b,d", [(1, 1), (2, 3), (17, 4), (63, 2), (200, 8),
+                                 (600, 2)])
+def test_dense_closed_form(b, d):
+    """The O(b*d) dense-burst closed form equals the masked solve with an
+    all-ones strictly-lower adjacency."""
+    rng = np.random.default_rng(b)
+    base = rng.random((b, d)) * 0.001   # keep counts in the exact regime
+    mask = np.tril(np.ones((b, b)), k=-1)
+    want = ref.numpy_prefix_propagate_fast(base, mask)
+    got = ops.propagate_dense(base, backend="np")
+    assert np.max(np.abs(got - want) / (1 + np.abs(want))) < 1e-9
+
+
+@pytest.mark.parametrize("b,d", [(64, 1), (128, 8), (256, 5)])
+def test_dense_pallas_kernel(b, d):
+    """The dense-burst Pallas kernel equals the closed-form oracle."""
+    from repro.kernels.hamlet_dense import dense_propagate_pallas
+
+    rng = np.random.default_rng(b + d)
+    base = (rng.random((2, b, d)) * 1e-4).astype(np.float32)
+    with np.errstate(over="ignore"):
+        want = np.stack([ref.prefix_propagate_dense_np(base[i])
+                         for i in range(2)])
+    got = np.asarray(dense_propagate_pallas(jnp.asarray(base)))
+    # counts double per event: rows past ~128 saturate to inf in f32 —
+    # saturation positions must agree, finite region must match tightly
+    fin = np.isfinite(want)
+    assert np.array_equal(fin, np.isfinite(got))
+    rel = np.max(np.abs(got[fin] - want[fin]) / (1e-30 + np.abs(want[fin])))
+    assert rel < 1e-5, rel
+
+
+def test_dense_pallas_doubling():
+    from repro.kernels.hamlet_dense import dense_propagate_pallas
+
+    base = np.zeros((1, 64, 1), np.float32)
+    base[0, 0, 0] = 1.0     # single start event: counts 1, 1, 2, 4, ...
+    got = np.asarray(dense_propagate_pallas(jnp.asarray(base)))[0, :, 0]
+    want = np.concatenate([[1.0], 2.0 ** np.arange(0, 63)])
+    assert np.allclose(got, want)

@@ -1,0 +1,236 @@
+"""Per-architecture smoke tests: reduced same-family configs, one train step
++ prefill + decode on CPU, asserting output shapes and finiteness; plus
+decode-vs-forward consistency and chunked-vs-recurrent equivalence for the
+recurrent blocks."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config, input_specs, reduce_for_smoke
+from repro.models.lm import (decode_fn, forward, init_cache, init_params,
+                             loss_fn, prefill_fn, train_step_fn)
+from repro.train.optimizer import AdamW
+
+B, S = 2, 16
+
+
+def _batch_for(cfg, key=0):
+    rng = np.random.default_rng(key)
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (B, S)),
+                                   jnp.int32),
+             "labels": jnp.asarray(rng.integers(0, cfg.vocab, (B, S)),
+                                   jnp.int32)}
+    if cfg.enc_dec:
+        batch["frames"] = jnp.asarray(
+            rng.standard_normal((B, S, cfg.d_model)), jnp.float32)
+    if cfg.frontend == "patches":
+        n_vis = 4
+        batch["patch_embeds"] = jnp.asarray(
+            rng.standard_normal((B, n_vis, cfg.d_model)), jnp.float32)
+        batch["tokens"] = batch["tokens"][:, : S - n_vis]
+    if cfg.mrope_sections:
+        pos = np.broadcast_to(np.arange(S), (3, B, S)).copy()
+        batch["positions"] = jnp.asarray(pos, jnp.int32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_train_step(arch):
+    cfg = reduce_for_smoke(get_config(arch))
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    batch = _batch_for(cfg)
+    opt = AdamW(lr=1e-3)
+    opt_state = opt.init(params)
+    step = jax.jit(train_step_fn(cfg, opt))
+    params2, opt_state2, loss = step(params, opt_state, batch)
+    assert jnp.isfinite(loss), arch
+    # params changed
+    delta = jax.tree.reduce(
+        lambda a, b: a + b,
+        jax.tree.map(lambda a, b: float(jnp.abs(a.astype(jnp.float32) -
+                                                b.astype(jnp.float32)).sum()),
+                     params, params2))
+    assert delta > 0.0, arch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward_shapes(arch):
+    cfg = reduce_for_smoke(get_config(arch))
+    params = init_params(cfg, jax.random.PRNGKey(1))
+    batch = _batch_for(cfg)
+    logits, aux, _ = forward(params, cfg, batch)
+    S_out = S if not (cfg.frontend == "patches") else S
+    assert logits.shape == (B, S_out, cfg.vocab), (arch, logits.shape)
+    assert bool(jnp.isfinite(logits).all()), arch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_decode_consistency(arch):
+    """Prefill a cache over S tokens, decode token S; its logits must match
+    the full forward over S+1 tokens at the last position."""
+    from dataclasses import replace
+
+    # f32 for a precise logic check; capacity drops differ between
+    # prefill-group and decode-group dispatch (as in real serving engines),
+    # so disable drops for the equivalence check
+    cfg = replace(reduce_for_smoke(get_config(arch)), dtype="float32",
+                  capacity_factor=8.0)
+    params = init_params(cfg, jax.random.PRNGKey(2))
+    rng = np.random.default_rng(3)
+    T = S + 1
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (B, T)), jnp.int32)
+
+    full_batch = {"tokens": toks}
+    dec_batch = {"token": toks[:, -1:], "pos": jnp.full((B,), T - 1,
+                                                        jnp.int32)}
+    pre_batch = {"tokens": toks[:, :-1]}
+    if cfg.enc_dec:
+        frames = jnp.asarray(rng.standard_normal((B, S, cfg.d_model)),
+                             jnp.float32)
+        full_batch["frames"] = frames
+        pre_batch["frames"] = frames
+    if cfg.frontend == "patches":
+        pe = jnp.asarray(rng.standard_normal((B, 4, cfg.d_model)), jnp.float32)
+        full_batch["patch_embeds"] = pe
+        pre_batch["patch_embeds"] = pe
+        full_batch["tokens"] = toks[:, : T - 4]
+        pre_batch["tokens"] = toks[:, : T - 5]
+        dec_batch["token"] = toks[:, T - 5: T - 4]   # last *text* token
+    if cfg.mrope_sections:
+        full_batch["positions"] = jnp.asarray(
+            np.broadcast_to(np.arange(T), (3, B, T)).copy(), jnp.int32)
+        pre_batch["positions"] = full_batch["positions"][:, :, :-1]
+        dec_batch["positions"] = full_batch["positions"][:, :, -1:]
+
+    logits_full, _, _ = forward(params, cfg, full_batch)
+    want = np.asarray(logits_full[:, -1, :], dtype=np.float32)
+
+    cache = init_cache(cfg, B, cap=T)
+    prefill = prefill_fn(cfg, with_cache=True)
+    _, cache = prefill(params, cache, pre_batch)
+    got, _ = decode_fn(cfg)(params, cache, dec_batch)
+    got = np.asarray(got, dtype=np.float32)
+    err = np.max(np.abs(got - want) / (1.0 + np.abs(want)))
+    assert err < 2e-3, (arch, err)
+
+
+def test_mamba2_chunked_matches_recurrent():
+    from repro.models.mamba2 import (init_mamba2, init_mamba2_state,
+                                     mamba2_block, mamba2_decode)
+
+    cfg = reduce_for_smoke(get_config("zamba2-7b"))
+    p = init_mamba2(jax.random.PRNGKey(0), cfg, jnp.float32)
+    rng = np.random.default_rng(0)
+    T = 8
+    u = jnp.asarray(rng.standard_normal((B, T, cfg.d_model)) * 0.1,
+                    jnp.float32)
+    y_chunked, _ = mamba2_block(p, u, cfg)
+
+    S0, conv0 = init_mamba2_state(cfg, B)
+    outs = []
+    S, conv = S0, conv0
+    for t in range(T):
+        y, (S, conv) = mamba2_decode(p, u[:, t:t + 1], cfg, S, conv)
+        outs.append(y)
+    y_rec = jnp.concatenate(outs, axis=1)
+    err = np.max(np.abs(np.asarray(y_chunked) - np.asarray(y_rec)))
+    assert err < 1e-4, err
+
+
+def test_rwkv6_chunked_matches_recurrent():
+    from repro.models.rwkv6 import (init_rwkv6, init_rwkv6_state, rwkv6_block,
+                                    rwkv6_decode)
+
+    cfg = reduce_for_smoke(get_config("rwkv6-7b"))
+    p = init_rwkv6(jax.random.PRNGKey(1), cfg, jnp.float32)
+    rng = np.random.default_rng(1)
+    T = 8
+    x = jnp.asarray(rng.standard_normal((B, T, cfg.d_model)) * 0.1,
+                    jnp.float32)
+    y_chunked, _ = rwkv6_block(p, x, cfg)
+
+    st = init_rwkv6_state(cfg, B)
+    st = jax.tree.map(lambda a: a.astype(jnp.float32), st)
+    outs = []
+    for t in range(T):
+        y, st = rwkv6_decode(p, x[:, t:t + 1], cfg, st)
+        outs.append(y)
+    y_rec = jnp.concatenate(outs, axis=1)
+    err = np.max(np.abs(np.asarray(y_chunked) - np.asarray(y_rec)))
+    assert err < 1e-4, err
+
+
+def test_input_specs_cover_all_cells():
+    from repro.configs.base import SHAPE_CELLS
+
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        for cell in SHAPE_CELLS:
+            if cfg.supports_cell(cell) is not None:
+                continue
+            specs = input_specs(cfg, cell)
+            assert specs, (arch, cell)
+            for k, v in specs.items():
+                assert all(dim > 0 for dim in v.shape), (arch, cell, k)
+
+
+def test_long_context_applicability():
+    skips = {a: get_config(a).supports_cell("long_500k") for a in ARCHS}
+    assert skips["rwkv6-7b"] is None
+    assert skips["zamba2-7b"] is None
+    assert skips["gemma2-2b"] is None
+    assert skips["starcoder2-15b"] is not None
+    assert skips["whisper-tiny"] is not None
+
+
+def test_sdpa_chunked_matches_direct():
+    """The stacked-chunk scan path (S % chunk == 0) and the remainder path
+    must both equal unchunked attention."""
+    import math
+    from types import SimpleNamespace
+
+    from repro.models.layers import _sdpa, sdpa_chunked
+
+    cfg = SimpleNamespace(attn_logit_softcap=None, window=16)
+    rng = np.random.default_rng(0)
+    B, H, KV, hd = 2, 4, 2, 8
+    for S, chunk in [(256, 64), (200, 64)]:   # exact and remainder paths
+        q = jnp.asarray(rng.standard_normal((B, S, H, hd)), jnp.float32)
+        k = jnp.asarray(rng.standard_normal((B, S, KV, hd)), jnp.float32)
+        v = jnp.asarray(rng.standard_normal((B, S, KV, hd)), jnp.float32)
+
+        def mask_fn(qpos, kpos):
+            return kpos[None, :] <= qpos[:, None]
+
+        got = sdpa_chunked(q, k, v, cfg, mask_fn, chunk=chunk)
+        mask = mask_fn(jnp.arange(S), jnp.arange(S))
+        want = _sdpa(q, k, v, mask[None, None, None, :, :], cfg)
+        err = np.max(np.abs(np.asarray(got) - np.asarray(want)))
+        assert err < 1e-5, (S, chunk, err)
+
+
+def test_sdpa_chunked_banded_local():
+    """The window-banded K/V path equals full-K local attention."""
+    from types import SimpleNamespace
+
+    from repro.models.layers import _sdpa, sdpa_chunked
+
+    W = 48
+    cfg = SimpleNamespace(attn_logit_softcap=None, window=W)
+    rng = np.random.default_rng(5)
+    B, S, H, KV, hd = 2, 256, 4, 2, 8
+    q = jnp.asarray(rng.standard_normal((B, S, H, hd)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, S, KV, hd)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, S, KV, hd)), jnp.float32)
+
+    def mask_fn(qpos, kpos):
+        qp, kp = qpos[:, None], kpos[None, :]
+        return (kp <= qp) & ((kpos >= 0)[None, :]) & (jnp.abs(kp - qp) < W)
+
+    got = sdpa_chunked(q, k, v, cfg, mask_fn, chunk=64, local_window=W)
+    mask = mask_fn(jnp.arange(S), jnp.arange(S))
+    want = _sdpa(q, k, v, mask[None, None, None, :, :], cfg)
+    err = np.max(np.abs(np.asarray(got) - np.asarray(want)))
+    assert err < 1e-5, err

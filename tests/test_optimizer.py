@@ -1,0 +1,144 @@
+"""Benefit model (Eq. 6-10) and plan-space pruning (Thms 4.1/4.2, Fig. 7)."""
+
+import itertools
+
+import numpy as np
+
+from repro.core import benefit as B
+from repro.core.engine import ComponentContext, HamletRuntime
+from repro.core.events import EventBatch, StreamSchema
+from repro.core.optimizer import AlwaysShare, DynamicPolicy, NeverShare, _union_count
+from repro.core.pattern import EventType, Kleene, Seq
+from repro.core.query import Pred, Query, Workload
+
+
+def test_eq8_merge_beneficial():
+    """Eq. 8: Shared(B3)=44, NonShared=56, Benefit=12 > 0."""
+    c = B.benefit_v1(b=4, n=7, s_p=1, s_c=1, k=2, g=4, t=2)
+    assert c.shared == 44
+    assert c.nonshared == 56
+    assert c.benefit == 12
+
+
+def test_eq9_split():
+    """Eq. 9: Shared=120, NonShared=88, Benefit=-32 < 0."""
+    c = B.benefit_v1(b=4, n=11, s_p=2, s_c=1, k=2, g=8, t=2)
+    assert c.shared == 120
+    assert c.nonshared == 88
+    assert c.benefit == -32
+
+
+def test_eq10_merge_again():
+    """Eq. 10: Shared(B6)=76, NonShared=120, Benefit=44 > 0."""
+    c = B.benefit_v1(b=4, n=15, s_p=1, s_c=1, k=2, g=4, t=2)
+    assert c.shared == 76
+    assert c.nonshared == 120
+    assert c.benefit == 44
+
+
+def test_v2_log_terms():
+    c = B.benefit_v2(b=4, n=7, s_p=1, s_c=1, k=2, g=4, p=2)
+    assert c.nonshared == 2 * 4 * (2 + 7)
+    assert c.shared == 1 * 2 * 4 * 2 + 4 * (2 + 7 * 1)
+
+
+class _Stats:
+    decisions = 0
+    split_bursts = 0
+
+
+def _exhaustive_best(d_rows, candidates, b, n, t):
+    """Search all level>=2 plans: one shared subset + singletons (Fig. 7)."""
+    best = None
+    for r in range(len(candidates) + 1):
+        for S in itertools.combinations(candidates, r):
+            if len(S) == 1:
+                continue
+            rest = [q for q in candidates if q not in S]
+            cost = B.nonshared_cost_v1(b, n, len(rest))
+            if S:
+                s_new = _union_count(d_rows, S)
+                cost += B.shared_cost_v1(b, n, 1 + s_new, 1 + s_new, len(S), b, t)
+            if best is None or cost < best[0]:
+                best = (cost, set(S))
+    return best
+
+
+def _plan_cost(d_rows, shared_sets, b, n, t):
+    cost = 0.0
+    for s in shared_sets:
+        if len(s) >= 2:
+            s_new = _union_count(d_rows, s)
+            cost += B.shared_cost_v1(b, n, 1 + s_new, 1 + s_new, len(s), b, t)
+        else:
+            cost += B.nonshared_cost_v1(b, n, 1)
+    return cost
+
+
+class _FakeLayout:
+    t = 2
+
+
+class _FakeCtx:
+    layout = _FakeLayout()
+    nu = 1
+
+
+def test_pruned_choice_matches_exhaustive():
+    """The O(m) classification must match exhaustive plan search."""
+    rng = np.random.default_rng(0)
+    pol = DynamicPolicy()
+    for trial in range(200):
+        k = int(rng.integers(2, 6))
+        b = int(rng.integers(2, 30))
+        n = b + int(rng.integers(0, 50))
+        cands = list(range(k))
+        d_rows = {q: rng.random(b) < rng.choice([0.0, 0.1, 0.6])
+                  for q in cands}
+        st = _Stats()
+        sets = pol.decide(ctx=_FakeCtx(), el=0, candidates=cands,
+                          d_rows=d_rows, b=b, n=n, stats=st)
+        got = _plan_cost(d_rows, sets, max(b, 1), max(n, b), 2)
+        best_cost, _ = _exhaustive_best(d_rows, cands, b, max(n, b), 2)
+        assert got <= best_cost + 1e-9, (trial, got, best_cost, sets)
+
+
+def test_thm41_free_queries_always_shared():
+    """Queries introducing no snapshots are always in the shared set."""
+    pol = DynamicPolicy()
+    b, n = 10, 20
+    cands = [0, 1, 2]
+    d_rows = {0: np.zeros(b, dtype=bool), 1: np.zeros(b, dtype=bool),
+              2: np.ones(b, dtype=bool)}
+    sets = pol.decide(ctx=_FakeCtx(), el=0, candidates=cands, d_rows=d_rows,
+                      b=b, n=n, stats=_Stats())
+    shared = [s for s in sets if len(s) >= 2]
+    if shared:
+        assert 0 in shared[0] and 1 in shared[0]
+
+
+def test_dynamic_beats_static_on_divergent_burst():
+    """When predicates diverge heavily, dynamic must split while AlwaysShare
+    pays the snapshot overhead (Figs. 12-13 mechanism)."""
+    schema = StreamSchema(types=("A", "B", "C"), attrs=("v",))
+    A, Bt, C = map(EventType, "ABC")
+    rng = np.random.default_rng(5)
+    n = 60
+    types = np.concatenate([[0, 2], np.ones(n - 2, dtype=int)])
+    times = np.arange(1, n + 1)
+    attrs = rng.uniform(0, 10, (n, 1))
+    batch = EventBatch(schema, types, times, attrs)
+    # q1..q4 all share B+, but with disjoint selective predicates
+    qs = [Query(f"q{i}", Seq(A, Kleene(Bt)),
+                preds={"B": [Pred("v", "<", 2.5 * (i + 1)),
+                             Pred("v", ">=", 2.5 * i)]},
+                within=64, slide=64)
+          for i in range(4)]
+    wl = Workload(schema, qs)
+    dyn = HamletRuntime(wl, policy=DynamicPolicy())
+    r1 = dyn.run(batch, 64)
+    stat = HamletRuntime(wl, policy=AlwaysShare())
+    r2 = stat.run(batch, 64)
+    for k in r1:
+        assert r1[k] == r2[k]
+    assert dyn.stats.snapshots_created < stat.stats.snapshots_created

@@ -1,0 +1,89 @@
+"""Template derivation tests (paper Examples 2, 3, 10; Figs. 3, 8)."""
+
+import pytest
+
+from repro.core.pattern import (EventType, Kleene, Not, Or, Seq, analyze)
+from repro.core.query import Query, Workload, count_star
+from repro.core.events import StreamSchema
+
+A, B, C, X = map(EventType, "ABCX")
+
+
+def test_example2_seq_kleene():
+    # q1: SEQ(A, B+) — Fig. 3(a)
+    info = analyze(Seq(A, Kleene(B)))
+    assert info.start == {"A"}
+    assert info.end == {"B"}
+    assert info.pred_types("B") == {"A", "B"}
+    assert info.pred_types("A") == set()
+    assert info.kleene_types == {"B"}
+
+
+def test_merged_template_example3():
+    # Fig. 3(b): q1 = SEQ(A, B+), q2 = SEQ(C, B+); B+ shared by both
+    schema = StreamSchema(types=("A", "B", "C"))
+    wl = Workload(schema, [
+        Query("q1", Seq(A, Kleene(B))),
+        Query("q2", Seq(C, Kleene(B))),
+    ])
+    assert wl.sharable_kleene("B") == [0, 1]
+    assert wl.sharable_components() == [[0, 1]]
+
+
+def test_nested_kleene_example10():
+    # Fig. 8: (SEQ(A, B+))+ adds the loop B -> A
+    info = analyze(Kleene(Seq(A, Kleene(B))))
+    assert info.pred_types("B") == {"A", "B"}
+    assert info.pred_types("A") == {"B"}
+    assert info.start == {"A"}
+    assert info.end == {"B"}
+
+
+def test_negation_positions():
+    info = analyze(Seq(A, Not(X), Kleene(B)))
+    (nc,) = info.negatives
+    assert nc.neg_type == "X" and nc.before == {"A"} and nc.after == {"B"}
+
+    info = analyze(Seq(A, Kleene(B), Not(X)))
+    (nc,) = info.negatives
+    assert nc.before == {"B"} and nc.after is None
+
+    info = analyze(Seq(Not(X), A, Kleene(B)))
+    (nc,) = info.negatives
+    assert nc.before is None and nc.after == {"A"}
+
+
+def test_duplicate_type_rejected():
+    with pytest.raises(ValueError, match="more than"):
+        analyze(Seq(A, Kleene(B), A))
+
+
+def test_pos_and_neg_same_type_rejected():
+    with pytest.raises(ValueError):
+        analyze(Seq(A, Not(A), Kleene(B)))
+
+
+def test_or_expansion_disjoint():
+    schema = StreamSchema(types=("A", "B", "C", "X"))
+    q = Query("q", Or(Kleene(B), Kleene(X)), within=10, slide=10)
+    subs, comb = q.expand()
+    assert len(subs) == 2 and comb.mode == "disjoint" and comb.op == "or"
+    assert comb.combine_counts(3.0, 4.0) == 7.0
+
+
+def test_and_combination_identical():
+    q = Query("q", type("A_", (), {})) if False else None
+    from repro.core.query import _Combine
+
+    c = _Combine("and", "identical")
+    # C12 = C1 = 3: pairs of distinct trends among 3 = 3
+    assert c.combine_counts(3.0, 3.0) == 3.0
+    c = _Combine("and", "disjoint")
+    assert c.combine_counts(3.0, 4.0) == 12.0
+
+
+def test_or_overlapping_rejected():
+    schema = StreamSchema(types=("A", "B", "C"))
+    q = Query("q", Or(Seq(A, Kleene(B)), Seq(C, Kleene(B))))
+    with pytest.raises(NotImplementedError):
+        q.expand()

@@ -1,0 +1,102 @@
+"""Hypothesis property tests on system invariants."""
+
+import math
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.baselines.greta import greta_run
+from repro.core.engine import HamletRuntime
+from repro.core.events import EventBatch, StreamSchema
+from repro.core.optimizer import AlwaysShare, DynamicPolicy, NeverShare
+from repro.core.pattern import EventType, Kleene, Seq
+from repro.core.query import Pred, Query, Workload, agg_sum, count_star
+
+SCHEMA = StreamSchema(types=("A", "B", "C"), attrs=("v",))
+A, B, C = map(EventType, "ABC")
+
+
+def _wl():
+    return Workload(SCHEMA, [
+        Query("q1", Seq(A, Kleene(B)), aggs=(count_star(), agg_sum("B", "v")),
+              within=20, slide=10),
+        Query("q2", Seq(C, Kleene(B)), preds={"B": [Pred("v", "<", 3)]},
+              within=20, slide=20),
+        Query("q3", Kleene(B), within=20, slide=10),
+    ])
+
+
+streams = st.lists(
+    st.tuples(st.integers(0, 2), st.integers(0, 4)), min_size=0, max_size=14)
+
+
+def _batch(evs):
+    n = len(evs)
+    types = np.array([t for t, _ in evs], dtype=np.int32)
+    attrs = np.array([[float(v)] for _, v in evs]).reshape(n, 1) if n else None
+    times = np.arange(1, n + 1)
+    return EventBatch(SCHEMA, types, times, attrs)
+
+
+@settings(max_examples=30, deadline=None)
+@given(streams)
+def test_policy_invariance(evs):
+    """Sharing decisions must never change results (Thm 3.1)."""
+    batch = _batch(evs)
+    wl = _wl()
+    outs = []
+    for pol in (DynamicPolicy(), AlwaysShare(), NeverShare()):
+        outs.append(HamletRuntime(wl, policy=pol).run(batch, t_end=40))
+    for other in outs[1:]:
+        assert outs[0].keys() == other.keys()
+        for k in outs[0]:
+            for ak, v in outs[0][k].items():
+                w = other[k][ak]
+                assert (math.isnan(v) and math.isnan(w)) or \
+                    abs(v - w) <= 1e-9 * (1 + abs(w)), (k, ak, v, w)
+
+
+@settings(max_examples=25, deadline=None)
+@given(streams)
+def test_engine_matches_independent_greta(evs):
+    batch = _batch(evs)
+    wl = _wl()
+    got = HamletRuntime(wl).run(batch, t_end=40)
+    want = greta_run(wl, batch, 40)
+    assert got.keys() == want.keys()
+    for k in got:
+        for ak, v in got[k].items():
+            w = want[k][ak]
+            assert (math.isnan(v) and math.isnan(w)) or \
+                abs(v - w) <= 1e-9 * (1 + abs(w)), (k, ak, v, w)
+
+
+@settings(max_examples=25, deadline=None)
+@given(streams, st.integers(0, 4))
+def test_appending_b_events_monotone(evs, extra_v):
+    """Appending one more matched B event never decreases COUNT(*) of B+
+    (counts are sums of non-negative path counts)."""
+    wl = Workload(SCHEMA, [Query("q", Kleene(B), within=20, slide=20)])
+    b1 = _batch(evs)
+    b2 = _batch(evs + [(1, extra_v)])
+    r1 = HamletRuntime(wl).run(b1, t_end=20)
+    r2 = HamletRuntime(wl).run(b2, t_end=20)
+    for k in r1:
+        assert r2[k]["COUNT(*)"] >= r1[k]["COUNT(*)"]
+
+
+@settings(max_examples=20, deadline=None)
+@given(streams)
+def test_group_isolation(evs):
+    """Moving all events into a second group must reproduce the same values
+    under that group's key (group partitions are independent)."""
+    batch = _batch(evs)
+    wl = _wl()
+    r1 = HamletRuntime(wl).run(batch, t_end=40)
+    shifted = EventBatch(SCHEMA, batch.type_id, batch.time, batch.attrs,
+                         np.full(len(batch), 7, dtype=np.int64))
+    r2 = HamletRuntime(wl).run(shifted, t_end=40)
+    for (q, g, w), vals in r1.items():
+        for ak, v in vals.items():
+            w2 = r2[(q, 7, w)][ak]
+            assert (math.isnan(v) and math.isnan(w2)) or v == w2

@@ -1,0 +1,55 @@
+"""Stream substrate tests: generators and mesh partitioning."""
+
+import numpy as np
+
+from repro.core.events import pane_size_for
+from repro.streams.generator import (StreamConfig, bursty_stream,
+                                     ridesharing_stream, stock_stream,
+                                     RIDESHARING_SCHEMA)
+from repro.streams.partition import shard_by_group
+
+
+def test_bursty_stream_properties():
+    cfg = StreamConfig(schema=RIDESHARING_SCHEMA, events_per_minute=300,
+                       minutes=2, n_groups=5, burstiness=0.9, seed=3)
+    b = bursty_stream(cfg)
+    assert len(b) == 600
+    assert (np.diff(b.time) >= 0).all()
+    assert set(np.unique(b.group)) <= set(range(5))
+    # burstiness: mean same-type run length far above the iid expectation
+    runs = 1 + int(np.sum(b.type_id[1:] != b.type_id[:-1]))
+    assert len(b) / runs > 3.0
+
+
+def test_burstiness_monotone():
+    def mean_run(burst):
+        b = bursty_stream(StreamConfig(schema=RIDESHARING_SCHEMA,
+                                       events_per_minute=500, minutes=2,
+                                       burstiness=burst, seed=0))
+        runs = 1 + int(np.sum(b.type_id[1:] != b.type_id[:-1]))
+        return len(b) / runs
+
+    assert mean_run(0.95) > mean_run(0.6) > mean_run(0.1)
+
+
+def test_generators_run():
+    for gen in (ridesharing_stream, stock_stream):
+        b = gen(events_per_minute=100, minutes=1)
+        assert len(b) == 100
+
+
+def test_shard_by_group_roundtrip():
+    b = ridesharing_stream(events_per_minute=200, minutes=1, n_groups=7)
+    shards = shard_by_group(b, n_shards=4)
+    assert shards.n_shards == 4
+    # every event lands in the shard of its group hash, padding marked
+    total = int(shards.valid.sum())
+    assert total == len(b)
+    for s in range(4):
+        g = shards.group[s][shards.valid[s]]
+        assert ((g % 4) == s).all()
+
+
+def test_pane_size():
+    assert pane_size_for([(10, 5), (15, 5)]) == 5
+    assert pane_size_for([(30, 1), (20, 5)]) == 1

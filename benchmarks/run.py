@@ -18,7 +18,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None,
-                    help="fig9|fig11|fig12|kernel|roofline")
+                    help="fig9|fig11|fig12|overload|kernel|roofline")
     args = ap.parse_args()
     quick = not args.full
 
@@ -41,6 +41,10 @@ def main() -> None:
 
         sections.append(("fig12_dynamic_vs_static",
                          fig12_dynamic_vs_static.main(quick=quick)))
+    if args.only in (None, "overload"):
+        from . import fig_overload
+
+        sections.append(("fig_overload", fig_overload.main(quick=quick)))
     if args.only in (None, "roofline"):
         from . import roofline
 

@@ -16,11 +16,20 @@ module supplies those substrate pieces:
   (overlap factor ≤ 1 + max(within)/epoch), exact results.  Query add/remove
   takes effect at the next epoch boundary (plan migration at epoch
   granularity, after [48]).
+
+Passing an :class:`repro.overload.OverloadConfig` opts the service into load
+shedding at its natural (epoch) granularity: released events are shed by the
+configured policy before entering history, the PID controller is fed the
+measured epoch-processing latency (``slo_ms`` is therefore a per-*epoch*
+target here; the pane-granular loop lives in ``repro.overload.runtime``), and
+every shed event is charged to the error accountant.  The state is exposed as
+``service.overload``.
 """
 
 from __future__ import annotations
 
 import math
+import time
 
 import numpy as np
 
@@ -28,7 +37,69 @@ from .engine import HamletRuntime, RunStats
 from .events import EventBatch
 from .query import Query, Workload
 
-__all__ = ["OutOfOrderBuffer", "HamletService"]
+__all__ = ["OutOfOrderBuffer", "HamletService", "ServiceOverloadState"]
+
+
+class ServiceOverloadState:
+    """Overload machinery attached to a :class:`HamletService`."""
+
+    def __init__(self, workload: Workload, config):
+        from ..overload.accountant import ErrorAccountant
+        from ..overload.controller import LatencyController
+        from ..overload.shedding import make_shedder
+
+        self.config = config
+        self.controller = LatencyController.from_config(config)
+        self.accountant = ErrorAccountant(workload)
+        self.shedder = make_shedder(
+            config.shed_policy, workload, seed=config.seed,
+            min_burst_keep=config.min_burst_keep,
+            benefit_model=config.benefit_model)
+        self.shed_events = 0
+
+    def rebind(self, workload: Workload) -> None:
+        """Refresh the workload-derived pieces after query add/remove;
+        controller state and accounting history survive the migration."""
+        from ..overload.shedding import make_shedder
+
+        self.shedder = make_shedder(
+            self.config.shed_policy, workload, seed=self.config.seed,
+            min_burst_keep=self.config.min_burst_keep,
+            benefit_model=self.config.benefit_model)
+        self.accountant.migrate(workload)
+
+    def shed(self, batch: EventBatch) -> EventBatch:
+        """Shed from a released batch, pane by pane.
+
+        The batch may span several panes (the service drains at epoch
+        granularity), but burst segmentation — and the per-burst witness the
+        accountant's multiplicative bound relies on — is pane-scoped in the
+        engine, so the plan must be too: a run spanning two panes is two
+        engine bursts, and a witness in the first says nothing about the
+        second."""
+        if self.shedder is None or not len(batch):
+            return batch
+        ratio = self.controller.shed_ratio
+        if ratio <= 0.0:
+            return batch
+        pane = self.accountant.pane
+        kept: list[EventBatch] = []
+        for t0 in range(int(batch.time.min()) // pane * pane,
+                        int(batch.time.max()) + 1, pane):
+            chunk = batch.time_slice(t0, t0 + pane)
+            if not len(chunk):
+                continue
+            keep_n = math.floor(len(chunk) * (1.0 - ratio) + 1e-9)
+            if keep_n >= len(chunk):
+                kept.append(chunk)
+                continue
+            plan = self.shedder.plan(chunk, keep_n)
+            self.accountant.record(chunk.select(plan.shed),
+                                   witnessed=plan.witnessed)
+            self.shed_events += plan.n_shed
+            kept.append(chunk.select(plan.keep))
+        return EventBatch.concat(kept) if kept else batch.select(
+            np.array([], dtype=np.int64))
 
 
 class OutOfOrderBuffer:
@@ -93,7 +164,8 @@ class HamletService:
     """Incremental HAMLET with dynamic workload changes at epoch boundaries."""
 
     def __init__(self, schema, queries: list[Query], policy=None,
-                 lateness: int = 0, sharable_mode: str = "units"):
+                 lateness: int = 0, sharable_mode: str = "units",
+                 overload=None):
         self.schema = schema
         self.sharable_mode = sharable_mode
         self.policy = policy
@@ -106,6 +178,12 @@ class HamletService:
         self.results: dict = {}
         self.stats = RunStats()
         self._refresh_derived()
+        self.overload = (None if overload is None else
+                         ServiceOverloadState(self._workload(), overload))
+
+    def _workload(self) -> Workload:
+        return Workload(self.schema, list(self._queries.values()),
+                        sharable_mode=self.sharable_mode)
 
     def _refresh_derived(self) -> None:
         self._epoch_len = 1
@@ -133,11 +211,15 @@ class HamletService:
         self._pending_add.clear()
         self._pending_remove.clear()
         self._refresh_derived()
+        if self.overload is not None:
+            self.overload.rebind(self._workload())
 
     # -- streaming --
 
     def feed(self, batch: EventBatch) -> dict:
         ready = self._ooo.feed(batch)
+        if self.overload is not None:
+            ready = self.overload.shed(ready)
         self._append(ready)
         return self._drain(final=False)
 
@@ -168,6 +250,7 @@ class HamletService:
         return new
 
     def _run_epoch(self, end: int) -> dict:
+        t_start = time.perf_counter()
         L = self._epoch_len
         # replay shift: a multiple of L (window starts stay slide-aligned)
         k_hist = math.ceil(self._max_within / L)
@@ -179,8 +262,7 @@ class HamletService:
         shifted = EventBatch(self.schema, sub.type_id, sub.time - shift,
                              sub.attrs, sub.group)
 
-        wl = Workload(self.schema, list(self._queries.values()),
-                      sharable_mode=self.sharable_mode)
+        wl = self._workload()
         rt = (HamletRuntime(wl, policy=self.policy) if self.policy
               else HamletRuntime(wl))
         res = rt.run(shifted, t_end=end - shift)
@@ -203,4 +285,7 @@ class HamletService:
         self._events = ev.select(keep) if len(keep) else None
         self._t_done = end
         self._apply_pending()
+        if self.overload is not None:
+            self.overload.controller.update(
+                (time.perf_counter() - t_start) * 1e3)
         return out

@@ -6,6 +6,15 @@ while the dry-run proves the pane dataplane lowers onto the production mesh).
 
     PYTHONPATH=src python -m repro.launch.hamlet_service --minutes 2 \
         --events-per-minute 500 --policy dynamic
+
+``--overload`` switches to the bounded-latency runtime: an overload scenario
+stream (rate ramp + flash crowds) is offered at ``--offered-x`` times the
+calibrated capacity and processed through ingress backpressure, per-pane
+admission control, the selected shedding policy, and the PID latency
+controller:
+
+    PYTHONPATH=src python -m repro.launch.hamlet_service --overload \
+        --offered-x 2 --shed-policy benefit_weighted --recall
 """
 
 from __future__ import annotations
@@ -17,7 +26,8 @@ from ..core.engine import HamletRuntime
 from ..core.optimizer import AlwaysShare, DynamicPolicy, FlopPolicy, NeverShare
 from ..core.pattern import EventType, Kleene, Not, Seq
 from ..core.query import Pred, Query, Workload, agg_avg, agg_sum, count_star
-from ..streams.generator import RIDESHARING_SCHEMA, ridesharing_stream
+from ..streams.generator import (RIDESHARING_SCHEMA, OverloadStreamConfig,
+                                 overload_stream, ridesharing_stream)
 
 POLICIES = {"dynamic": DynamicPolicy, "always": AlwaysShare,
             "never": NeverShare, "flop": FlopPolicy}
@@ -53,6 +63,62 @@ def ridesharing_workload(n_queries: int = 3) -> Workload:
     return Workload(RIDESHARING_SCHEMA, out)
 
 
+def run_overload(args) -> None:
+    from ..overload import OverloadConfig, OverloadRuntime
+
+    wl = ridesharing_workload(args.queries)
+    t_end = args.minutes * 60
+    stream = overload_stream(OverloadStreamConfig(
+        schema=RIDESHARING_SCHEMA,
+        base_events_per_minute=args.events_per_minute,
+        minutes=args.minutes, ramp_to=1.5,
+        flash_crowds=((t_end // 3, 20, 3.0),),
+        n_groups=args.groups, type_weights=(1, 1, 6, 1, 1, 1)))
+
+    # calibrate capacity (events/s the unshedded engine sustains) on a prefix
+    sample = stream.time_slice(0, min(60, t_end))
+    cal = HamletRuntime(wl, policy=POLICIES[args.policy]())
+    t0 = time.perf_counter()
+    cal.run(sample, t_end=min(60, t_end))
+    capacity = len(sample) / max(time.perf_counter() - t0, 1e-9)
+
+    pane = cal.pane
+    tick_seconds = (len(stream) / t_end) / (args.offered_x * capacity)
+    slo_ms = args.slo_ms or pane * tick_seconds * 1e3  # default: real time
+    cfg = OverloadConfig(
+        slo_ms=slo_ms, shed_policy=args.shed_policy,
+        tick_seconds=tick_seconds,
+        pane_budget_events=int(capacity * pane * tick_seconds))
+    ort = OverloadRuntime(wl, cfg, policy=POLICIES[args.policy](),
+                          backend=args.backend)
+    res = ort.run(stream, t_end)
+    s = ort.metrics.summary()
+    print(f"offered_x={args.offered_x} capacity={capacity:.0f} ev/s "
+          f"slo={slo_ms:.2f} ms policy={args.shed_policy}")
+    print(f"offered={s['offered']} admitted={s['admitted']} "
+          f"shed={s['shed']} ({100 * s['shed_frac']:.1f}%) "
+          f"ingress_dropped={ort.queue.dropped} rejected={ort.queue.rejected}")
+    print(f"pane proc p50={s['p50_proc_ms']:.2f} ms "
+          f"p99={s['p99_proc_ms']:.2f} ms ({s['p99_proc_ms'] / slo_ms:.2f}x slo) "
+          f"| e2e p99={s['p99_lat_ms']:.2f} ms "
+          f"mean_shed_ratio={s['mean_shed_ratio']:.2f}")
+    for name, rep in sorted(ort.accountant.report().items()):
+        print(f"  {name}: shed kleene={rep.shed_kleene} "
+              f"critical={rep.shed_critical} negative={rep.shed_negative} "
+              f"subset_guarantee={rep.subset_guarantee}")
+    if args.recall:
+        truth = HamletRuntime(wl, policy=POLICIES[args.policy]()).run(
+            stream, t_end)
+        num = den = 0.0
+        for k, v in truth.items():
+            if v.get("COUNT(*)", 0.0) <= 0:
+                continue
+            num += res.get(k, {}).get("COUNT(*)", 0.0) > 0
+            den += 1
+        print(f"detection recall={num / max(den, 1):.3f} "
+              f"over {int(den)} windows")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--minutes", type=int, default=2)
@@ -61,7 +127,21 @@ def main():
     ap.add_argument("--groups", type=int, default=4)
     ap.add_argument("--policy", choices=list(POLICIES), default="dynamic")
     ap.add_argument("--backend", default="np")
+    ap.add_argument("--overload", action="store_true",
+                    help="bounded-latency runtime on an overload scenario")
+    ap.add_argument("--offered-x", type=float, default=2.0,
+                    help="offered load as a multiple of calibrated capacity")
+    ap.add_argument("--slo-ms", type=float, default=None,
+                    help="pane latency SLO (default: the real-time pane budget)")
+    ap.add_argument("--shed-policy", default="benefit_weighted",
+                    choices=["none", "drop_tail", "random", "benefit_weighted"])
+    ap.add_argument("--recall", action="store_true",
+                    help="also compute recall vs the unshedded run")
     args = ap.parse_args()
+
+    if args.overload:
+        run_overload(args)
+        return
 
     wl = ridesharing_workload(args.queries)
     batch = ridesharing_stream(events_per_minute=args.events_per_minute,

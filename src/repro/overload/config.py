@@ -1,0 +1,72 @@
+"""Configuration for the bounded-latency overload runtime.
+
+One dataclass gathers every knob of the overload subsystem so callers
+(`OverloadRuntime`, `HamletService`, the launch CLI, benchmarks) opt in with a
+single object.  The SLO is expressed on *pane* processing latency for the
+runtime (epoch latency for the service, which drains at epoch granularity).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+__all__ = ["OverloadConfig"]
+
+
+@dataclass
+class OverloadConfig:
+    """Opt-in overload handling: admission control + shedding + SLO control.
+
+    slo_ms             latency target the controller steers towards
+    shed_policy        "none" | "drop_tail" | "random" | "benefit_weighted"
+    pane_budget_events hard per-pane admission cap (events); None = uncapped.
+                       This is the feed-forward part of admission control: it
+                       bounds per-pane work even before the controller reacts.
+    queue_capacity     ingress queue bound (events); arrivals beyond it are
+                       dropped at ingress and counted
+    high_watermark     queue fill fraction above which the queue stops
+                       accepting (backpressure asserted)
+    low_watermark      fill fraction below which it resumes accepting
+    kp / ki / kd       PID gains on the relative latency error
+                       ``(latency - slo) / slo``.  Keep the loop gain
+                       ``(kp + ki) * overload_factor`` below ~1: the plant
+                       gain scales with offered load, and a hot discrete
+                       loop limit-cycles between shedding nothing and
+                       everything
+    max_shed           ceiling on the controller's shed ratio
+    fixed_shed         if set, bypass the controller and shed this constant
+                       fraction (used for equal-ratio policy comparisons)
+    min_burst_keep     fraction of each Kleene burst the benefit-weighted
+                       policy protects in its primary shed phase (>= 1 event),
+                       so ``E+`` patterns keep at least a match per burst
+    benefit_model      "v1" | "v2" — which Def. 11/12 cost model weights bursts
+    seed               rng seed for the random policy
+    tick_seconds       maps stream ticks to wall seconds; when set, latency is
+                       end-to-end (queueing backlog included), not just the
+                       pane processing time
+    """
+
+    slo_ms: float = 50.0
+    shed_policy: str = "benefit_weighted"
+    pane_budget_events: int | None = None
+    queue_capacity: int = 1 << 16
+    high_watermark: float = 0.75
+    low_watermark: float = 0.5
+    kp: float = 0.1
+    ki: float = 0.05
+    kd: float = 0.0
+    max_shed: float = 0.98
+    fixed_shed: float | None = None
+    min_burst_keep: float = 0.25
+    benefit_model: str = "v1"
+    seed: int = 0
+    tick_seconds: float | None = None
+
+    def __post_init__(self) -> None:
+        if self.shed_policy not in ("none", "drop_tail", "random",
+                                    "benefit_weighted"):
+            raise ValueError(f"unknown shed_policy {self.shed_policy!r}")
+        if not (0.0 <= self.low_watermark <= self.high_watermark <= 1.0):
+            raise ValueError("need 0 <= low_watermark <= high_watermark <= 1")
+        if self.fixed_shed is not None and not (0.0 <= self.fixed_shed < 1.0):
+            raise ValueError("fixed_shed must be in [0, 1)")

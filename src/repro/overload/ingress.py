@@ -1,0 +1,80 @@
+"""Bounded ingress queue with watermark-based backpressure.
+
+The queue sits between producers and the pane loop.  It is bounded in event
+count; crossing the high watermark flips ``accepting`` off (the backpressure
+signal a producer should honour — offers made while not accepting are counted
+as ``rejected`` and dropped, since this process cannot block a remote
+producer), and draining below the low watermark flips it back on.  Offers that
+would overflow the hard capacity are truncated and counted as ``dropped``.
+
+Events inside one offered batch are time-ordered (``EventBatch`` enforces it)
+and producers feed in arrival order, so the buffer stays globally ordered and
+``poll_until`` is a simple split.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from ..core.events import EventBatch, StreamSchema
+
+__all__ = ["IngressQueue"]
+
+
+class IngressQueue:
+    def __init__(self, schema: StreamSchema, capacity: int = 1 << 16,
+                 high_watermark: float = 0.75, low_watermark: float = 0.5):
+        if capacity <= 0:
+            raise ValueError("capacity must be positive")
+        self.schema = schema
+        self.capacity = int(capacity)
+        self.high = int(np.ceil(high_watermark * capacity))
+        self.low = int(np.floor(low_watermark * capacity))
+        self.accepting = True
+        self.rejected = 0        # offered while backpressure was asserted
+        self.dropped = 0         # truncated against the hard capacity
+        self._batches: list[EventBatch] = []
+        self._n = 0
+
+    def __len__(self) -> int:
+        return self._n
+
+    def offer(self, batch: EventBatch) -> int:
+        """Enqueue as much of ``batch`` as admission allows; returns accepted
+        event count and updates the backpressure state."""
+        n = len(batch)
+        if n == 0:
+            return 0
+        if not self.accepting:
+            self.rejected += n
+            return 0
+        space = self.capacity - self._n
+        take = min(n, space)
+        if take < n:
+            self.dropped += n - take
+        if take > 0:
+            b = batch if take == n else batch.select(np.arange(take))
+            self._batches.append(b)
+            self._n += take
+        if self._n >= self.high:
+            self.accepting = False
+        return take
+
+    def poll_until(self, t_exclusive: int) -> EventBatch:
+        """Dequeue every buffered event with ``time < t_exclusive``."""
+        if self._n == 0:
+            return self._empty()
+        merged = (self._batches[0] if len(self._batches) == 1
+                  else EventBatch.concat(self._batches))
+        hi = int(np.searchsorted(merged.time, t_exclusive, side="left"))
+        out = merged.select(np.arange(hi))
+        rest = merged.select(np.arange(hi, len(merged)))
+        self._batches = [rest] if len(rest) else []
+        self._n = len(rest)
+        if self._n <= self.low:
+            self.accepting = True
+        return out
+
+    def _empty(self) -> EventBatch:
+        return EventBatch(self.schema, np.array([], np.int32),
+                          np.array([], np.int64), None)

@@ -3,6 +3,6 @@ evaluation datasets, replay sources, and group-key partitioning."""
 
 from .generator import (  # noqa: F401
     StreamConfig, ridesharing_stream, stock_stream, smarthome_stream,
-    nyc_taxi_stream, bursty_stream,
+    nyc_taxi_stream, bursty_stream, OverloadStreamConfig, overload_stream,
 )
 from .partition import shard_by_group  # noqa: F401

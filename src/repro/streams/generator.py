@@ -19,6 +19,7 @@ from ..core.events import EventBatch, StreamSchema
 __all__ = [
     "StreamConfig", "bursty_stream", "ridesharing_stream", "stock_stream",
     "smarthome_stream", "nyc_taxi_stream",
+    "OverloadStreamConfig", "overload_stream",
     "RIDESHARING_SCHEMA", "STOCK_SCHEMA", "SMARTHOME_SCHEMA", "TAXI_SCHEMA",
 ]
 
@@ -54,24 +55,29 @@ class StreamConfig:
     ticks_per_minute: int = 60
 
 
-def bursty_stream(cfg: StreamConfig) -> EventBatch:
-    """Markov-switching type sequence: with prob ``burstiness`` the next event
-    repeats the current type (a burst); otherwise it redraws from the type
-    distribution.  Timestamps are strictly increasing integer ticks."""
-    rng = np.random.default_rng(cfg.seed)
-    n = cfg.events_per_minute * cfg.minutes
-    T = cfg.schema.n_types
-    w = np.asarray(cfg.type_weights if cfg.type_weights is not None
-                   else np.ones(T))
+def _markov_types(rng, n: int, n_types: int, weights, burstiness: float
+                  ) -> np.ndarray:
+    """Markov-switching type sequence: with prob ``burstiness`` the next
+    event repeats the current type (a burst); otherwise it redraws from the
+    type distribution."""
+    w = np.asarray(np.ones(n_types) if weights is None else weights,
+                   dtype=float)
     w = w / w.sum()
-
     types = np.empty(n, dtype=np.int32)
-    types[0] = rng.choice(T, p=w)
-    redraw = rng.random(n) >= cfg.burstiness
-    draws = rng.choice(T, size=n, p=w)
+    types[0] = rng.choice(n_types, p=w)
+    redraw = rng.random(n) >= burstiness
+    draws = rng.choice(n_types, size=n, p=w)
     for i in range(1, n):
         types[i] = draws[i] if redraw[i] else types[i - 1]
+    return types
 
+
+def bursty_stream(cfg: StreamConfig) -> EventBatch:
+    """Bursty type sequence over strictly increasing integer tick times."""
+    rng = np.random.default_rng(cfg.seed)
+    n = cfg.events_per_minute * cfg.minutes
+    types = _markov_types(rng, n, cfg.schema.n_types, cfg.type_weights,
+                          cfg.burstiness)
     total_ticks = cfg.minutes * cfg.ticks_per_minute
     if n <= total_ticks:
         times = np.sort(rng.choice(total_ticks, size=n, replace=False))
@@ -82,6 +88,54 @@ def bursty_stream(cfg: StreamConfig) -> EventBatch:
     groups = rng.integers(0, cfg.n_groups, size=n)
     return EventBatch(cfg.schema, types, np.asarray(times, dtype=np.int64),
                       attrs, groups)
+
+
+@dataclass
+class OverloadStreamConfig:
+    """Overload scenario: a rate ramp with flash crowds on top.
+
+    The per-tick arrival rate starts at ``base_events_per_minute``, ramps
+    linearly to ``ramp_to`` times that by the end of the stream, and each
+    ``(start_tick, duration_ticks, multiplier)`` entry in ``flash_crowds``
+    multiplies the rate over its span.  Per-tick counts are Poisson, so
+    instantaneous load is itself bursty; event *types* keep the Markov
+    burst structure of :func:`bursty_stream` (the regime graphlet sharing —
+    and pattern-aware shedding — care about).
+    """
+
+    schema: StreamSchema
+    base_events_per_minute: int = 300
+    minutes: int = 10
+    ramp_to: float = 1.0
+    flash_crowds: tuple[tuple[int, int, float], ...] = ()
+    n_groups: int = 4
+    burstiness: float = 0.85
+    type_weights: tuple[float, ...] | None = None
+    attr_low: float = 0.0
+    attr_high: float = 10.0
+    seed: int = 0
+    ticks_per_minute: int = 60
+
+
+def overload_stream(cfg: OverloadStreamConfig) -> EventBatch:
+    rng = np.random.default_rng(cfg.seed)
+    total_ticks = cfg.minutes * cfg.ticks_per_minute
+    base_per_tick = cfg.base_events_per_minute / cfg.ticks_per_minute
+    mult = np.linspace(1.0, max(cfg.ramp_to, 0.0), total_ticks)
+    for start, duration, m in cfg.flash_crowds:
+        mult[start:start + duration] *= m
+    counts = rng.poisson(base_per_tick * mult)
+    n = int(counts.sum())
+    if n == 0:
+        return EventBatch(cfg.schema, np.array([], np.int32),
+                          np.array([], np.int64), None)
+    times = np.repeat(np.arange(total_ticks, dtype=np.int64), counts)
+    types = _markov_types(rng, n, cfg.schema.n_types, cfg.type_weights,
+                          cfg.burstiness)
+    attrs = rng.uniform(cfg.attr_low, cfg.attr_high,
+                        size=(n, max(1, len(cfg.schema.attrs))))
+    groups = rng.integers(0, cfg.n_groups, size=n)
+    return EventBatch(cfg.schema, types, times, attrs, groups)
 
 
 def ridesharing_stream(events_per_minute: int = 200, minutes: int = 10,

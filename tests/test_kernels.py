@@ -3,10 +3,13 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
-from repro.kernels import ops
-from repro.kernels import ref
+pytest.importorskip("hypothesis",
+                    reason="kernel sweeps need the optional hypothesis dep")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.kernels import ops  # noqa: E402
+from repro.kernels import ref  # noqa: E402
 
 
 def _relerr(a, b):

@@ -1,0 +1,413 @@
+"""Overload subsystem: shedding policies, PID controller, ingress queue,
+bounded-latency runtime, and error-bound accounting."""
+
+import numpy as np
+import pytest
+
+from repro.core.engine import HamletRuntime
+from repro.core.events import EventBatch, StreamSchema
+from repro.core.pattern import EventType, Kleene, Not, Seq
+from repro.core.query import Pred, Query, Workload, count_star
+from repro.core.service import HamletService
+from repro.overload import (BenefitWeighted, DropTail, IngressQueue,
+                            LatencyController, OverloadConfig,
+                            OverloadRuntime, RandomShed, TypeProfile)
+
+SCHEMA = StreamSchema(types=("A", "B", "C", "D"), attrs=("v",))
+A, B, C, D = map(EventType, "ABCD")
+
+
+def _wl(with_not=True):
+    qs = [Query("q1", Seq(A, Kleene(B)), within=10, slide=5),
+          Query("q2", Kleene(B), within=10, slide=10)]
+    if with_not:
+        qs.append(Query("q3", Seq(A, Kleene(B), Not(C)), within=10, slide=10))
+    return Workload(SCHEMA, qs)
+
+
+def _stream(n=120, t_max=40, seed=0, groups=2, p=(0.15, 0.6, 0.1, 0.15)):
+    rng = np.random.default_rng(seed)
+    types = rng.choice(4, n, p=list(p)).astype(np.int32)
+    times = np.sort(rng.integers(0, t_max, n))
+    attrs = rng.integers(0, 5, (n, 1)).astype(float)
+    return EventBatch(SCHEMA, types, times, attrs,
+                      rng.integers(0, groups, n))
+
+
+# ---------------------------------------------------------------- controller
+
+
+@pytest.mark.parametrize("load_x", [1.5, 2.0, 4.0])
+def test_controller_converges_on_sustained_overload(load_x):
+    """Pane-processing plant at a sustained overload multiple: the shed ratio
+    must converge to 1 - 1/load and processing time to the SLO, including
+    under measurement noise."""
+    slo = 20.0
+    rng = np.random.default_rng(int(load_x * 10))
+    ctl = LatencyController(slo_ms=slo)
+    hist = []
+    for _ in range(200):
+        proc = ((1.0 - ctl.shed_ratio) * load_x * slo
+                * (1.0 + 0.1 * rng.standard_normal()))
+        ctl.update(max(proc, 0.0))
+        hist.append(proc)
+    tail = hist[-50:]
+    assert abs(np.mean(tail) - slo) < 0.15 * slo
+    assert abs(ctl.shed_ratio - (1 - 1 / load_x)) < 0.1
+
+
+def test_controller_idle_never_sheds():
+    ctl = LatencyController(slo_ms=20.0)
+    for _ in range(100):
+        ctl.update(10.0)   # comfortably under the SLO
+    assert ctl.shed_ratio == 0.0
+
+
+def test_controller_fixed_ratio_bypasses_feedback():
+    ctl = LatencyController(slo_ms=20.0, fixed=0.4)
+    for lat in (5.0, 500.0):
+        assert ctl.update(lat) == 0.4
+
+
+def test_controller_recovers_after_burst():
+    """A transient spike raises the ratio; it must decay once load drops."""
+    ctl = LatencyController(slo_ms=20.0)
+    for _ in range(30):
+        ctl.update(100.0)
+    assert ctl.shed_ratio > 0.3
+    for _ in range(100):
+        ctl.update(5.0)
+    assert ctl.shed_ratio < 0.05
+
+
+# ------------------------------------------------------------------ policies
+
+
+def test_drop_tail_keeps_prefix():
+    pane = _stream(n=30)
+    plan = DropTail().plan(pane, keep_n=12)
+    assert (plan.keep == np.arange(12)).all()
+    assert (plan.shed == np.arange(12, 30)).all()
+
+
+def test_random_shed_is_uniform_sized_and_ordered():
+    pane = _stream(n=50)
+    pol = RandomShed(seed=3)
+    plan = pol.plan(pane, keep_n=20)
+    assert plan.n_keep == 20 and plan.n_shed == 30
+    assert (np.diff(plan.keep) > 0).all()
+    # deterministic under the same seed
+    plan2 = RandomShed(seed=3).plan(pane, keep_n=20)
+    assert (plan.keep == plan2.keep).all()
+
+
+def test_type_profile_classification():
+    prof = TypeProfile(_wl())
+    # A heads q1/q3 (critical), B is Kleene everywhere, C is Not(C) in q3,
+    # D is matched by nobody
+    assert prof.critical == {0}
+    assert prof.kleene == {1}
+    assert prof.negative == {2}
+    assert prof.irrelevant == {3}
+
+
+def test_benefit_weighted_sheds_irrelevant_then_kleene_suffixes():
+    pol = BenefitWeighted(_wl(), min_burst_keep=0.25)
+    pane = _stream(n=80, seed=1)
+    n_irr = int(np.sum(pane.type_id == 3))
+    plan = pol.plan(pane, keep_n=len(pane) - n_irr)
+    # exactly the irrelevant events go first
+    assert set(pane.type_id[plan.shed].tolist()) == {3}
+
+    plan = pol.plan(pane, keep_n=len(pane) - n_irr - 10)
+    shed_types = set(pane.type_id[plan.shed].tolist())
+    assert shed_types <= {1, 3}          # then Kleene events, never A/C
+    assert plan.witnessed
+
+
+def test_benefit_weighted_sheds_suffixes_and_keeps_witnesses():
+    """While shedding stays within the witnessed phases, kept events form a
+    prefix of each per-group burst and every trimmed burst keeps a witness."""
+    pol = BenefitWeighted(_wl(), min_burst_keep=0.25)
+    pane = _stream(n=100, seed=2)
+    n_irr = int(np.sum(pane.type_id == 3))
+    plan = pol.plan(pane, keep_n=len(pane) - n_irr - 20)
+    assert plan.witnessed
+    keep = set(plan.keep.tolist())
+    for gk in np.unique(pane.group):
+        gidx = np.nonzero(pane.group == gk)[0]
+        tids = pane.type_id[gidx]
+        cut = np.nonzero(np.diff(tids))[0] + 1
+        bounds = np.concatenate([[0], cut, [len(tids)]])
+        for i in range(len(bounds) - 1):
+            if tids[bounds[i]] != 1:     # only B bursts shed here
+                continue
+            burst = gidx[bounds[i]:bounds[i + 1]]
+            kept_mask = np.array([int(e) in keep for e in burst])
+            assert kept_mask.any()                   # witness survives
+            # kept indices are a prefix of the burst (suffix-first shed)
+            last_kept = np.nonzero(kept_mask)[0].max()
+            assert kept_mask[:last_kept + 1].all()
+
+
+def test_benefit_weighted_prefers_low_sharing_benefit_bursts():
+    """D+ is Kleene for one query, B+ for three: D bursts (lower sharing
+    benefit) shed before B bursts."""
+    wl = Workload(SCHEMA, [
+        Query("q1", Seq(A, Kleene(B)), within=10, slide=10),
+        Query("q2", Kleene(B), within=10, slide=10),
+        Query("q3", Seq(A, Kleene(B), Not(C)), within=10, slide=10),
+        Query("q4", Seq(A, Kleene(D)), within=10, slide=10),
+    ])
+    pol = BenefitWeighted(wl, min_burst_keep=0.25)
+    # one long B burst and one long D burst, same group
+    types = np.array([0] + [1] * 12 + [3] * 12, dtype=np.int32)
+    times = np.arange(len(types), dtype=np.int64)
+    pane = EventBatch(SCHEMA, types, times, None, np.zeros(len(types)))
+    plan = pol.plan(pane, keep_n=len(pane) - 6)
+    assert set(pane.type_id[plan.shed].tolist()) == {3}
+
+
+def test_benefit_weighted_protects_negation_to_the_end():
+    pol = BenefitWeighted(_wl(), min_burst_keep=0.25)
+    pane = _stream(n=60, seed=4)
+    n_neg = int(np.sum(pane.type_id == 2))
+    plan = pol.plan(pane, keep_n=n_neg)   # forced to shed all but |C| events
+    kept_types = pane.type_id[plan.keep]
+    assert (kept_types == 2).all()
+
+
+# ------------------------------------------------------------- ingress queue
+
+
+def test_ingress_queue_watermark_backpressure():
+    q = IngressQueue(SCHEMA, capacity=100, high_watermark=0.8,
+                     low_watermark=0.5)
+    big = _stream(n=90, t_max=10, seed=5)
+    assert q.offer(big) == 90
+    assert not q.accepting                  # crossed the high watermark
+    assert q.offer(_stream(n=10, seed=6)) == 0
+    assert q.rejected == 10
+    out = q.poll_until(100)                 # drain everything
+    assert len(out) == 90
+    assert q.accepting                      # back below the low watermark
+    assert q.offer(_stream(n=10, seed=6)) == 10
+
+
+def test_ingress_queue_truncates_at_capacity():
+    q = IngressQueue(SCHEMA, capacity=50, high_watermark=1.0,
+                     low_watermark=0.5)
+    got = q.offer(_stream(n=80, t_max=10, seed=7))
+    assert got == 50 and q.dropped == 30
+    assert len(q.poll_until(100)) == 50
+
+
+def test_ingress_queue_poll_preserves_time_order():
+    q = IngressQueue(SCHEMA, capacity=1000)
+    b = _stream(n=60, t_max=30, seed=8)
+    q.offer(b.time_slice(0, 15))
+    q.offer(b.time_slice(15, 30))
+    early = q.poll_until(10)
+    assert (early.time < 10).all()
+    rest = q.poll_until(100)
+    assert len(early) + len(rest) == len(b)
+    assert (np.diff(rest.time) >= 0).all()
+
+
+# -------------------------------------------------------------------- runtime
+
+
+def test_runtime_without_shedding_matches_batch_engine():
+    wl = _wl()
+    batch = _stream(n=150, t_max=40, seed=9, groups=3)
+    want = HamletRuntime(wl).run(batch, t_end=40)
+    ort = OverloadRuntime(wl, OverloadConfig(shed_policy="none"))
+    got = ort.run(batch, t_end=40)
+    assert set(got) == set(want)
+    for k in want:
+        assert got[k] == want[k], k
+    assert ort.metrics.summary()["shed"] == 0
+
+
+def test_runtime_fixed_shed_drops_and_stays_subset():
+    wl = _wl()
+    batch = _stream(n=200, t_max=40, seed=10, groups=2)
+    want = HamletRuntime(wl).run(batch, t_end=40)
+    ort = OverloadRuntime(wl, OverloadConfig(shed_policy="benefit_weighted",
+                                             fixed_shed=0.5))
+    got = ort.run(batch, t_end=40)
+    s = ort.metrics.summary()
+    assert 0.4 <= s["shed_frac"] <= 0.6
+    for k, v in want.items():
+        assert got.get(k, {}).get("COUNT(*)", 0.0) <= v["COUNT(*)"] + 1e-9
+
+
+def test_runtime_admission_cap_bounds_pane_work():
+    wl = _wl()
+    batch = _stream(n=300, t_max=40, seed=11)
+    ort = OverloadRuntime(wl, OverloadConfig(shed_policy="drop_tail",
+                                             pane_budget_events=10))
+    ort.run(batch, t_end=40)
+    assert all(p.admitted <= 10 for p in ort.metrics.panes)
+
+
+def test_runtime_controller_holds_slo_with_simulated_clock():
+    """Deterministic plant: processing costs 1 ms per admitted event.  At
+    ~2x capacity the controller must converge the pane-processing time to
+    the SLO and shed roughly half the load."""
+
+    class _Clock:
+        t = 0.0
+
+        def __call__(self):
+            return self.t
+
+    clock = _Clock()
+
+    class _SimRuntime(OverloadRuntime):
+        def _process(self, kept, t0):
+            clock.t += len(kept) * 1e-3    # 1 ms per admitted event
+
+    wl = _wl(with_not=False)
+    rng = np.random.default_rng(12)
+    n_panes, per_pane = 120, 40            # SLO admits ~20 of 40
+    types = rng.choice([0, 1], size=n_panes * per_pane,
+                       p=[0.2, 0.8]).astype(np.int32)
+    times = np.repeat(np.arange(n_panes * 5, step=5), per_pane) \
+        + np.tile(np.arange(per_pane) % 5, n_panes)
+    times = np.sort(times).astype(np.int64)
+    batch = EventBatch(SCHEMA, types, times, None,
+                       np.zeros(len(types), np.int64))
+    cfg = OverloadConfig(slo_ms=20.0, shed_policy="drop_tail",
+                         pane_budget_events=30)
+    ort = _SimRuntime(wl, cfg, clock=clock)
+    ort.run(batch, t_end=n_panes * 5)
+    tail = ort.metrics.panes[-30:]
+    p99 = float(np.percentile([p.proc_ms for p in ort.metrics.panes], 99))
+    assert p99 <= 2 * cfg.slo_ms
+    assert abs(np.mean([p.proc_ms for p in tail]) - cfg.slo_ms) < 6.0
+    assert 0.35 <= np.mean([p.shed_ratio for p in tail]) <= 0.65
+
+
+# --------------------------------------------------------- error accounting
+
+
+def test_accountant_subset_guarantee_flags():
+    wl = _wl()
+    batch = _stream(n=200, t_max=40, seed=13)
+    ort = OverloadRuntime(wl, OverloadConfig(shed_policy="benefit_weighted",
+                                             fixed_shed=0.5))
+    ort.run(batch, t_end=40)
+    rep = ort.accountant.report()
+    # benefit_weighted never reaches negation events at 50% shed
+    assert all(r.subset_guarantee for r in rep.values())
+    assert rep["q2"].shed_kleene > 0
+    assert ort.accountant.total_shed > 0
+
+
+def test_accountant_window_bounds_hold():
+    """Per-window: emitted <= true always; true <= 3^s * emitted whenever the
+    accountant certifies the bound as tight."""
+    wl = Workload(SCHEMA, [Query("q1", Seq(A, Kleene(B)), within=10, slide=5),
+                           Query("q2", Kleene(B), within=10, slide=10)])
+    checked_tight = 0
+    for seed in range(8):
+        batch = _stream(n=150, t_max=30, seed=seed, p=(0.25, 0.65, 0.05, 0.05))
+        want = HamletRuntime(wl).run(batch, t_end=30)
+        for ratio in (0.4, 0.7):
+            ort = OverloadRuntime(wl, OverloadConfig(
+                shed_policy="benefit_weighted", fixed_shed=ratio))
+            got = ort.run(batch, t_end=30)
+            for (qn, gk, w0), v in want.items():
+                t = v["COUNT(*)"]
+                g = got.get((qn, gk, w0), {}).get("COUNT(*)", 0.0)
+                wb = ort.accountant.window_bound(qn, gk, w0)
+                assert g <= t + 1e-9
+                if wb.tight:
+                    checked_tight += 1
+                    assert t <= wb.count_upper_bound(g) + 1e-6
+    assert checked_tight > 50
+
+
+def test_accountant_bound_not_tight_with_kleene_predicates():
+    """Per-event predicates on the Kleene type break the witness argument,
+    so the accountant must refuse the multiplicative bound."""
+    wl = Workload(SCHEMA, [Query("q1", Seq(A, Kleene(B)),
+                                 preds={"B": [Pred("v", "<", 3.0)]},
+                                 within=10, slide=10)])
+    batch = _stream(n=100, t_max=20, seed=14, groups=1)
+    ort = OverloadRuntime(wl, OverloadConfig(shed_policy="benefit_weighted",
+                                             fixed_shed=0.5))
+    ort.run(batch, t_end=20)
+    assert ort.accountant.total_shed > 0
+    for w0 in (0, 10):
+        wb = ort.accountant.window_bound("q1", 0, w0)
+        if wb.shed_kleene:
+            assert not wb.tight
+
+
+def test_accountant_flags_negative_shed():
+    """drop_tail sheds blindly; once a negation-type event is dropped the
+    subset guarantee must be withdrawn."""
+    wl = _wl()
+    batch = _stream(n=200, t_max=40, seed=15, p=(0.1, 0.4, 0.4, 0.1))
+    ort = OverloadRuntime(wl, OverloadConfig(shed_policy="drop_tail",
+                                             fixed_shed=0.6))
+    ort.run(batch, t_end=40)
+    rep = ort.accountant.report()
+    assert rep["q3"].shed_negative > 0
+    assert not rep["q3"].subset_guarantee
+
+
+# ------------------------------------------------------------ service wiring
+
+
+def test_service_overload_opt_in():
+    qs = [Query("q1", Seq(A, Kleene(B)), within=10, slide=5),
+          Query("q2", Kleene(B), within=10, slide=10)]
+    svc = HamletService(SCHEMA, qs, overload=OverloadConfig(
+        shed_policy="benefit_weighted", fixed_shed=0.5))
+    batch = _stream(n=200, t_max=60, seed=16)
+    res = {}
+    for i in range(0, len(batch), 40):
+        res.update(svc.feed(batch.select(np.arange(i, min(i + 40,
+                                                          len(batch))))))
+    res.update(svc.close())
+    assert svc.overload.shed_events > 0
+    assert svc.overload.controller.updates > 0
+    rep = svc.overload.accountant.report()
+    assert rep["q2"].shed_kleene > 0
+    # shedded service results stay below the unshedded service's
+    ref = HamletService(SCHEMA, qs)
+    want = {}
+    for i in range(0, len(batch), 40):
+        want.update(ref.feed(batch.select(np.arange(i, min(i + 40,
+                                                           len(batch))))))
+    want.update(ref.close())
+    for k, v in want.items():
+        assert res.get(k, {}).get("COUNT(*)", 0.0) <= v["COUNT(*)"] + 1e-9
+
+
+def test_service_without_overload_unchanged():
+    qs = [Query("q1", Seq(A, Kleene(B)), within=10, slide=5)]
+    svc = HamletService(SCHEMA, qs)
+    assert svc.overload is None
+
+
+def test_service_overload_migration_taints_new_queries():
+    """A query added after shedding started cannot inherit any guarantee:
+    events shed before it existed were never classified for it."""
+    qs = [Query("q1", Seq(A, Kleene(B)), within=10, slide=10)]
+    svc = HamletService(SCHEMA, qs, overload=OverloadConfig(
+        shed_policy="benefit_weighted", fixed_shed=0.5))
+    batch = _stream(n=200, t_max=60, seed=17)
+    svc.feed(batch.select(np.nonzero(batch.time < 30)[0]))
+    assert svc.overload.shed_events > 0
+    svc.add_query(Query("q4", Seq(C, Kleene(B)), within=10, slide=10))
+    svc.feed(batch.select(np.nonzero(batch.time >= 30)[0]))
+    svc.close()
+    rep = svc.overload.accountant.report()
+    assert not rep["q4"].subset_guarantee          # tainted by migration
+    assert rep["q1"].subset_guarantee              # survivor keeps history
+    wb = svc.overload.accountant.window_bound("q4", 0, 40)
+    assert not wb.tight

@@ -3,7 +3,11 @@
 import math
 
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis",
+                    reason="property tests need the optional hypothesis dep")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.baselines.greta import greta_run
 from repro.core.engine import HamletRuntime

@@ -2,8 +2,9 @@
 
 import numpy as np
 
-from repro.core.events import pane_size_for
-from repro.streams.generator import (StreamConfig, bursty_stream,
+from repro.core.events import EventBatch, pane_size_for
+from repro.streams.generator import (OverloadStreamConfig, StreamConfig,
+                                     bursty_stream, overload_stream,
                                      ridesharing_stream, stock_stream,
                                      RIDESHARING_SCHEMA)
 from repro.streams.partition import shard_by_group
@@ -48,6 +49,75 @@ def test_shard_by_group_roundtrip():
     for s in range(4):
         g = shards.group[s][shards.valid[s]]
         assert ((g % 4) == s).all()
+
+
+def test_shard_by_group_empty_batch():
+    b = EventBatch(RIDESHARING_SCHEMA, np.array([], np.int32),
+                   np.array([], np.int64), None)
+    shards = shard_by_group(b, n_shards=4)
+    assert shards.n_shards == 4
+    assert shards.capacity == 1          # padded to a nonzero capacity
+    assert not shards.valid.any()
+    assert (shards.type_id == 0).all() and (shards.time == 0).all()
+
+
+def test_shard_by_group_single_group_key():
+    b = ridesharing_stream(events_per_minute=60, minutes=1, n_groups=1)
+    assert (b.group == 0).all()
+    shards = shard_by_group(b, n_shards=4)
+    # everything lands in shard 0; the others are pure padding
+    assert int(shards.valid[0].sum()) == len(b)
+    assert not shards.valid[1:].any()
+    assert shards.capacity == len(b)
+
+
+def test_shard_by_group_indivisible_counts():
+    """7 group keys over 4 shards: uneven buckets, padding masked correctly
+    and the valid region reconstructs the batch exactly."""
+    b = ridesharing_stream(events_per_minute=200, minutes=1, n_groups=7)
+    shards = shard_by_group(b, n_shards=4)
+    counts = np.bincount((b.group % 4).astype(int), minlength=4)
+    assert shards.capacity == counts.max()
+    assert int(shards.valid.sum()) == len(b)
+    got = []
+    for s in range(4):
+        m = shards.valid[s]
+        assert int(m.sum()) == counts[s]
+        # valid entries are a prefix; the padding tail is zeroed
+        assert (np.nonzero(m)[0] == np.arange(counts[s])).all()
+        assert (shards.attrs[s][~m] == 0).all()
+        got.append(np.stack([shards.time[s][m], shards.type_id[s][m],
+                             shards.group[s][m]]))
+    got = np.concatenate(got, axis=1)
+    want = np.stack([b.time, b.type_id, b.group])
+    assert (np.sort(got, axis=1) == np.sort(want, axis=1)).all()
+
+
+def test_shard_by_group_capacity_truncates():
+    b = ridesharing_stream(events_per_minute=100, minutes=1, n_groups=2)
+    shards = shard_by_group(b, n_shards=2, capacity=5)
+    assert shards.capacity == 5
+    assert int(shards.valid.sum()) <= 10
+
+
+def test_overload_stream_ramp_and_flash():
+    cfg = OverloadStreamConfig(schema=RIDESHARING_SCHEMA,
+                               base_events_per_minute=300, minutes=4,
+                               ramp_to=3.0, flash_crowds=((60, 10, 5.0),),
+                               seed=0)
+    b = overload_stream(cfg)
+    assert (np.diff(b.time) >= 0).all()
+    # ramp: the last minute carries more events than the first
+    first = int(np.sum(b.time < 60))
+    last = int(np.sum(b.time >= 180))
+    assert last > 1.5 * first
+    # flash crowd: rate inside [60, 70) far above the neighbourhood
+    crowd = np.sum((b.time >= 60) & (b.time < 70)) / 10
+    before = np.sum((b.time >= 40) & (b.time < 60)) / 20
+    assert crowd > 2.5 * before
+    # types keep the Markov burst structure
+    runs = 1 + int(np.sum(b.type_id[1:] != b.type_id[:-1]))
+    assert len(b) / runs > 3.0
 
 
 def test_pane_size():

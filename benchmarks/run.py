@@ -18,7 +18,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None,
-                    help="fig9|fig11|fig12|overload|kernel|roofline")
+                    help="fig9|fig11|fig12|overload|batched|kernel|roofline")
     args = ap.parse_args()
     quick = not args.full
 
@@ -45,6 +45,10 @@ def main() -> None:
         from . import fig_overload
 
         sections.append(("fig_overload", fig_overload.main(quick=quick)))
+    if args.only in (None, "batched"):
+        from . import fig_batched
+
+        sections.append(("fig_batched", fig_batched.main(quick=quick)))
     if args.only in (None, "roofline"):
         from . import roofline
 

@@ -16,13 +16,29 @@ over a small local snapshot basis:
     idx nu+1..     z               event-level snapshots for divergent events
                                    (Def. 9: predicate differences)
 
-The within-burst recurrence (Eq. 1) is solved by the masked prefix-propagation
-primitive (``repro.kernels``) — a unit-lower-triangular solve on the MXU.
-Afterwards the coefficient column-sums are folded, per query, into *state
-functionals* (linear maps over the pane-entry state channels), so the pane
-yields one transfer matrix ``M[q]`` per query.  Sliding-window instances then
-advance with a single [C×C] matvec per pane — overlapping windows share all
-per-event work (the paper's pane sharing, Sec. 3.1).
+Plan-then-execute pipeline
+--------------------------
+A pane is processed in three phases rather than one kernel launch per burst:
+
+1. **plan** — every burst is segmented, the sharing policy decides its
+   groups, and each group's masks/adjacency/injection rows are captured as
+   propagation *jobs*.  Nothing here depends on the running aggregates, so
+   the whole pane plans up front.
+2. **execute** — jobs go to a :class:`~repro.core.batch_exec
+   .PaneBatchExecutor`, which buckets them by size (ragged edges padded
+   where exact) and solves each bucket with **one** batched launch of the
+   masked prefix-propagation primitive (``repro.kernels``) or the dense
+   closed form.  Two rounds: count-unit jobs first, then the sum-unit jobs
+   that inject their coefficients.
+3. **finalize** — a cheap sequential replay in stream order applies negation
+   gates, fills event-level snapshot functionals, and folds coefficient
+   column-sums (one stacked einsum per graphlet) into per-query *state
+   functionals* (linear maps over the pane-entry state channels), so the
+   pane yields one transfer matrix ``M[q]`` per query.
+
+Sliding-window instances then advance with a single batched [C×C] matmul per
+pane — overlapping windows share all per-event work (the paper's pane
+sharing, Sec. 3.1).
 
 Trend counts grow like 2^g and overflow fixed-width types for realistic panes
 (the paper is silent on this); the engine computes in float64 by default.
@@ -34,7 +50,8 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
-from ..kernels import ops
+from ..kernels.ops import DENSE_B_MAX
+from .batch_exec import PaneBatchExecutor, PropagateJob
 from .events import EventBatch, StreamSchema, pane_size_for, split_panes
 from .query import AtomicQuery, Workload
 from .template import QueryTemplate, build_template
@@ -81,6 +98,13 @@ class ComponentContext:
                                                         tuple(str(x) for x in u))))
         self.layout = ChannelLayout(list(self.units), self.pos_type_ids)
         self.nu = len(self.units)
+
+        # channel-column lookup tables for the vectorized pane assembly
+        self.a_cols = np.array(
+            [[self.layout.a_idx(u, e) for e in self.pos_type_ids]
+             for u in self.units], dtype=int).reshape(self.nu, -1)
+        self.rp_cols = np.array([self.layout.rp_idx(u) for u in self.units],
+                                dtype=int)
 
         t = len(self.pos_type_ids)
         self.start_flag = np.zeros((self.k, t), dtype=bool)
@@ -181,13 +205,52 @@ class RunStats:
 # --------------------------------------------------------------------------
 
 
+@dataclass
+class _NegStep:
+    """Negation rules that fired for one burst (applied during finalize)."""
+
+    hits: list  # [(query idx, _NegRule)]
+
+
+@dataclass
+class _GroupPlan:
+    """One graphlet's planned propagation: masks, adjacency, and job handles.
+
+    Captured during the plan phase; coefficients arrive from the batched
+    executor; the finalize phase folds them into the state functionals.
+    """
+
+    g: list
+    el: int
+    type_id: int
+    attrs: np.ndarray
+    b: int
+    mvec: np.ndarray              # [len(g), b]
+    epm: list
+    shared: bool
+    div: np.ndarray               # [b] divergence flags
+    div_rows: np.ndarray
+    live: np.ndarray
+    dead: np.ndarray
+    B_local: int
+    z_ids: dict
+    dense: bool
+    em: np.ndarray | None         # in-burst adjacency (None when dense)
+    start_q0: bool
+    sum_units: list               # [(ui, injection values | None)]
+    cjob: PropagateJob | None = None
+    sjobs: dict = field(default_factory=dict)   # ui -> PropagateJob
+
+
 class PaneProcessor:
     def __init__(self, ctx: ComponentContext, policy, backend: str = "np",
-                 max_local_basis: int = 512):
+                 max_local_basis: int = 512, executor=None):
         self.ctx = ctx
         self.policy = policy
         self.backend = backend
         self.max_local_basis = max_local_basis
+        self.executor = (executor if executor is not None
+                         else PaneBatchExecutor(backend=backend))
 
     # -- burst segmentation (Def. 10) --
 
@@ -203,7 +266,12 @@ class PaneProcessor:
     # -- main entry --
 
     def process(self, pane: EventBatch, stats: RunStats) -> np.ndarray:
-        """Process one pane; returns per-query transfer matrices M [k, C, C]."""
+        """Process one pane; returns per-query transfer matrices M [k, C, C].
+
+        Three phases: plan every burst's jobs, execute them as bucketed
+        batched launches, then replay the pane in stream order to fold
+        coefficients into the state functionals (see module docstring).
+        """
         ctx = self.ctx
         C = ctx.layout.size
         k = ctx.k
@@ -212,37 +280,90 @@ class PaneProcessor:
 
         # state functionals over pane-entry channels
         arow = np.zeros((k, nu, t, C))
-        for qi in range(k):
-            for ui, u in enumerate(ctx.units):
-                for el in range(t):
-                    arow[qi, ui, el, ctx.layout.a_idx(u, ctx.pos_type_ids[el])] = 1.0
+        if nu and t:
+            arow[:, np.arange(nu)[:, None], np.arange(t)[None, :],
+                 ctx.a_cols] = 1.0
         rrow = np.zeros((k, nu, C))
-        for qi in range(k):
-            for ui, u in enumerate(ctx.units):
-                rrow[qi, ui, ctx.layout.rp_idx(u)] = 1.0
+        if nu:
+            rrow[:, np.arange(nu), ctx.rp_cols] = 1.0
         gaterow = np.zeros((k, C))
         gaterow[:, ctx.layout.GATE] = 1.0
+
+        # counts saturate to inf past float64 range (documented overflow
+        # semantics) — keep the whole pipeline quiet about it
+        with np.errstate(over="ignore", invalid="ignore"):
+            return self._process_inner(pane, stats, arow, rrow, gaterow)
+
+    def _process_inner(self, pane, stats, arow, rrow, gaterow) -> np.ndarray:
+        ctx = self.ctx
+        C = ctx.layout.size
+        k = ctx.k
+        nu = ctx.nu
+        t = len(ctx.pos_type_ids)
+
+        # phase 1: plan
+        steps = self._plan_pane(pane, stats)
+
+        # phase 2: execute (two rounds — sum jobs inject count coefficients)
+        plans = [s for s in steps if isinstance(s, _GroupPlan)]
+        ex = self.executor
+        for p in plans:
+            p.cjob = ex.submit(self._count_base(p),
+                               None if p.dense else p.em)
+            stats.propagate_cells += p.b * p.B_local
+        ex.flush()
+        for p in plans:
+            for ui, vals in p.sum_units:
+                p.sjobs[ui] = ex.submit(self._sum_base(p, ui, vals),
+                                        None if p.dense else p.em)
+                stats.propagate_cells += p.b * p.B_local
+        ex.flush()
+
+        # phase 3: finalize in stream order
+        for s in steps:
+            if isinstance(s, _NegStep):
+                for qi, rule in s.hits:
+                    if rule.kind == "leading":
+                        gaterow[qi, :] = 0.0
+                    elif rule.kind == "trailing":
+                        rrow[qi, :, :] = 0.0
+                    else:
+                        arow[qi, :, rule.before_local, :] = 0.0
+            else:
+                self._finalize_group(s, arow, rrow, gaterow)
+
+        # assemble transfer matrices (vectorized over queries)
+        M = np.zeros((k, C, C))
+        M[:, ctx.layout.CONST, ctx.layout.CONST] = 1.0
+        M[:, ctx.layout.GATE, :] = gaterow
+        if nu and t:
+            M[:, ctx.a_cols.reshape(-1), :] = arow.reshape(k, nu * t, C)
+        if nu:
+            M[:, ctx.rp_cols, :] = rrow
+        return M
+
+    # -- phase 1: plan --
+
+    def _plan_pane(self, pane: EventBatch, stats: RunStats) -> list:
+        ctx = self.ctx
+        k = ctx.k
 
         keep = np.isin(pane.type_id, ctx.relevant_type_ids)
         ev = pane.select(np.nonzero(keep)[0])
         stats.events += len(ev)
         stats.panes += 1
 
+        steps: list = []
         for type_id, sl in self._segment(ev.type_id):
             attrs = ev.attrs[sl]
             b = sl.stop - sl.start
             stats.bursts += 1
 
             # negative-type handling (Sec. 5): applies per query with a rule
-            for qi, rule in ctx.neg_rules.get(type_id, []):
-                if not ctx.match_vec(qi, type_id, attrs).any():
-                    continue
-                if rule.kind == "leading":
-                    gaterow[qi, :] = 0.0
-                elif rule.kind == "trailing":
-                    rrow[qi, :, :] = 0.0
-                else:
-                    arow[qi, :, rule.before_local, :] = 0.0
+            hits = [(qi, rule) for qi, rule in ctx.neg_rules.get(type_id, [])
+                    if ctx.match_vec(qi, type_id, attrs).any()]
+            if hits:
+                steps.append(_NegStep(hits))
 
             if type_id not in ctx.local:
                 continue
@@ -275,22 +396,12 @@ class PaneProcessor:
                     stats.shared_bursts += 1
                     stats.shared_graphlets += 1
                 stats.graphlets += 1
-                self._process_group(
+                self._plan_group(
                     g, el, type_id, attrs, b,
                     mvec[[q_pos.index(qi) for qi in g]],
                     [epm[q_pos.index(qi)] for qi in g],
-                    arow, rrow, gaterow, stats)
-
-        # assemble transfer matrices
-        M = np.zeros((k, C, C))
-        for qi in range(k):
-            M[qi, ctx.layout.CONST, ctx.layout.CONST] = 1.0
-            M[qi, ctx.layout.GATE, :] = gaterow[qi]
-            for ui, u in enumerate(ctx.units):
-                for eli in range(t):
-                    M[qi, ctx.layout.a_idx(u, ctx.pos_type_ids[eli]), :] = arow[qi, ui, eli]
-                M[qi, ctx.layout.rp_idx(u), :] = rrow[qi, ui]
-        return M
+                    steps, stats)
+        return steps
 
     # -- divergence detection (per-event signature differences) --
 
@@ -317,12 +428,11 @@ class PaneProcessor:
             d[qi] = diff
         return d
 
-    # -- group (graphlet) processing --
+    # -- group (graphlet) planning --
 
-    def _process_group(self, g, el, type_id, attrs, b, mvec, epm,
-                       arow, rrow, gaterow, stats: RunStats) -> None:
+    def _plan_group(self, g, el, type_id, attrs, b, mvec, epm,
+                    steps: list, stats: RunStats) -> None:
         ctx = self.ctx
-        C = ctx.layout.size
         nu = ctx.nu
         shared = len(g) >= 2
         kleene = all(ctx.kleene_flag[qi, el] for qi in g)
@@ -354,9 +464,9 @@ class PaneProcessor:
             # basis would blow up: force split (the optimizer should normally
             # have prevented this; AlwaysShare can reach it)
             for qi in g:
-                self._process_group([qi], el, type_id, attrs, b,
-                                    mvec[[g.index(qi)]], [epm[g.index(qi)]],
-                                    arow, rrow, gaterow, stats)
+                self._plan_group([qi], el, type_id, attrs, b,
+                                 mvec[[g.index(qi)]], [epm[g.index(qi)]],
+                                 steps, stats)
             stats.split_bursts += 1
             return
 
@@ -364,11 +474,6 @@ class PaneProcessor:
         dead = ~mvec.any(axis=0) & ~div
 
         # local basis: 0 = gate, 1..nu = x_u, nu+1.. = z snapshots
-        W = np.zeros((len(g), B_local, C))
-        for gi, qi in enumerate(g):
-            W[gi, 0] = gaterow[qi]
-            for ui in range(nu):
-                W[gi, 1 + ui] = ctx.pt_mask[qi, el] @ arow[qi, ui]
         z_ids = {}
         nxt = 1 + nu
         div_rows = np.nonzero(div)[0]
@@ -382,63 +487,90 @@ class PaneProcessor:
             stats.snapshots_created += nu + n_z
             stats.snapshots_propagated += B_local
 
-        # common in-burst adjacency
-        if kleene:
-            em = np.tril(np.ones((b, b)), k=-1)
-            if epm[0] is not None:
-                em *= np.tril(epm[0], k=-1)
-        else:
-            em = np.zeros((b, b))
-        em[div | dead, :] = 0.0
-        if not shared:
-            em[~mvec[0], :] = 0.0
-
-        start_q0 = ctx.start_flag[g[0], el]
-
         # dense fast path: no edge predicates and no divergent/dead rows
         # means the in-burst adjacency is exactly strictly-lower all-ones,
         # with the O(b) closed form (beyond-paper; see kernels/ops.py)
         dense = (kleene and epm[0] is None and d == 0 and not dead.any()
-                 and b <= 512)
+                 and b <= DENSE_B_MAX)
 
-        def solve(base):
-            if dense:
-                return np.asarray(ops.propagate_dense(base,
-                                                      backend=self.backend))
-            return np.asarray(ops.propagate(base, em, backend=self.backend))
+        # common in-burst adjacency
+        if dense:
+            em = None
+        else:
+            if kleene:
+                em = np.tril(np.ones((b, b)), k=-1)
+                if epm[0] is not None:
+                    em *= np.tril(epm[0], k=-1)
+            else:
+                em = np.zeros((b, b))
+            em[div | dead, :] = 0.0
+            if not shared:
+                em[~mvec[0], :] = 0.0
 
-        # count-unit propagation
-        base_c = np.zeros((b, B_local))
-        base_c[live, 1 + 0] = 1.0                 # x_count entry
-        if start_q0:
-            base_c[live, 0] = 1.0                 # gate entry (start contribution)
-        for i in div_rows:
-            base_c[i, z_ids[(int(i), 0)]] = 1.0
-        ccoef = solve(base_c)
-        stats.propagate_cells += b * B_local
-
-        # sum-unit propagations (share the mask; injection includes attr*count)
-        scoefs = {}
+        sum_units = []
         for ui, u in enumerate(ctx.units):
             if u[0] != "sum":
                 continue
             _, e_name, attr = u
-            base_s = np.zeros((b, B_local))
-            base_s[live, 1 + ui] = 1.0
+            vals = None
             if ctx.schema.type_id(e_name) == type_id:
                 vals = (np.ones(b) if attr is None
                         else attrs[:, ctx.schema.attr_col(attr)])
-                base_s[live] += vals[live, None] * ccoef[live]
-            for i in div_rows:
-                base_s[i, :] = 0.0
-                base_s[i, z_ids[(int(i), ui)]] = 1.0
-            scoefs[ui] = solve(base_s)
-            stats.propagate_cells += b * B_local
+            sum_units.append((ui, vals))
+
+        steps.append(_GroupPlan(
+            g=list(g), el=el, type_id=type_id, attrs=attrs, b=b, mvec=mvec,
+            epm=epm, shared=shared, div=div, div_rows=div_rows, live=live,
+            dead=dead, B_local=B_local, z_ids=z_ids, dense=dense, em=em,
+            start_q0=bool(ctx.start_flag[g[0], el]), sum_units=sum_units))
+
+    # -- phase 2 helpers: injection rows for the batched launches --
+
+    def _count_base(self, p: _GroupPlan) -> np.ndarray:
+        base_c = np.zeros((p.b, p.B_local))
+        base_c[p.live, 1 + 0] = 1.0               # x_count entry
+        if p.start_q0:
+            base_c[p.live, 0] = 1.0               # gate entry (start contribution)
+        for i in p.div_rows:
+            base_c[i, p.z_ids[(int(i), 0)]] = 1.0
+        return base_c
+
+    def _sum_base(self, p: _GroupPlan, ui: int, vals) -> np.ndarray:
+        # injection shares the mask and includes attr*count coefficients
+        ccoef = p.cjob.result
+        base_s = np.zeros((p.b, p.B_local))
+        base_s[p.live, 1 + ui] = 1.0
+        if vals is not None:
+            base_s[p.live] += vals[p.live, None] * ccoef[p.live]
+        for i in p.div_rows:
+            base_s[i, :] = 0.0
+            base_s[i, p.z_ids[(int(i), ui)]] = 1.0
+        return base_s
+
+    # -- phase 3: fold a graphlet's coefficients into the state functionals --
+
+    def _finalize_group(self, p: _GroupPlan, arow, rrow, gaterow) -> None:
+        ctx = self.ctx
+        C = ctx.layout.size
+        nu = ctx.nu
+        g = p.g
+        b = p.b
+        el = p.el
+        ccoef = p.cjob.result
+        scoefs = {ui: p.sjobs[ui].result for ui, _ in p.sum_units}
+        z_ids = p.z_ids
+        div_rows = p.div_rows
+
+        W = np.zeros((len(g), p.B_local, C))
+        for gi, qi in enumerate(g):
+            W[gi, 0] = gaterow[qi]
+            for ui in range(nu):
+                W[gi, 1 + ui] = ctx.pt_mask[qi, el] @ arow[qi, ui]
 
         # event-level snapshot value functionals (Def. 9), ascending order.
         # P[u] caches coef_u @ W[gi]; every snapshot fill is a rank-1 update
         # so *live* rows that reference earlier z columns stay current.
-        if d:
+        if len(div_rows):
             coefs = {0: ccoef, **scoefs}
             lower = np.tril(np.ones((b, b), dtype=bool), k=-1)
             for gi, qi in enumerate(g):
@@ -452,14 +584,14 @@ class PaneProcessor:
                             P[u] += np.outer(col, f)
 
                 adj_q = lower.copy()
-                if epm[gi] is not None:
-                    adj_q &= epm[gi]
-                adj_q &= mvec[gi][None, :]
+                if p.epm[gi] is not None:
+                    adj_q &= p.epm[gi]
+                adj_q &= p.mvec[gi][None, :]
                 startq = 1.0 if ctx.start_flag[qi, el] else 0.0
                 for i in div_rows:
                     i = int(i)
                     row = adj_q[i].astype(float)
-                    if mvec[gi][i]:
+                    if p.mvec[gi][i]:
                         f_c = startq * gaterow[qi] + W[gi, 1 + 0] + row @ P[0]
                     else:
                         f_c = np.zeros(C)
@@ -468,27 +600,28 @@ class PaneProcessor:
                         if u[0] != "sum":
                             continue
                         _, e_name, attr = u
-                        if mvec[gi][i]:
+                        if p.mvec[gi][i]:
                             f_s = W[gi, 1 + ui] + row @ P[ui]
-                            if ctx.schema.type_id(e_name) == type_id:
-                                v = 1.0 if attr is None else attrs[i, ctx.schema.attr_col(attr)]
+                            if ctx.schema.type_id(e_name) == p.type_id:
+                                v = (1.0 if attr is None
+                                     else p.attrs[i, ctx.schema.attr_col(attr)])
                                 f_s = f_s + v * f_c
                         else:
                             f_s = np.zeros(C)
                         fill(z_ids[(i, ui)], f_s)
 
-        # fold column sums into state functionals
-        col_c = ccoef.sum(axis=0)
+        # fold column sums into state functionals: one stacked einsum per
+        # graphlet instead of a matvec per (member, unit)
+        used = [0] + sorted(scoefs)               # unit rows: count first
+        S = np.stack([ccoef.sum(axis=0)] +
+                     [scoefs[ui].sum(axis=0) for ui in sorted(scoefs)])
+        upd = np.einsum("ub,gbc->guc", S, W)      # [len(g), len(used), C]
         for gi, qi in enumerate(g):
-            upd_c = col_c @ W[gi]
-            arow[qi, 0, el] += upd_c
-            if ctx.end_flag[qi, el]:
-                rrow[qi, 0] += upd_c
-            for ui in scoefs:
-                upd_s = scoefs[ui].sum(axis=0) @ W[gi]
-                arow[qi, ui, el] += upd_s
-                if ctx.end_flag[qi, el]:
-                    rrow[qi, ui] += upd_s
+            end = ctx.end_flag[qi, el]
+            for r, ui in enumerate(used):
+                arow[qi, ui, el] += upd[gi, r]
+                if end:
+                    rrow[qi, ui] += upd[gi, r]
 
 
 # --------------------------------------------------------------------------
@@ -503,10 +636,24 @@ class _Instance:
     events: list = field(default_factory=list)  # retained only for min/max
 
 
+def advance_instances(M: np.ndarray, insts: dict[int, "_Instance"]) -> None:
+    """Advance every open window instance by one pane: a single [n, C] x
+    [C, C] matmul instead of one matvec per instance (the per-pane fold of
+    the transfer matrix, vectorized across overlapping windows)."""
+    if not insts:
+        return
+    members = list(insts.values())
+    with np.errstate(over="ignore", invalid="ignore"):
+        U = np.stack([inst.u for inst in members]) @ M.T
+    for i, inst in enumerate(members):
+        inst.u = U[i]
+
+
 class HamletRuntime:
     """Evaluates a workload over a stream, pane by pane (Sec. 2.2 / 3.1)."""
 
-    def __init__(self, workload: Workload, policy=None, backend: str = "np"):
+    def __init__(self, workload: Workload, policy=None, backend: str = "np",
+                 batch_exec: bool = True, shard_slices=None):
         from .optimizer import DynamicPolicy
 
         self.workload = workload
@@ -517,6 +664,10 @@ class HamletRuntime:
         self.ctxs = [ComponentContext(workload.schema,
                                       [workload.atomic[i] for i in comp])
                      for comp in self.components]
+        # one executor for the whole runtime: every pane — shed or admitted,
+        # any component — funnels its jobs through the same bucketed batches
+        self.executor = PaneBatchExecutor(backend=backend, batched=batch_exec,
+                                          shard_slices=shard_slices)
         self.stats = RunStats()
 
     def run(self, batch: EventBatch, t_end: int | None = None) -> dict:
@@ -541,7 +692,8 @@ class HamletRuntime:
     def _run_partition(self, batch: EventBatch, t_end: int, group_key: int,
                        out: dict) -> None:
         for comp, ctx in zip(self.components, self.ctxs):
-            proc = PaneProcessor(ctx, self.policy, backend=self.backend)
+            proc = PaneProcessor(ctx, self.policy, backend=self.backend,
+                                 executor=self.executor)
             insts: list[dict[int, _Instance]] = [dict() for _ in comp]
             for t0, pane_ev in split_panes(batch, self.pane, 0, t_end):
                 M = proc.process(pane_ev, self.stats)
@@ -551,9 +703,8 @@ class HamletRuntime:
                     if t0 % q.slide == 0 and t0 + q.within <= t_end:
                         insts[ci][t0] = _Instance(t0, ctx.layout.fresh_state())
                     needs_minmax = ci in ctx.minmax_queries
+                    advance_instances(M[ci], insts[ci])
                     for w0, inst in list(insts[ci].items()):
-                        with np.errstate(over="ignore", invalid="ignore"):
-                            inst.u = M[ci] @ inst.u
                         if needs_minmax and len(pane_ev):
                             inst.events.append(pane_ev)
                         if w0 + q.within == t0 + self.pane:

@@ -165,10 +165,11 @@ class HamletService:
 
     def __init__(self, schema, queries: list[Query], policy=None,
                  lateness: int = 0, sharable_mode: str = "units",
-                 overload=None):
+                 overload=None, batch_exec: bool = True):
         self.schema = schema
         self.sharable_mode = sharable_mode
         self.policy = policy
+        self.batch_exec = batch_exec
         self._queries: dict[str, Query] = {q.name: q for q in queries}
         self._pending_add: dict[str, Query] = {}
         self._pending_remove: set[str] = set()
@@ -263,8 +264,8 @@ class HamletService:
                              sub.attrs, sub.group)
 
         wl = self._workload()
-        rt = (HamletRuntime(wl, policy=self.policy) if self.policy
-              else HamletRuntime(wl))
+        rt = HamletRuntime(wl, policy=self.policy,
+                           batch_exec=self.batch_exec)
         res = rt.run(shifted, t_end=end - shift)
         self.stats.merge(rt.stats)
 

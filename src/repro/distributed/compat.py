@@ -1,0 +1,32 @@
+"""Version compatibility shims for the distributed substrate.
+
+``jax.shard_map`` became a top-level API (with ``check_vma`` /
+``axis_names``) well after the ``jax.experimental.shard_map`` original
+(``check_rep`` / ``auto``).  The toolchain pin floats across that boundary,
+so every shard_map call in this package goes through :func:`shard_map`,
+which translates the new-style keywords onto whichever implementation the
+installed jax provides.
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["shard_map"]
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True,
+              axis_names=None):
+    if hasattr(jax, "shard_map"):
+        kw = {"check_vma": check_vma}
+        if axis_names is not None:
+            kw["axis_names"] = axis_names
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, **kw)
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    kw = {"check_rep": check_vma}
+    if axis_names is not None:
+        # old API names the *auto* (un-mapped) axes instead
+        kw["auto"] = frozenset(mesh.axis_names) - frozenset(axis_names)
+    return _shard_map(f, mesh, in_specs=in_specs, out_specs=out_specs, **kw)

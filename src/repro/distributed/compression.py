@@ -56,72 +56,95 @@ def dp_compressed_step_fn(cfg, optimizer, mesh, n_pods: int,
     """Build a jit-able multi-pod train step whose *cross-pod* gradient sync
     is error-feedback int8 compressed.
 
-    Pods replicate parameters (DP across pods); inside the ``shard_map`` over
-    ``pod`` the data/model axes remain auto-partitioned, so in-pod FSDP/TP is
-    unchanged — only the inter-pod wire format changes (4x fewer bytes on the
-    slow links).  State: carries the per-leaf error-feedback residuals.
+    Pods replicate parameters (DP across pods).  The pod axis is expressed
+    as a stacked leading dimension — the global batch reshapes to
+    ``[n_pods, B/n_pods, ...]`` and a ``vmap`` computes per-pod gradients —
+    so the whole step lowers under plain GSPMD (in-pod FSDP/TP via the
+    data/model axes is untouched; manual-subgroup shard_map around a full
+    transformer does not partition on the pinned toolchain).  With the
+    stacked axis sharded over ``pod``, the only collective crossing the
+    slow inter-pod links is the int32 reduce-sum of the quantized stack:
+    1 byte/param on the wire instead of 4.  State: per-pod error-feedback
+    residuals (stacked leaves ``[n_pods, ...]``).
 
-    Returns (step, init_errors) with
+    Returns (step, init_errors) with jitted
     ``step(params, opt_state, errors, batch) -> (params, opt_state, errors,
     loss)``.
     """
     import jax.numpy as _jnp
-    from jax.sharding import PartitionSpec as P
+    from jax.sharding import NamedSharding, PartitionSpec as P
 
     from ..models import lm
 
-    def local_step(params, opt_state, errors, batch):
-        loss, grads = jax.value_and_grad(
-            lambda p: lm.loss_fn(p, cfg, batch))(params)
-        grads, errors = compressed_psum_tree(grads, errors, pod_axis, n_pods)
+    def _pod_spec(x):
+        return NamedSharding(mesh, P(pod_axis, *([None] * (x.ndim - 1))))
+
+    def _on_pods(tree):
+        """Pin each leaf's stacked [n_pods, ...] axis to the pod mesh axis,
+        making the cross-pod wire format below real, not just notation."""
+        return jax.tree.map(
+            lambda x: jax.lax.with_sharding_constraint(x, _pod_spec(x)), tree)
+
+    def step(params, opt_state, errors, batch):
+        mbs = _on_pods(jax.tree.map(
+            lambda x: x.reshape((n_pods, x.shape[0] // n_pods) + x.shape[1:]),
+            batch))
+
+        def pod_grads(mb):
+            return jax.value_and_grad(
+                lambda p: lm.loss_fn(p, cfg, mb))(params)
+
+        losses, pgrads = jax.vmap(pod_grads)(mbs)   # leaves [n_pods, ...]
+
+        def sync(gstack, estack):
+            x = gstack.astype(_jnp.float32) + estack
+            s = _jnp.max(_jnp.abs(x)) / 127.0 + 1e-12   # pod-shared scale
+            q = _jnp.clip(_jnp.round(x / s), -127, 127).astype(_jnp.int8)
+            q = jax.lax.with_sharding_constraint(q, _pod_spec(q))
+            new_e = x - q.astype(_jnp.float32) * s
+            summed = _jnp.sum(q.astype(_jnp.int32), 0)  # int32 cross-pod wire
+            return summed.astype(_jnp.float32) * s / n_pods, new_e
+
+        flat_g, tdef = jax.tree_util.tree_flatten(pgrads)
+        flat_e = tdef.flatten_up_to(errors)
+        out = [sync(g, e) for g, e in zip(flat_g, flat_e)]
+        grads = tdef.unflatten([o[0] for o in out])
+        errors = tdef.unflatten([o[1] for o in out])
         params, opt_state = optimizer.update(params, grads, opt_state)
-        return params, opt_state, errors, loss
+        return params, opt_state, errors, losses.mean()
 
     def init_errors(params):
-        return jax.tree.map(lambda p: _jnp.zeros(p.shape, _jnp.float32),
-                            params)
+        return jax.tree.map(
+            lambda p: _jnp.zeros((n_pods,) + p.shape, _jnp.float32), params)
 
-    def specs_for(tree, spec):
-        return jax.tree.map(lambda _: spec, tree)
-
-    def make(params_like, opt_like, batch_like):
-        rep = P()
-        return jax.jit(jax.shard_map(
-            local_step, mesh=mesh,
-            in_specs=(specs_for(params_like, rep), specs_for(opt_like, rep),
-                      specs_for(params_like, rep),
-                      specs_for(batch_like, P(pod_axis))),
-            out_specs=(specs_for(params_like, rep), specs_for(opt_like, rep),
-                       specs_for(params_like, rep), P()),
-            check_vma=False, axis_names=frozenset({pod_axis})))
-
-    return make, init_errors
+    return jax.jit(step), init_errors
 
 
 def compressed_psum_tree(grads, errors, axis_name: str, n_pods: int):
     """Error-feedback compressed mean over ``axis_name``.
 
-    Returns (synced_grads, new_errors).  int8 payloads are summed in int32
-    across pods; scales (one f32 per leaf) are gathered alongside.  Each pod
-    applies its own scale before the sum would be exact; summing q*s_local
-    requires per-pod scales, so we all-gather the scalar scales (negligible)
-    and sum dequantized shards — the *wire* payload is still the int8 tensor.
+    Returns (synced_grads, new_errors).  Each leaf quantizes against a
+    *pod-shared* scale (``pmax`` of the local scales — one scalar AllReduce),
+    so the int8 payloads sum exactly: one int32-accumulated ``psum`` per leaf
+    is the whole sync, and the wire payload is 1 byte/param plus a scalar.
+    Only AllReduce-shaped collectives appear — ``axis_index``/``all_gather``
+    lower to PartitionId / manual-subgroup reshards that partial-auto
+    shard_map (in-pod axes left to GSPMD) cannot partition.  The residual
+    against the shared-scale dequantization is carried as error feedback.
     """
-    qs, scales, new_err = ef_compress_tree(grads, errors)
 
-    def sync(q, s):
-        # all-gather per-pod scales (scalars), psum int8 payload per scale
-        # bucket: implemented as psum of (q * onehot) per pod in int32 then
-        # scale-weighted sum.  For equal scales this is exactly psum(q)*s/n.
-        s_all = jax.lax.all_gather(s, axis_name)              # [n_pods]
-        idx = jax.lax.axis_index(axis_name)
-        acc = jnp.zeros(q.shape, jnp.float32)
-        q32 = q.astype(jnp.int32)
-        for p in range(n_pods):
-            contrib = jnp.where(idx == p, q32, 0)
-            summed = jax.lax.psum(contrib, axis_name)         # int32 wire
-            acc = acc + summed.astype(jnp.float32) * s_all[p]
-        return acc / n_pods
+    def sync(g, e):
+        x = g.astype(jnp.float32) + e
+        s_local = jnp.max(jnp.abs(x)) / 127.0 + 1e-12
+        s = jax.lax.pmax(s_local, axis_name)                  # shared scale
+        q = jnp.clip(jnp.round(x / s), -127, 127).astype(jnp.int8)
+        new_e = x - q.astype(jnp.float32) * s
+        summed = jax.lax.psum(q.astype(jnp.int32), axis_name)  # int32 wire
+        return summed.astype(jnp.float32) * s / n_pods, new_e
 
-    synced = jax.tree.map(sync, qs, scales)
+    flat_g, tdef = jax.tree_util.tree_flatten(grads)
+    flat_e = tdef.flatten_up_to(errors)
+    out = [sync(g, e) for g, e in zip(flat_g, flat_e)]
+    synced = tdef.unflatten([o[0] for o in out])
+    new_err = tdef.unflatten([o[1] for o in out])
     return synced, new_err

@@ -25,7 +25,8 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 __all__ = ["param_pspecs", "batch_pspecs", "cache_pspecs", "shardings_for",
-           "explain"]
+           "explain", "pane_bucket_shards", "pane_batch_pspecs",
+           "shard_pane_bucket"]
 
 # (path regex, spec template) — templates name logical axes per dim;
 # first match wins.  "tp" -> model, "fsdp" -> data, None -> replicate.
@@ -206,3 +207,41 @@ def explain(params_tree, mesh: Mesh) -> list:
     notes: list = []
     param_pspecs(params_tree, mesh, notes)
     return notes
+
+
+# --------------------------------------------------------------------------
+# pane-batch sharding hooks (engine's bucketed propagation launches)
+# --------------------------------------------------------------------------
+
+
+def pane_bucket_shards(nb: int, n_shards: int) -> list[slice]:
+    """Balanced contiguous slices splitting a pane bucket's batch axis.
+
+    The engine's :class:`~repro.core.batch_exec.PaneBatchExecutor` takes
+    this (partially applied over ``n_shards``) as its ``shard_slices`` hook:
+    each returned slice becomes its own launch, so one size bucket of burst
+    jobs can spread across devices or hosts.  Empty shards are elided —
+    ``nb < n_shards`` yields ``nb`` singleton slices.
+    """
+    if nb <= 0:
+        return []
+    n_shards = max(1, min(int(n_shards), nb))
+    cuts = np.linspace(0, nb, n_shards + 1).round().astype(int)
+    return [slice(int(a), int(b)) for a, b in zip(cuts[:-1], cuts[1:])
+            if b > a]
+
+
+def pane_batch_pspecs(mesh: Mesh, ndim: int = 3) -> P:
+    """PartitionSpec for a stacked pane bucket ``[nb, b, d]`` (or mask
+    ``[nb, b, b]``): the batch-of-bursts axis shards over the data-parallel
+    mesh axes; burst rows and basis columns stay local to the device."""
+    dp_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    lead = dp_axes if dp_axes else None
+    return P(lead, *([None] * (ndim - 1)))
+
+
+def shard_pane_bucket(arr, mesh: Mesh):
+    """device_put a stacked pane bucket with its batch axis split across the
+    mesh (pad the leading axis to a multiple of the dp size upstream)."""
+    return jax.device_put(
+        arr, NamedSharding(mesh, pane_batch_pspecs(mesh, np.ndim(arr))))

@@ -1,0 +1,19 @@
+"""Pallas API compatibility helpers shared by the TPU kernels."""
+
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["tpu_compiler_params"]
+
+
+def tpu_compiler_params(**kwargs):
+    """Build TPU compiler params across the CompilerParams/TPUCompilerParams
+    rename; fails with a version message rather than ``None(...)``."""
+    cls = getattr(pltpu, "CompilerParams",
+                  getattr(pltpu, "TPUCompilerParams", None))
+    if cls is None:
+        raise RuntimeError(
+            "jax.experimental.pallas.tpu exposes neither CompilerParams nor "
+            "TPUCompilerParams; unsupported jax version")
+    return cls(**kwargs)

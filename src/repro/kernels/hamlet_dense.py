@@ -27,6 +27,8 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ._compat import tpu_compiler_params
+
 __all__ = ["dense_propagate_pallas"]
 
 
@@ -78,7 +80,7 @@ def dense_propagate_pallas(base: jax.Array, *, tile: int = 64,
         out_specs=pl.BlockSpec((1, tile, d), lambda bi, t: (bi, t, 0)),
         out_shape=jax.ShapeDtypeStruct((nb, b, d), base.dtype),
         scratch_shapes=[pltpu.VMEM((1, d), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("arbitrary", "arbitrary")),
         interpret=interpret,
     )(jnp.asarray(K, jnp.float32), jnp.asarray(pow2), jnp.asarray(rowpow),

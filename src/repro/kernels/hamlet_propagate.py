@@ -31,6 +31,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ._compat import tpu_compiler_params
+
 __all__ = ["masked_prefix_propagate_pallas"]
 
 
@@ -99,7 +101,7 @@ def masked_prefix_propagate_pallas(base: jax.Array, mask: jax.Array, *,
         out_specs=pl.BlockSpec((1, tile, d), lambda bi, r: (bi, r, 0)),
         out_shape=jax.ShapeDtypeStruct((nb, b, d), base.dtype),
         scratch_shapes=[pltpu.VMEM((b, d), acc_dtype)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("arbitrary", "arbitrary"),
         ),
         interpret=interpret,

@@ -18,7 +18,12 @@ import numpy as np
 from . import ref
 from .hamlet_propagate import masked_prefix_propagate_pallas
 
-__all__ = ["propagate", "propagate_batched", "PROPAGATE_BACKENDS"]
+__all__ = ["propagate", "propagate_batched", "propagate_dense",
+           "propagate_dense_batched", "PROPAGATE_BACKENDS", "DENSE_B_MAX"]
+
+# largest burst the dense closed form handles exactly (2^b weight range);
+# the engine's dense-eligibility test and the executor's fallback share it
+DENSE_B_MAX = 512
 
 PROPAGATE_BACKENDS = ("np", "jax", "jax_blocked", "jax_solve", "pallas")
 
@@ -47,15 +52,27 @@ def _pallas_padded(base, mask, tile, interpret):
 
 def propagate_batched(base, mask, *, backend: str = "np", tile: int = 128,
                       interpret: bool = True):
-    """Batched propagation: base [nb, b, d], mask [nb, b, b] -> [nb, b, d]."""
+    """Batched propagation: base [nb, b, d], mask [nb, b, b] -> [nb, b, d].
+
+    The batch is ragged-friendly at the edges: ``nb == 0`` returns an empty
+    result, and zero-padded trailing rows (zero mask rows/columns) propagate
+    to zeros without touching real rows, so callers may pad within a bucket.
+    """
+    if np.shape(base)[0] == 0:
+        return (np.zeros(np.shape(base), dtype=np.asarray(base).dtype)
+                if backend == "np"
+                else jnp.zeros(np.shape(base), dtype=jnp.asarray(base).dtype))
     if backend == "np":
         base = np.asarray(base)
         mask = np.asarray(mask)
         fast = (base.shape[1] > 24 and
                 not np.issubdtype(base.dtype, np.integer))
-        f = (ref.numpy_prefix_propagate_fast if fast
-             else ref.numpy_prefix_propagate)
-        return np.stack([f(base[i], mask[i]) for i in range(base.shape[0])])
+        if fast:
+            # one stacked doubling sweep — slices are bitwise equal to the
+            # per-item call (see ref.numpy_prefix_propagate_fast_batched)
+            return ref.numpy_prefix_propagate_fast_batched(base, mask)
+        return np.stack([ref.numpy_prefix_propagate(base[i], mask[i])
+                         for i in range(base.shape[0])])
     if backend == "jax":
         return jax.vmap(ref.masked_prefix_propagate_ref)(jnp.asarray(base),
                                                          jnp.asarray(mask))
@@ -88,9 +105,42 @@ def propagate_dense(base, *, backend: str = "np"):
     via exponentially weighted cumsum (paper Table 3's doubling).  Falls
     back to the masked path for b > 512 (weight range)."""
     b = base.shape[0]
-    if b > 512:
+    if b > DENSE_B_MAX:
         mask = np.tril(np.ones((b, b)), k=-1)
         return propagate(base, mask, backend=backend)
     if backend == "np":
         return ref.prefix_propagate_dense_np(np.asarray(base))
     return ref.prefix_propagate_dense(jnp.asarray(base))
+
+
+def propagate_dense_batched(base, *, backend: str = "np", tile: int = 64,
+                            interpret: bool = True):
+    """Batched dense-burst propagation: base [nb, b, d] -> [nb, b, d].
+
+    One launch for a whole size bucket of dense bursts.  ``nb == 0`` returns
+    an empty result; trailing zero-padded rows/columns are safe (each real
+    row's prefix is unchanged), so ragged buckets pad to a common shape.
+    Requires b <= DENSE_B_MAX per burst (the dense weight range) — the
+    engine's planner routes larger bursts to the masked path.
+    """
+    nb, b, d = np.shape(base)
+    if b > DENSE_B_MAX:
+        raise ValueError(
+            f"dense closed form needs b <= {DENSE_B_MAX}, got {b}")
+    if nb == 0:
+        return (np.zeros((0, b, d), dtype=np.asarray(base).dtype)
+                if backend == "np"
+                else jnp.zeros((0, b, d), dtype=jnp.asarray(base).dtype))
+    if backend == "np":
+        return ref.prefix_propagate_dense_np_batched(np.asarray(base))
+    if backend in ("jax", "jax_blocked", "jax_solve"):
+        return jax.vmap(ref.prefix_propagate_dense)(jnp.asarray(base))
+    if backend == "pallas":
+        from .hamlet_dense import dense_propagate_pallas
+
+        x = jnp.asarray(base)
+        x, b_real = _pad_to(x, 1, tile)
+        x, d_real = _pad_to(x, 2, _LANE)
+        out = dense_propagate_pallas(x, tile=tile, interpret=interpret)
+        return out[:, :b_real, :d_real]
+    raise ValueError(f"unknown backend {backend!r}; use one of {PROPAGATE_BACKENDS}")

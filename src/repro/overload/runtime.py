@@ -32,7 +32,7 @@ from dataclasses import dataclass, field
 import numpy as np
 
 from ..core.engine import HamletRuntime, PaneProcessor, RunStats, _Instance
-from ..core.engine import combine_results
+from ..core.engine import advance_instances, combine_results
 from ..core.events import EventBatch
 from ..core.query import Workload
 from .accountant import ErrorAccountant
@@ -93,7 +93,9 @@ class _GroupDriver:
     def __init__(self, rt: HamletRuntime, group_key: int, t_now: int):
         self.rt = rt
         self.group_key = group_key
-        self.procs = [PaneProcessor(ctx, rt.policy, backend=rt.backend)
+        # shed and admitted panes alike reuse the runtime's batched executor
+        self.procs = [PaneProcessor(ctx, rt.policy, backend=rt.backend,
+                                    executor=rt.executor)
                       for ctx in rt.ctxs]
         # insts[component][member] : {window_start: _Instance}
         self.insts: list[list[dict[int, _Instance]]] = []
@@ -124,9 +126,8 @@ class _GroupDriver:
                 if t0 % q.slide == 0:
                     insts[t0] = _Instance(t0, ctx.layout.fresh_state())
                 needs_minmax = ci in ctx.minmax_queries
+                advance_instances(M[ci], insts)
                 for w0, inst in list(insts.items()):
-                    with np.errstate(over="ignore", invalid="ignore"):
-                        inst.u = M[ci] @ inst.u
                     if needs_minmax and len(pane_ev):
                         inst.events.append(pane_ev)
                     if w0 + q.within == t0 + pane:
@@ -138,10 +139,12 @@ class _GroupDriver:
 
 class OverloadRuntime:
     def __init__(self, workload: Workload, config: OverloadConfig,
-                 policy=None, backend: str = "np", clock=time.perf_counter):
+                 policy=None, backend: str = "np", clock=time.perf_counter,
+                 batch_exec: bool = True):
         self.workload = workload
         self.config = config
-        self.rt = HamletRuntime(workload, policy=policy, backend=backend)
+        self.rt = HamletRuntime(workload, policy=policy, backend=backend,
+                                batch_exec=batch_exec)
         self.pane = self.rt.pane
         self.stats = self.rt.stats
         self.queue = IngressQueue(workload.schema,

@@ -69,7 +69,10 @@ def run_training(cfg_model, loop: TrainLoopConfig, shardings=None):
                                                            batch))
             losses.append(float(loss))
             mgr.maybe_save(step + 1, {"params": params, "opt": opt_state})
-        mgr.wait()
     finally:
+        # join the in-flight async write even when crashing out: an
+        # immediate restart must discover the highest committed step, not
+        # race the background thread for it
+        mgr.wait()
         it.close()
     return params, losses, start

@@ -1,0 +1,186 @@
+"""Differential tests for the plan-then-execute batched engine.
+
+Randomized bursty workloads run through the batched pipeline and through
+three independent implementations:
+
+* the same engine with batching disabled (one launch per burst) — results
+  must be **bitwise identical**, pinning down the executor's guarantee that
+  bucketing/stacking/padding never changes a single ulp;
+* the GRETA quadratic oracle and the brute-force trend enumerator —
+  aggregates must agree to float tolerance (independent algebra).
+
+The hypothesis sweeps skip when the optional dep is missing (like the
+property tests); the seeded randomized differentials below always run.
+"""
+
+import math
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # optional dep, mirrors test_property.py
+    given = None
+
+needs_hypothesis = pytest.mark.skipif(
+    given is None, reason="hypothesis sweeps need the optional hypothesis dep")
+
+from repro.core.baselines.brute import brute_run
+from repro.core.baselines.greta import greta_run
+from repro.core.engine import HamletRuntime
+from repro.core.events import EventBatch, StreamSchema
+from repro.core.optimizer import AlwaysShare, DynamicPolicy, NeverShare
+from repro.core.pattern import EventType, Kleene, Seq
+from repro.core.query import Pred, Query, Workload, agg_sum, count_star
+
+SCHEMA = StreamSchema(types=("A", "B", "C"), attrs=("v",))
+A, B, C = map(EventType, "ABC")
+
+POLICIES = (DynamicPolicy, AlwaysShare, NeverShare)
+
+
+def _wl():
+    return Workload(SCHEMA, [
+        Query("q1", Seq(A, Kleene(B)), aggs=(count_star(), agg_sum("B", "v")),
+              within=20, slide=10),
+        Query("q2", Seq(C, Kleene(B)), preds={"B": [Pred("v", "<", 3)]},
+              within=20, slide=20),
+        Query("q3", Kleene(B), within=20, slide=10),
+    ])
+
+
+def _batch(evs):
+    n = len(evs)
+    types = np.array([t for t, _ in evs], dtype=np.int32)
+    attrs = np.array([[float(v)] for _, v in evs]).reshape(n, 1) if n else None
+    times = np.arange(1, n + 1)
+    return EventBatch(SCHEMA, types, times, attrs)
+
+
+def _random_bursty(rng, n_runs, max_len=8):
+    """Runs of one type — the bursty regime the batched executor targets."""
+    evs = []
+    for _ in range(n_runs):
+        t = int(rng.integers(0, 3))
+        for _ in range(int(rng.integers(1, max_len + 1))):
+            evs.append((t, int(rng.integers(0, 5))))
+    return evs
+
+
+def _assert_bitwise(a: dict, b: dict):
+    assert a.keys() == b.keys()
+    for k in a:
+        assert a[k].keys() == b[k].keys(), k
+        for ak, v in a[k].items():
+            w = b[k][ak]
+            assert (math.isnan(v) and math.isnan(w)) or \
+                np.float64(v) == np.float64(w), (k, ak, v, w)
+
+
+def _assert_close(a: dict, b: dict):
+    assert a.keys() == b.keys()
+    for k in a:
+        for ak, v in a[k].items():
+            w = b[k][ak]
+            assert (math.isnan(v) and math.isnan(w)) or \
+                abs(v - w) <= 1e-9 * (1 + abs(w)), (k, ak, v, w)
+
+
+# ---------------------------------------------------------------- seeded
+
+
+@pytest.mark.parametrize("seed", range(12))
+def test_batched_vs_per_burst_bitwise(seed):
+    """Bucketed batched launches reproduce the per-burst path bit for bit."""
+    rng = np.random.default_rng(seed)
+    batch = _batch(_random_bursty(rng, n_runs=int(rng.integers(0, 10))))
+    for pol in POLICIES:
+        got = HamletRuntime(_wl(), policy=pol(), batch_exec=True).run(batch, 40)
+        want = HamletRuntime(_wl(), policy=pol(), batch_exec=False).run(batch, 40)
+        _assert_bitwise(got, want)
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_batched_matches_greta(seed):
+    rng = np.random.default_rng(100 + seed)
+    batch = _batch(_random_bursty(rng, n_runs=int(rng.integers(0, 8))))
+    got = HamletRuntime(_wl(), batch_exec=True).run(batch, t_end=40)
+    _assert_close(got, greta_run(_wl(), batch, 40))
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_batched_matches_brute(seed):
+    rng = np.random.default_rng(200 + seed)
+    evs = _random_bursty(rng, n_runs=int(rng.integers(0, 5)), max_len=4)[:14]
+    batch = _batch(evs)
+    got = HamletRuntime(_wl(), batch_exec=True).run(batch, t_end=40)
+    _assert_close(got, brute_run(_wl(), batch, 40))
+
+
+def test_batched_high_burst_pane_bitwise():
+    """A deterministic stress pane: many bursts, mixed sizes (1, tile-ish,
+    odd), shared and non-shared groups — batched equals per-burst bitwise."""
+    rng = np.random.default_rng(0)
+    evs = []
+    for ln in [1, 2, 128, 129, 7, 1, 33, 64, 5, 1, 17, 128]:
+        t = int(rng.integers(0, 3))
+        evs.extend((t, int(rng.integers(0, 5))) for _ in range(ln))
+    batch = _batch(evs)
+    for pol in (DynamicPolicy, AlwaysShare):
+        got = HamletRuntime(_wl(), policy=pol(), batch_exec=True).run(batch, 600)
+        want = HamletRuntime(_wl(), policy=pol(), batch_exec=False).run(batch, 600)
+        _assert_bitwise(got, want)
+
+
+def test_shard_slices_hook_identical():
+    """Splitting buckets across shards (the distributed hook) is a pure
+    partitioning of the launch — results stay bitwise identical."""
+    from repro.distributed.sharding import pane_bucket_shards
+
+    evs = [(1, v % 5) for v in range(200)] + [(0, 1)] + \
+          [(1, v % 3) for v in range(40)]
+    batch = _batch(evs)
+    want = HamletRuntime(_wl(), batch_exec=True).run(batch, 260)
+    got = HamletRuntime(
+        _wl(), batch_exec=True,
+        shard_slices=lambda nb: pane_bucket_shards(nb, 3)).run(batch, 260)
+    _assert_bitwise(got, want)
+
+
+# ------------------------------------------------------------- hypothesis
+
+
+if given is not None:
+    bursty_streams = st.lists(
+        st.tuples(st.integers(0, 2), st.integers(1, 6), st.integers(0, 4)),
+        min_size=0, max_size=8).map(
+            lambda runs: [(t, v) for t, ln, v in runs for _ in range(ln)])
+
+    @needs_hypothesis
+    @settings(max_examples=40, deadline=None)
+    @given(bursty_streams)
+    def test_hyp_batched_vs_per_burst_bitwise(evs):
+        batch = _batch(evs)
+        for pol in POLICIES:
+            got = HamletRuntime(_wl(), policy=pol(),
+                                batch_exec=True).run(batch, 40)
+            want = HamletRuntime(_wl(), policy=pol(),
+                                 batch_exec=False).run(batch, 40)
+            _assert_bitwise(got, want)
+
+    @needs_hypothesis
+    @settings(max_examples=25, deadline=None)
+    @given(bursty_streams)
+    def test_hyp_batched_matches_greta(evs):
+        batch = _batch(evs)
+        got = HamletRuntime(_wl(), batch_exec=True).run(batch, t_end=40)
+        _assert_close(got, greta_run(_wl(), batch, 40))
+
+    @needs_hypothesis
+    @settings(max_examples=12, deadline=None)
+    @given(bursty_streams)
+    def test_hyp_batched_matches_brute(evs):
+        batch = _batch(evs[:14])
+        got = HamletRuntime(_wl(), batch_exec=True).run(batch, t_end=40)
+        _assert_close(got, brute_run(_wl(), batch, 40))

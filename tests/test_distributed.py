@@ -102,11 +102,13 @@ def test_error_feedback_accumulates():
                        np.asarray(grads["w"]), atol=1e-7)
 
 
+@pytest.mark.slow
 def test_compressed_psum_across_pods():
     code = """
     import jax, numpy as np
     import jax.numpy as jnp
     from jax.sharding import PartitionSpec as P
+    from repro.distributed.compat import shard_map
     from repro.distributed.compression import compressed_psum_tree
     mesh = jax.make_mesh((4,), ("pod",))
     def f(g):
@@ -114,8 +116,8 @@ def test_compressed_psum_across_pods():
                                            "pod", 4)
         return synced["w"], err["w"]
     g = jnp.arange(32, dtype=jnp.float32).reshape(4, 8) / 7.0
-    fn = jax.jit(jax.shard_map(f, mesh=mesh, in_specs=P("pod"),
-                               out_specs=P("pod"), check_vma=False))
+    fn = jax.jit(shard_map(f, mesh=mesh, in_specs=P("pod"),
+                           out_specs=P("pod"), check_vma=False))
     synced, err = fn(g)
     want = np.asarray(g).reshape(4, 8).mean(axis=0)
     got = np.asarray(synced)[0]
@@ -130,6 +132,7 @@ def test_compressed_psum_across_pods():
 # ----------------------------------------------------------- pipeline
 
 
+@pytest.mark.slow
 def test_pipeline_matches_sequential():
     code = """
     import jax, numpy as np
@@ -182,6 +185,7 @@ def test_param_pspecs_cover_model():
                 assert any(ax is not None for ax in spec), (arch, path)
 
 
+@pytest.mark.slow
 def test_dp_compressed_train_step():
     """Full multi-pod train step with int8 EF gradient sync: runs, and the
     parameter update stays within the int8 quantization envelope of the
@@ -203,9 +207,8 @@ def test_dp_compressed_train_step():
                                    jnp.int32),
              "labels": jnp.asarray(rng.integers(0, cfg.vocab, (8, 16)),
                                    jnp.int32)}
-    make, init_errors = dp_compressed_step_fn(cfg, opt, mesh, n_pods=2)
+    step, init_errors = dp_compressed_step_fn(cfg, opt, mesh, n_pods=2)
     errors = init_errors(params)
-    step = make(params, opt_state, batch)
     with mesh:
         p2, o2, e2, loss = step(params, opt_state, errors, batch)
     assert jnp.isfinite(loss)

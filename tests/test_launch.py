@@ -8,6 +8,8 @@ import subprocess
 import sys
 import tempfile
 
+import pytest
+
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
@@ -32,6 +34,7 @@ def test_make_production_mesh_shapes():
     assert "pod=2xdata=16xmodel=16" in out.stdout
 
 
+@pytest.mark.slow
 def test_dryrun_cli_lowers_cell():
     with tempfile.TemporaryDirectory() as d:
         out_path = os.path.join(d, "out.json")

@@ -13,6 +13,8 @@ from repro.models.lm import (decode_fn, forward, init_cache, init_params,
                              loss_fn, prefill_fn, train_step_fn)
 from repro.train.optimizer import AdamW
 
+pytestmark = pytest.mark.slow
+
 B, S = 2, 16
 
 

@@ -48,6 +48,7 @@ def test_serve_eos_stops_early(setup):
     assert len(eng2.completed[rid].tokens) == 1  # stopped at EOS
 
 
+@pytest.mark.slow
 def test_serve_batched_equals_sequential(setup):
     """Same-length prompts: batching must not change greedy outputs."""
     cfg, params = setup

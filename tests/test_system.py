@@ -5,6 +5,7 @@ round-trip on a reduced model."""
 import math
 
 import numpy as np
+import pytest
 
 from repro.core.baselines.greta import greta_run
 from repro.core.engine import HamletRuntime
@@ -61,6 +62,7 @@ def test_dynamic_never_worse_snapshots_than_static():
     assert dyn.stats.snapshots_created <= stat.stats.snapshots_created
 
 
+@pytest.mark.slow
 def test_serve_roundtrip_smoke():
     import jax
     import jax.numpy as jnp

@@ -14,6 +14,7 @@ def tiny_cfg():
     return reduce_for_smoke(get_config("h2o-danube-1.8b"))
 
 
+@pytest.mark.slow
 def test_loss_decreases(tiny_cfg, tmp_path_factory):
     d = str(tmp_path_factory.mktemp("ck"))
     loop = TrainLoopConfig(steps=30, batch=8, seq=32, ckpt_dir=d,
@@ -23,6 +24,7 @@ def test_loss_decreases(tiny_cfg, tmp_path_factory):
     assert losses[-1] < losses[0] - 0.2, (losses[0], losses[-1])
 
 
+@pytest.mark.slow
 def test_crash_resume_bitwise(tiny_cfg, tmp_path_factory):
     seq, batch, lr = 32, 4, 1e-3
     d_plain = str(tmp_path_factory.mktemp("plain"))
@@ -50,6 +52,33 @@ def test_crash_resume_bitwise(tiny_cfg, tmp_path_factory):
                               np.asarray(b, np.float64))
     # overlapping loss history identical
     assert np.allclose(losses_ref[8:], losses_res, rtol=0, atol=0)
+
+
+def test_latest_checkpoint_discovery(tmp_path):
+    """Discovery picks the highest *committed* step among many checkpoints,
+    ignoring uncommitted partials and stale .tmp dirs."""
+    import os
+
+    from repro.distributed.checkpoint import (latest_step,
+                                              restore_checkpoint,
+                                              save_checkpoint)
+
+    d = str(tmp_path)
+    assert latest_step(d) is None
+    tree = {"w": np.arange(4.0)}
+    for step in (4, 12, 8):                  # out of order on purpose
+        save_checkpoint(d, step, {"w": tree["w"] * step})
+    assert latest_step(d) == 12
+
+    # an uncommitted partial at a higher step must not win
+    partial = os.path.join(d, "step_0000000099")
+    os.makedirs(partial)
+    # a stale .tmp from an interrupted write must be ignored too
+    os.makedirs(os.path.join(d, "step_0000000050.tmp"))
+    assert latest_step(d) == 12
+
+    restored = restore_checkpoint(d, 12, tree)
+    assert np.array_equal(np.asarray(restored["w"]), tree["w"] * 12)
 
 
 def test_straggler_fallback():

@@ -1,7 +1,9 @@
-"""Shared benchmark utilities: timing, memory tracking, workload builders."""
+"""Shared benchmark utilities: timing, memory tracking, workload builders,
+and the artifacts directory every figure shares."""
 
 from __future__ import annotations
 
+import os
 import time
 import tracemalloc
 
@@ -10,6 +12,36 @@ from repro.core.pattern import EventType, Kleene, Seq
 from repro.core.query import Pred, Query, Workload, count_star
 from repro.streams.generator import (RIDESHARING_SCHEMA, SMARTHOME_SCHEMA,
                                      STOCK_SCHEMA, TAXI_SCHEMA)
+
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "artifacts")
+
+
+def ensure_artifact_dir() -> str:
+    """Create ``benchmarks/artifacts/`` if needed and return its path.
+
+    Every figure that reads or writes artifacts goes through this helper, so
+    creation is idempotent across figures and run orders (a fresh checkout
+    can run any single figure first)."""
+    os.makedirs(ARTIFACT_DIR, exist_ok=True)
+    return ARTIFACT_DIR
+
+
+def write_rows_csv(name: str, rows: list[dict]) -> str:
+    """Persist benchmark rows as a CSV artifact; returns the file path."""
+    import csv
+
+    path = os.path.join(ensure_artifact_dir(), name)
+    keys: list[str] = []
+    for row in rows:
+        for k in row:
+            if k not in keys:
+                keys.append(k)
+    with open(path, "w", newline="") as f:
+        w = csv.DictWriter(f, fieldnames=keys)
+        w.writeheader()
+        w.writerows(rows)
+    return path
 
 
 def timed(fn):

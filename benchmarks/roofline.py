@@ -21,7 +21,7 @@ PEAK_FLOPS = 197e12
 HBM_BW = 819e9
 ICI_BW = 50e9
 
-ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "artifacts")
+from .common import ensure_artifact_dir
 
 
 def model_flops(arch: str, cell: str) -> float:
@@ -91,7 +91,7 @@ def analyze(records: list[dict]) -> list[dict]:
 
 
 def load(mesh: str = "single") -> list[dict]:
-    path = os.path.join(ARTIFACT_DIR, f"dryrun_{mesh}.json")
+    path = os.path.join(ensure_artifact_dir(), f"dryrun_{mesh}.json")
     with open(path) as f:
         return json.load(f)
 

@@ -18,7 +18,8 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None,
-                    help="fig9|fig11|fig12|overload|batched|kernel|roofline")
+                    help="fig9|fig11|fig12|overload|batched|disorder|"
+                         "kernel|roofline")
     args = ap.parse_args()
     quick = not args.full
 
@@ -49,6 +50,10 @@ def main() -> None:
         from . import fig_batched
 
         sections.append(("fig_batched", fig_batched.main(quick=quick)))
+    if args.only in (None, "disorder"):
+        from . import fig_disorder
+
+        sections.append(("fig_disorder", fig_disorder.main(quick=quick)))
     if args.only in (None, "roofline"):
         from . import roofline
 

@@ -56,7 +56,8 @@ from .events import EventBatch, StreamSchema, pane_size_for, split_panes
 from .query import AtomicQuery, Workload
 from .template import QueryTemplate, build_template
 
-__all__ = ["ComponentContext", "PaneProcessor", "HamletRuntime", "RunStats"]
+__all__ = ["ComponentContext", "PaneProcessor", "HamletRuntime", "RunStats",
+           "fold_panes", "vals_equal"]
 
 
 # --------------------------------------------------------------------------
@@ -636,6 +637,23 @@ class _Instance:
     events: list = field(default_factory=list)  # retained only for min/max
 
 
+def fold_panes(Ms: list[np.ndarray], u0: np.ndarray) -> np.ndarray:
+    """Replay a window's state from per-pane transfer matrices.
+
+    Applies the panes' transfer matrices to the fresh state ``u0`` in stream
+    order — the same ``u @ M.T`` fold :func:`advance_instances` performs
+    incrementally, so replaying a window from stored matrices reproduces the
+    incremental run.  This is the event-time revision primitive: after a late
+    event dirties one pane, only that pane's ``M`` is recomputed and the
+    window is re-folded from the stored matrices of the clean panes.
+    """
+    u = u0
+    with np.errstate(over="ignore", invalid="ignore"):
+        for M in Ms:
+            u = u @ M.T
+    return u
+
+
 def advance_instances(M: np.ndarray, insts: dict[int, "_Instance"]) -> None:
     """Advance every open window instance by one pane: a single [n, C] x
     [C, C] matmul instead of one matvec per instance (the per-pane fold of
@@ -669,6 +687,24 @@ class HamletRuntime:
         self.executor = PaneBatchExecutor(backend=backend, batched=batch_exec,
                                           shard_slices=shard_slices)
         self.stats = RunStats()
+        self._empty_M: list[np.ndarray] | None = None
+
+    def empty_pane_matrices(self) -> list[np.ndarray]:
+        """Per-component transfer matrix of an event-free pane (cached).
+
+        Every empty pane folds identically, so the event-time layer stores
+        matrices only for panes that saw events and substitutes this one for
+        the gaps when replaying a window (see :func:`fold_panes`).
+        """
+        if self._empty_M is None:
+            empty = EventBatch(self.workload.schema, np.array([], np.int32),
+                               np.array([], np.int64), None)
+            scratch = RunStats()
+            self._empty_M = [
+                PaneProcessor(ctx, self.policy, backend=self.backend,
+                              executor=self.executor).process(empty, scratch)
+                for ctx in self.ctxs]
+        return self._empty_M
 
     def run(self, batch: EventBatch, t_end: int | None = None) -> dict:
         """Process a stream; returns {(query, group, window_start): {agg: val}}.
@@ -745,6 +781,22 @@ class HamletRuntime:
 
     def _combine(self, atomic_results: dict) -> dict:
         return combine_results(self.workload, atomic_results)
+
+
+def vals_equal(a: dict, b: dict) -> bool:
+    """Exact equality of window aggregate dicts, treating NaN == NaN (an
+    AVG over zero matches is NaN in both runs and must not read as a
+    difference)."""
+    import math
+
+    if a.keys() != b.keys():
+        return False
+    for k, va in a.items():
+        vb = b[k]
+        if va != vb and not (isinstance(va, float) and isinstance(vb, float)
+                             and math.isnan(va) and math.isnan(vb)):
+            return False
+    return True
 
 
 def combine_results(workload: Workload, atomic_results: dict) -> dict:

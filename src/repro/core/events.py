@@ -66,6 +66,14 @@ class EventBatch:
     time    : int64[n]      non-decreasing timestamps in ticks
     attrs   : float64[n, a] attribute values (column per schema.attrs entry)
     group   : int64[n]      group partition key (constant within a partition)
+    seq     : int64[n]|None provenance: producer sequence / original arrival
+                            index.  Optional; carried so that out-of-order
+                            streams can be merged back into a *total* order
+                            (ties on ``time`` break by ``seq``, see
+                            :meth:`merge`).  The engine ignores it.
+
+    Direct construction still requires time order; real traces with
+    disordered arrival go through :meth:`from_unsorted`.
     """
 
     schema: StreamSchema
@@ -73,6 +81,7 @@ class EventBatch:
     time: np.ndarray
     attrs: np.ndarray
     group: np.ndarray = field(default=None)  # type: ignore[assignment]
+    seq: np.ndarray | None = field(default=None)
 
     def __post_init__(self) -> None:
         n = len(self.type_id)
@@ -88,8 +97,13 @@ class EventBatch:
         self.group = np.asarray(self.group, dtype=np.int64)
         if len(self.time) != n or len(self.attrs) != n or len(self.group) != n:
             raise ValueError("EventBatch arrays must share their leading dim")
+        if self.seq is not None:
+            self.seq = np.asarray(self.seq, dtype=np.int64)
+            if len(self.seq) != n:
+                raise ValueError("EventBatch arrays must share their leading dim")
         if n > 1 and np.any(np.diff(self.time) < 0):
-            raise ValueError("events must be time-ordered")
+            raise ValueError("events must be time-ordered "
+                             "(use EventBatch.from_unsorted for raw traces)")
 
     def __len__(self) -> int:
         return len(self.type_id)
@@ -104,6 +118,7 @@ class EventBatch:
             time=self.time[idx],
             attrs=self.attrs[idx],
             group=self.group[idx],
+            seq=None if self.seq is None else self.seq[idx],
         )
 
     def time_slice(self, t0: int, t1: int) -> "EventBatch":
@@ -113,16 +128,81 @@ class EventBatch:
         return self.select(np.arange(lo, hi))
 
     @staticmethod
+    def from_unsorted(schema: StreamSchema, type_id, time, attrs=None,
+                      group=None, seq=None) -> "EventBatch":
+        """Build a batch from arrays in *arrival* order (any time order).
+
+        Events are stable-sorted by timestamp, so equal-timestamp events keep
+        their relative arrival order.  ``seq`` records provenance: when not
+        given, it is stamped with the original arrival index (position in the
+        input arrays), so callers can always recover where a sorted event came
+        from; producers that stamp their own sequence ids pass them through.
+        """
+        time = np.asarray(time, dtype=np.int64)
+        n = len(time)
+        seq = (np.arange(n, dtype=np.int64) if seq is None
+               else np.asarray(seq, dtype=np.int64))
+        order = np.argsort(time, kind="stable")
+        if attrs is not None and np.size(attrs) == 0:
+            attrs = None
+        attrs = None if attrs is None else np.asarray(
+            attrs, dtype=np.float64).reshape(n, -1)
+        return EventBatch(
+            schema=schema,
+            type_id=np.asarray(type_id, dtype=np.int32)[order],
+            time=time[order],
+            attrs=None if attrs is None else attrs[order],
+            group=(None if group is None
+                   else np.asarray(group, dtype=np.int64)[order]),
+            seq=seq[order],
+        )
+
+    @staticmethod
     def concat(batches: list["EventBatch"]) -> "EventBatch":
         if not batches:
             raise ValueError("need at least one batch")
         schema = batches[0].schema
+        # provenance only survives when every part carries it; a partial
+        # concat would silently misorder merge() ties
+        seqs = [b.seq for b in batches]
         return EventBatch(
             schema=schema,
             type_id=np.concatenate([b.type_id for b in batches]),
             time=np.concatenate([b.time for b in batches]),
             attrs=np.concatenate([b.attrs for b in batches]),
             group=np.concatenate([b.group for b in batches]),
+            seq=(np.concatenate(seqs) if all(s is not None for s in seqs)
+                 else None),
+        )
+
+    @staticmethod
+    def merge(batches: list["EventBatch"]) -> "EventBatch":
+        """Merge time-sorted batches into one total order.
+
+        Unlike :meth:`concat`, the inputs need not be globally ordered
+        relative to each other.  Ties on ``time`` break by ``seq`` when
+        every batch carries it (the producer's total order), else by batch
+        order then position (stable) — the contract the event-time layer
+        relies on to reconstruct the original stream from disordered
+        arrivals.
+        """
+        if not batches:
+            raise ValueError("need at least one batch")
+        time = np.concatenate([b.time for b in batches])
+        seqs = [b.seq for b in batches]
+        seq = (np.concatenate(seqs) if all(s is not None for s in seqs)
+               else None)
+        if seq is not None:
+            order = np.lexsort((seq, time))
+        else:
+            order = np.argsort(time, kind="stable")
+        return EventBatch(
+            schema=batches[0].schema,
+            type_id=np.concatenate([b.type_id for b in batches])[order],
+            time=time[order],
+            attrs=np.concatenate([b.attrs for b in batches])[order],
+            group=np.concatenate([b.group for b in batches])[order],
+            seq=None if seq is None else seq[order],
         )
 
     def partition_by_group(self) -> dict[int, "EventBatch"]:

@@ -24,6 +24,21 @@ measured epoch-processing latency (``slo_ms`` is therefore a per-*epoch*
 target here; the pane-granular loop lives in ``repro.overload.runtime``), and
 every shed event is charged to the error accountant.  The state is exposed as
 ``service.overload``.
+
+Passing an :class:`repro.eventtime.EventTimeConfig` replaces the fixed-bound
+``OutOfOrderBuffer`` with the event-time layer's policy-driven
+:class:`~repro.eventtime.ReorderBuffer` *and* opens the revision path: a
+straggler behind the already-emitted frontier but inside the lateness horizon
+is merged into the retained history tail and every emitted window it touches
+is re-evaluated — value changes append retract/amend records to
+``service.revisions`` and update ``service.results`` in place (``feed`` keeps
+returning only first-time emissions).  Stragglers beyond the horizon are
+expired: counted in ``service.expired_late`` and, when overload is attached,
+charged to the error accountant so the shedding bounds survive disorder.
+History retention is widened from ``max(within)`` to ``max(within) +
+horizon`` to make that replay exact.  (The pane-granular speculative path —
+emit optimistically, revise from stored pane matrices — lives in
+``repro.eventtime.revision``.)
 """
 
 from __future__ import annotations
@@ -33,7 +48,7 @@ import time
 
 import numpy as np
 
-from .engine import HamletRuntime, RunStats
+from .engine import HamletRuntime, RunStats, vals_equal
 from .events import EventBatch
 from .query import Query, Workload
 
@@ -165,7 +180,9 @@ class HamletService:
 
     def __init__(self, schema, queries: list[Query], policy=None,
                  lateness: int = 0, sharable_mode: str = "units",
-                 overload=None, batch_exec: bool = True):
+                 overload=None, batch_exec: bool = True, eventtime=None):
+        from .events import pane_size_for
+
         self.schema = schema
         self.sharable_mode = sharable_mode
         self.policy = policy
@@ -173,7 +190,29 @@ class HamletService:
         self._queries: dict[str, Query] = {q.name: q for q in queries}
         self._pending_add: dict[str, Query] = {}
         self._pending_remove: set[str] = set()
-        self._ooo = OutOfOrderBuffer(schema, lateness)
+        self.eventtime = eventtime
+        if eventtime is None:
+            self._ooo = OutOfOrderBuffer(schema, lateness)
+            self._reorder = None
+        else:
+            from ..eventtime.reorder import ReorderBuffer
+            from ..eventtime.watermark import make_watermark
+
+            # pane granularity is fixed at construction, like the
+            # accountant's (a migrated workload keeps the original sealing
+            # grid; it stays sound because sealing only ever under-promises)
+            pane = pane_size_for([(q.within, q.slide)
+                                  for q in queries] or [(1, 1)])
+            self._ooo = None
+            self._reorder = ReorderBuffer(
+                schema, pane, make_watermark(eventtime),
+                lateness_horizon=eventtime.lateness_horizon)
+        self.revisions: list = []                # retract/amend records
+        self._revno: dict = {}                   # window key -> revision no
+        # when each query became active (epoch time): revision must never
+        # resurrect windows that closed before a query existed
+        self._query_since: dict[str, int] = {q.name: 0 for q in queries}
+        self.expired_late = 0
         self._events: EventBatch | None = None   # history tail
         self._t_done = 0                         # epochs emitted up to here
         self.results: dict = {}
@@ -207,7 +246,10 @@ class HamletService:
         for name in self._pending_remove:
             self._queries.pop(name, None)
             self._pending_add.pop(name, None)
+            self._query_since.pop(name, None)
         for name, q in self._pending_add.items():
+            if name not in self._queries:
+                self._query_since[name] = self._t_done
             self._queries[name] = q
         self._pending_add.clear()
         self._pending_remove.clear()
@@ -218,6 +260,8 @@ class HamletService:
     # -- streaming --
 
     def feed(self, batch: EventBatch) -> dict:
+        if self._reorder is not None:
+            return self._feed_eventtime(batch)
         ready = self._ooo.feed(batch)
         if self.overload is not None:
             ready = self.overload.shed(ready)
@@ -225,8 +269,126 @@ class HamletService:
         return self._drain(final=False)
 
     def close(self) -> dict:
+        if self._reorder is not None:
+            res = self._reorder.flush()
+            self._absorb_sealed(res)
+            return self._drain(final=True)
         self._append(self._ooo.flush())
         return self._drain(final=True)
+
+    def heartbeat(self, group: int, t: int) -> dict:
+        """Group liveness signal (event-time mode with the group_heartbeat
+        watermark policy); may seal panes and emit windows."""
+        if self._reorder is None:
+            return {}
+        self._absorb_sealed(self._reorder.heartbeat(group, t))
+        return self._drain(final=False)
+
+    def _feed_eventtime(self, batch: EventBatch) -> dict:
+        res = self._reorder.push(batch)
+        self._absorb_sealed(res)
+        if res.late is not None and len(res.late):
+            self.revise(res.late)
+        return self._drain(final=False)
+
+    def _absorb_sealed(self, res) -> None:
+        if res.expired is not None and len(res.expired):
+            self._expire(res.expired)
+        ready = [sp.events for sp in res.sealed if len(sp.events)]
+        if not ready:
+            return
+        released = EventBatch.concat(ready)
+        if self.overload is not None:
+            released = self.overload.shed(released)
+        self._append(released)
+
+    def _expire(self, batch: EventBatch) -> None:
+        self.expired_late += len(batch)
+        if self.overload is not None:
+            self.overload.accountant.record(batch, witnessed=False, late=True)
+
+    @property
+    def _horizon(self) -> int:
+        if self.eventtime is None:
+            return 0
+        h = self.eventtime.lateness_horizon
+        # retention is widened by the horizon (see _run_epoch), so any
+        # configured depth replays exactly; None (unbounded in the config's
+        # contract) defaults to max(within) here to keep retention finite
+        return self._max_within if h is None else h
+
+    # -- revision (event-time mode) --
+
+    def revise(self, late: EventBatch) -> list:
+        """Fold stragglers that arrived behind the emitted frontier into the
+        retained history and re-evaluate every emitted window they touch.
+
+        Events inside the lateness horizon are merged (by time, provenance
+        ties by ``seq``); affected windows are re-run over the retained tail
+        with the epoch replay arithmetic, and every value change appends a
+        ``retract`` + ``amend`` record pair to ``self.revisions`` and
+        updates ``self.results``.  Events behind the horizon are expired
+        (counted; charged to the overload accountant when attached).
+        Returns the new records."""
+        from ..eventtime.revision import EmissionRecord
+
+        if not len(late):
+            return []
+        bound = self._t_done - self._horizon
+        old_mask = late.time < bound
+        if old_mask.any():
+            self._expire(late.select(np.nonzero(old_mask)[0]))
+            late = late.select(np.nonzero(~old_mask)[0])
+        if not len(late):
+            return []
+        self._events = (late if self._events is None
+                        else EventBatch.merge([self._events, late]))
+
+        # replay the affected region: only windows that actually contain a
+        # straggler (per group), were already emitted (close <= t_done), and
+        # belong to a query that existed when they closed
+        t_from = int(late.time.min())
+        L = self._epoch_len
+        shift = max(0, (t_from - self._max_within) // L * L)
+        end = self._t_done
+        if end <= shift:
+            return []
+        res = self._replay(shift, end)
+        late_by_group = {int(g): b.time
+                         for g, b in late.partition_by_group().items()}
+
+        records: list = []
+        for (qn, gk, w0), vals in res.items():
+            q = self._queries.get(qn)
+            if q is None:
+                continue
+            close_t = w0 + shift + q.within
+            if not (t_from < close_t <= end):
+                continue        # unaffected or not yet emitted
+            if close_t <= self._query_since.get(qn, 0):
+                continue        # window predates the query
+            lt = late_by_group.get(int(gk))
+            if lt is None or not ((lt >= w0 + shift) & (lt < close_t)).any():
+                continue        # no straggler landed inside this window
+            key = (qn, gk, w0 + shift)
+            old = self.results.get(key)
+            if old is None:
+                # a straggler made this window's group visible for the
+                # first time: a late first emission, not an amendment
+                records.append(EmissionRecord("emit", qn, gk, w0 + shift,
+                                              vals, 0))
+            elif vals_equal(old, vals):
+                continue
+            else:
+                rev = self._revno.get(key, 0) + 1
+                self._revno[key] = rev
+                records.append(EmissionRecord("retract", qn, gk,
+                                              w0 + shift, old, rev - 1))
+                records.append(EmissionRecord("amend", qn, gk, w0 + shift,
+                                              vals, rev))
+            self.results[key] = vals
+        self.revisions.extend(records)
+        return records
 
     def _append(self, batch: EventBatch) -> None:
         if not len(batch):
@@ -250,24 +412,29 @@ class HamletService:
                 break
         return new
 
+    def _replay(self, shift: int, end: int) -> dict:
+        """Run the current workload over retained history in [shift, end),
+        window starts re-aligned by ``shift`` (a multiple of the epoch) —
+        the one replay primitive shared by epoch emission and revision, so
+        their arithmetic cannot drift apart."""
+        ev = self._events
+        sel = np.nonzero((ev.time >= shift) & (ev.time < end))[0]
+        sub = ev.select(sel)
+        shifted = EventBatch(self.schema, sub.type_id, sub.time - shift,
+                             sub.attrs, sub.group)
+        rt = HamletRuntime(self._workload(), policy=self.policy,
+                           batch_exec=self.batch_exec)
+        res = rt.run(shifted, t_end=end - shift)
+        self.stats.merge(rt.stats)
+        return res
+
     def _run_epoch(self, end: int) -> dict:
         t_start = time.perf_counter()
         L = self._epoch_len
         # replay shift: a multiple of L (window starts stay slide-aligned)
         k_hist = math.ceil(self._max_within / L)
         shift = max(0, (end // L - 1 - k_hist)) * L
-
-        ev = self._events
-        sel = np.nonzero((ev.time >= shift) & (ev.time < end))[0]
-        sub = ev.select(sel)
-        shifted = EventBatch(self.schema, sub.type_id, sub.time - shift,
-                             sub.attrs, sub.group)
-
-        wl = self._workload()
-        rt = HamletRuntime(wl, policy=self.policy,
-                           batch_exec=self.batch_exec)
-        res = rt.run(shifted, t_end=end - shift)
-        self.stats.merge(rt.stats)
+        res = self._replay(shift, end)
 
         # emit only windows that close inside this epoch
         out: dict = {}
@@ -280,8 +447,10 @@ class HamletService:
                 out[(qn, gk, w0 + shift)] = vals
         self.results.update(out)
 
-        # retire history older than any future window needs
-        keep_from = end - self._max_within
+        # retire history older than any future window — or, in event-time
+        # mode, any still-revisable emitted window — needs
+        keep_from = end - self._max_within - self._horizon
+        ev = self._events
         keep = np.nonzero(ev.time >= keep_from)[0]
         self._events = ev.select(keep) if len(keep) else None
         self._t_done = end

@@ -80,6 +80,7 @@ class ErrorAccountant:
         self._shed: dict[tuple[int, int, int], list[int]] = {}
         self._tainted: set[int] = set()
         self.total_shed = 0
+        self.late_events = 0
         self._bind(workload)
 
     def _bind(self, workload: Workload) -> None:
@@ -123,14 +124,26 @@ class ErrorAccountant:
             survivors = set(remap.values())
             self._tainted |= set(range(len(workload.atomic))) - survivors
 
-    def record(self, shed: EventBatch, witnessed: bool = False) -> None:
+    def record(self, shed: EventBatch, witnessed: bool = False,
+               late: bool = False) -> None:
         """Account a batch of shed events (any time span; bucketed per pane).
 
         ``witnessed``: the shed plan certified suffix-only Kleene shedding
-        with a kept witness per trimmed burst (see module docstring)."""
+        with a kept witness per trimmed burst (see module docstring).
+
+        ``late``: the events were not chosen by a shed plan but arrived past
+        the lateness horizon of the event-time layer (or behind an
+        order-assuming pane loop) and were dropped for it.  They are charged
+        exactly like unwitnessed shed events — an un-folded event corrupts
+        results the same way however it was lost — which keeps the subset /
+        ``3^s`` bookkeeping sound under disorder: any window a late Kleene
+        event would have landed in loses its ``tight`` certificate, and late
+        negation events withdraw the subset guarantee."""
         if not len(shed):
             return
         self.total_shed += len(shed)
+        if late:
+            self.late_events += len(shed)
         pane_t0 = (shed.time // self.pane) * self.pane
         for aqi, (kle, crit, neg) in enumerate(self._cls):
             for ci, tset in ((_KLE, kle), (_CRIT, crit), (_NEG, neg)):

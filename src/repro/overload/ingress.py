@@ -7,9 +7,18 @@ as ``rejected`` and dropped, since this process cannot block a remote
 producer), and draining below the low watermark flips it back on.  Offers that
 would overflow the hard capacity are truncated and counted as ``dropped``.
 
-Events inside one offered batch are time-ordered (``EventBatch`` enforces it)
-and producers feed in arrival order, so the buffer stays globally ordered and
-``poll_until`` is a simple split.
+Events inside one offered batch are time-ordered (``EventBatch`` enforces it),
+but producers do **not** necessarily feed batches in global time order —
+retried producers and clock-skewed sources interleave.  The queue therefore
+guards the order assumption instead of silently relying on it: an offer that
+starts before the buffered tail marks the buffer disordered (``poll_until``
+then re-sorts before splitting, so its contract — every buffered event with
+``time < t``, time-sorted — always holds), and events that *straddle* the
+poll frontier (arrive with a timestamp older than the last ``poll_until``
+boundary, so their pane has already been handed out) are counted in
+``straddled_late`` and still delivered on the next poll; the consumer decides
+whether to revise them in (the event-time layer) or charge them to the
+shedding accountant (the plain pane loop).
 """
 
 from __future__ import annotations
@@ -33,8 +42,12 @@ class IngressQueue:
         self.accepting = True
         self.rejected = 0        # offered while backpressure was asserted
         self.dropped = 0         # truncated against the hard capacity
+        self.straddled_late = 0  # offered with time < the last poll boundary
         self._batches: list[EventBatch] = []
         self._n = 0
+        self._tail_time = -(1 << 62)    # max buffered timestamp
+        self._polled_until = -(1 << 62)  # last poll_until boundary
+        self._disordered = False
 
     def __len__(self) -> int:
         return self._n
@@ -54,6 +67,13 @@ class IngressQueue:
             self.dropped += n - take
         if take > 0:
             b = batch if take == n else batch.select(np.arange(take))
+            # straddle guard: an offer reaching behind the buffered tail or
+            # the poll frontier breaks the global-order assumption — flag it
+            # instead of letting searchsorted split a non-sorted buffer
+            if int(b.time[0]) < self._tail_time:
+                self._disordered = True
+            self.straddled_late += int(np.sum(b.time < self._polled_until))
+            self._tail_time = max(self._tail_time, int(b.time[-1]))
             self._batches.append(b)
             self._n += take
         if self._n >= self.high:
@@ -62,10 +82,15 @@ class IngressQueue:
 
     def poll_until(self, t_exclusive: int) -> EventBatch:
         """Dequeue every buffered event with ``time < t_exclusive``."""
+        self._polled_until = max(self._polled_until, int(t_exclusive))
         if self._n == 0:
             return self._empty()
-        merged = (self._batches[0] if len(self._batches) == 1
-                  else EventBatch.concat(self._batches))
+        if self._disordered:
+            merged = EventBatch.merge(self._batches)
+            self._disordered = False
+        else:
+            merged = (self._batches[0] if len(self._batches) == 1
+                      else EventBatch.concat(self._batches))
         hi = int(np.searchsorted(merged.time, t_exclusive, side="left"))
         out = merged.select(np.arange(hi))
         rest = merged.select(np.arange(hi, len(merged)))

@@ -53,6 +53,7 @@ class PaneMetric:
     proc_ms: float
     lat_ms: float
     shed_ratio: float
+    late: int = 0   # arrivals behind this pane's start (routed to accountant)
 
 
 @dataclass
@@ -173,9 +174,23 @@ class OverloadRuntime:
     # -- pane loop --
 
     def step_pane(self) -> None:
-        """Admit, shed, and process the next pane ``[t, t + pane)``."""
+        """Admit, shed, and process the next pane ``[t, t + pane)``.
+
+        The pane loop assumes time order; arrivals that straddled the poll
+        frontier (time < t0 — their pane was already processed) cannot be
+        folded in here.  They are charged to the error accountant as late,
+        unwitnessed shed events so every certificate they could invalidate
+        is withdrawn (the event-time layer is the path that *revises* such
+        events instead of dropping them)."""
         t0 = self._t
         ev = self.queue.poll_until(t0 + self.pane)
+        n_late = 0
+        if len(ev) and int(ev.time[0]) < t0:
+            stale = np.nonzero(ev.time < t0)[0]
+            n_late = len(stale)
+            self.accountant.record(ev.select(stale), witnessed=False,
+                                   late=True)
+            ev = ev.select(np.arange(n_late, len(ev)))
         n = len(ev)
 
         if self.shedder is None:
@@ -205,7 +220,7 @@ class OverloadRuntime:
         self.metrics.add(PaneMetric(
             t0=t0, offered=n, admitted=len(kept), shed=n - keep_n,
             proc_ms=proc_s * 1e3, lat_ms=lat_ms,
-            shed_ratio=self.controller.shed_ratio))
+            shed_ratio=self.controller.shed_ratio, late=n_late))
         self._t = t0 + self.pane
 
     def _latency_ms(self, t0: int, proc_s: float) -> float:

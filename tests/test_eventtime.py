@@ -1,0 +1,476 @@
+"""Event-time subsystem: watermark policies, reorder buffer, speculative
+emission + revision, and the disorder differential guarantee."""
+
+import numpy as np
+import pytest
+
+from repro.core.engine import HamletRuntime
+from repro.core.events import EventBatch, StreamSchema
+from repro.core.pattern import EventType, Kleene, Not, Seq
+from repro.core.query import Query, Workload, agg_avg, agg_max, agg_sum, \
+    count_star
+from repro.core.service import HamletService
+from repro.eventtime import (BoundedSkew, EventTimeConfig, EventTimeRuntime,
+                             GroupHeartbeat, PercentileAdaptive,
+                             ReorderBuffer, make_watermark)
+from repro.overload import ErrorAccountant
+from repro.streams.generator import DisorderConfig, apply_disorder
+
+SCHEMA = StreamSchema(types=("A", "B", "C", "D"), attrs=("v",))
+A, B, C, D = map(EventType, "ABCD")
+
+
+def _wl(with_not=True, with_aggs=False):
+    aggs1 = ((count_star(), agg_sum("B", "v")) if with_aggs
+             else (count_star(),))
+    qs = [Query("q1", Seq(A, Kleene(B)), aggs=aggs1, within=10, slide=5),
+          Query("q2", Kleene(B), within=10, slide=10)]
+    if with_not:
+        qs.append(Query("q3", Seq(A, Kleene(B), Not(C)), within=10,
+                        slide=10))
+    if with_aggs:
+        qs.append(Query("q4", Seq(C, Kleene(B)),
+                        aggs=(count_star(), agg_avg("B", "v"),
+                              agg_max("B", "v")),
+                        within=20, slide=10))
+    return Workload(SCHEMA, qs)
+
+
+def _stream(n=150, t_max=40, seed=0, groups=2, p=(0.2, 0.55, 0.1, 0.15)):
+    rng = np.random.default_rng(seed)
+    types = rng.choice(4, n, p=list(p)).astype(np.int32)
+    times = np.sort(rng.integers(0, t_max, n))
+    attrs = rng.integers(0, 5, (n, 1)).astype(float)  # integer-valued: the
+    # float64 aggregates are then order-exact, so "bitwise identical" is a
+    # meaningful assertion across execution orders
+    return EventBatch(SCHEMA, types, times, attrs,
+                      rng.integers(0, groups, n))
+
+
+# ------------------------------------------------------------- watermarks
+
+
+def test_bounded_skew_watermark():
+    """wm = max_seen - skew - 1: an event late by exactly ``skew`` has
+    timestamp max_seen - skew and must still be inside the promise."""
+    wm = BoundedSkew(skew=5)
+    wm.observe(np.array([10, 12]))
+    assert wm.watermark() == 6
+    wm.observe(np.array([7]))            # exactly skew late: NOT behind wm
+    assert wm.watermark() == 6
+    wm.observe(np.array([30]))
+    assert wm.watermark() == 24
+
+
+def test_percentile_watermark_adapts_to_disorder():
+    calm = PercentileAdaptive(percentile=95, window=64)
+    calm.observe(np.arange(100))
+    assert calm.watermark() == 98        # in-order: zero skew, tie guard -1
+    rough = PercentileAdaptive(percentile=95, window=64)
+    rng = np.random.default_rng(0)
+    t = np.arange(200) + rng.integers(0, 15, 200)
+    rough.observe(t)
+    lag = int(t.max()) - rough.watermark()
+    assert 2 <= lag <= 16                # skew widened to cover the jitter
+
+
+def test_percentile_watermark_max_skew_cap():
+    wm = PercentileAdaptive(percentile=100, window=32, max_skew=4)
+    wm.observe(np.array([100, 0, 100]))  # one enormous lateness sample
+    assert wm.watermark() == 95
+
+
+def test_group_heartbeat_watermark():
+    wm = GroupHeartbeat(skew=0)
+    wm.observe(np.array([10, 20]), np.array([0, 1]))
+    assert wm.watermark() == 9           # held back by group 0 (tie guard)
+    wm.heartbeat(0, 20)                  # promise: no group-0 event < 20
+    assert wm.watermark() == 19          # an event AT 20 stays legal
+    wm2 = GroupHeartbeat(skew=0, idle_timeout=5)
+    wm2.observe(np.array([10, 40]), np.array([0, 1]))
+    assert wm2.watermark() == 39         # group 0 idle-timed-out
+
+
+def test_make_watermark_rejects_unknown():
+    with pytest.raises(ValueError):
+        EventTimeConfig(watermark="nope")
+
+
+# ---------------------------------------------------------- reorder buffer
+
+
+def test_reorder_buffer_seals_contiguous_panes():
+    buf = ReorderBuffer(SCHEMA, pane=5, policy=BoundedSkew(skew=3))
+    r1 = buf.push(EventBatch.from_unsorted(SCHEMA, [0, 1, 1], [7, 2, 11]))
+    # wm = 11 - 3 - 1 = 7: every tick of [0,5) is closed, [5,10) is not
+    assert [sp.t0 for sp in r1.sealed] == [0]
+    assert (r1.sealed[0].events.time == [2]).all()
+    r2 = buf.push(EventBatch.from_unsorted(SCHEMA, [0], [18]))
+    assert [sp.t0 for sp in r2.sealed] == [5, 10]   # empty gaps included
+    assert (r2.sealed[0].events.time == [7]).all()
+    fl = buf.flush()
+    assert [sp.t0 for sp in fl.sealed] == [15]
+    assert (fl.sealed[0].events.time == [18]).all()
+
+
+def test_reorder_buffer_routes_late_and_expired():
+    buf = ReorderBuffer(SCHEMA, pane=5, policy=BoundedSkew(skew=0),
+                        lateness_horizon=10)
+    buf.push(EventBatch.from_unsorted(SCHEMA, [0], [20]))   # seals [0,20)
+    r = buf.push(EventBatch.from_unsorted(SCHEMA, [1, 1, 1], [15, 3, 21]))
+    assert r.n_late == 1 and (r.late.time == [15]).all()
+    assert r.n_expired == 1 and (r.expired.time == [3]).all()
+    assert buf.late_total == 1 and buf.expired_total == 1
+
+
+def test_reorder_buffer_merges_ties_by_seq():
+    buf = ReorderBuffer(SCHEMA, pane=10, policy=BoundedSkew(skew=0))
+    buf.push(EventBatch.from_unsorted(SCHEMA, [1], [4], seq=[7]))
+    buf.push(EventBatch.from_unsorted(SCHEMA, [2], [4], seq=[3]))
+    fl = buf.flush()
+    assert (fl.sealed[0].events.type_id == [2, 1]).all()   # seq order
+
+
+# ----------------------------------------------- speculative runtime: basics
+
+
+def test_inorder_stream_matches_plain_runtime_and_never_amends():
+    wl = _wl(with_aggs=True)
+    batch = _stream(n=200, t_max=40, seed=1)
+    want = HamletRuntime(wl).run(batch, t_end=40)
+    et = EventTimeRuntime(wl, EventTimeConfig(skew=4))
+    for i in range(0, len(batch), 17):
+        et.ingest(batch.select(np.arange(i, min(i + 17, len(batch)))))
+    et.flush(t_end=40)
+    got = et.results()
+    assert set(got) == set(want)
+    for k in want:
+        assert got[k] == want[k], k
+    assert et.metrics.amendments == 0
+    assert et.metrics.panes_revised == 0
+
+
+def test_speculative_emission_precedes_watermark():
+    wl = _wl(with_not=False)
+    batch = _stream(n=100, t_max=40, seed=2, groups=1)
+    et = EventTimeRuntime(wl, EventTimeConfig(skew=15))
+    recs = []
+    for i in range(0, len(batch), 10):
+        recs += et.ingest(batch.select(np.arange(i, min(i + 10,
+                                                        len(batch)))))
+    emits = [r for r in recs if r.kind == "emit"]
+    assert emits and any(r.speculative for r in emits)
+    # with a 15-tick watermark lag, the buffer baseline cannot have emitted
+    # windows this close to the frontier
+    assert et.metrics.speculative_emits > 0
+
+
+def test_revision_emits_retract_amend_pairs():
+    wl = _wl(with_not=False)
+    # pane 5: an A at t=0, B burst at t=1..3, then a straggler B at t=2
+    batch1 = EventBatch(SCHEMA, np.array([0, 1, 1], np.int32),
+                        np.array([0, 1, 3], np.int64), None)
+    et = EventTimeRuntime(wl, EventTimeConfig(skew=0))
+    et.ingest(batch1)
+    r1 = et.ingest(EventBatch(SCHEMA, np.array([1], np.int32),
+                              np.array([12], np.int64), None))
+    emitted = [r for r in r1 if r.kind == "emit"]
+    assert [(r.query, r.w0) for r in emitted] == [("q1", 0), ("q2", 0)]
+    before = {(r.query, r.w0): r.vals for r in emitted}
+    # straggler lands in the already-emitted window [0, 10)
+    r2 = et.ingest(EventBatch(SCHEMA, np.array([1], np.int32),
+                              np.array([2], np.int64), None))
+    kinds = [r.kind for r in r2]
+    assert kinds == ["retract", "amend", "retract", "amend"]
+    for ret, amd in zip(r2[::2], r2[1::2]):
+        assert ret.query == amd.query and ret.w0 == amd.w0
+        assert ret.vals == before[(ret.query, ret.w0)]
+        assert amd.revision == ret.revision + 1 == 1
+        assert amd.vals["COUNT(*)"] > ret.vals["COUNT(*)"]
+    assert et.metrics.amendments == 2 and et.metrics.retractions == 2
+
+
+def test_noop_revision_stays_silent():
+    """A late event irrelevant to every query re-executes its pane but must
+    not emit amendments."""
+    wl = _wl(with_not=False)
+    et = EventTimeRuntime(wl, EventTimeConfig(skew=0))
+    et.ingest(EventBatch(SCHEMA, np.array([0, 1], np.int32),
+                         np.array([0, 3], np.int64), None))
+    et.ingest(EventBatch(SCHEMA, np.array([1], np.int32),
+                         np.array([12], np.int64), None))
+    recs = et.ingest(EventBatch(SCHEMA, np.array([3], np.int32),
+                                np.array([2], np.int64), None))   # type D
+    assert [r for r in recs if r.kind in ("retract", "amend")] == []
+    assert et.metrics.noop_revisions > 0
+    assert et.metrics.amendments == 0
+
+
+def test_expired_events_routed_to_accountant():
+    wl = _wl()
+    acc = ErrorAccountant(wl)
+    et = EventTimeRuntime(wl, EventTimeConfig(skew=0, lateness_horizon=5),
+                          accountant=acc)
+    et.ingest(EventBatch(SCHEMA, np.array([1], np.int32),
+                         np.array([30], np.int64), None))
+    # t=2 is 28 behind the watermark: far past the 5-tick horizon
+    recs = et.ingest(EventBatch(SCHEMA, np.array([1], np.int32),
+                                np.array([2], np.int64), None))
+    assert et.metrics.expired == 1
+    assert acc.late_events == 1 and acc.total_shed == 1
+    assert [r for r in recs if r.kind != "emit"] == []
+    # the window the expired Kleene event belonged to loses its certificate
+    wb = acc.window_bound("q2", 0, 0)
+    assert wb.shed_kleene == 1 and not wb.tight
+
+
+def test_single_large_chunk_never_expires_its_own_events():
+    """Lateness is judged against the watermark *before* a chunk is
+    observed: a perfectly in-order stream fed as one big chunk (its span far
+    exceeding the horizon) must lose nothing — in both modes."""
+    from repro.core.engine import vals_equal
+
+    wl = _wl(with_aggs=True)
+    batch = _stream(n=200, t_max=60, seed=11)
+    want = HamletRuntime(wl).run(batch, t_end=60)
+    for speculative in (True, False):
+        et = EventTimeRuntime(wl, EventTimeConfig(
+            skew=0, lateness_horizon=5, speculative=speculative))
+        et.ingest(batch)                 # one chunk spanning 60 ticks
+        et.flush(t_end=60)
+        got = et.results()
+        assert et.metrics.expired == 0, speculative
+        for k in want:
+            assert vals_equal(got[k], want[k]), (speculative, k)
+
+
+def test_whole_stream_as_one_chunk_keeps_producer_tie_order():
+    """A wire chunk fully covering a pane must still order duplicate
+    timestamps by producer seq, not arrival — burst segmentation (and hence
+    counts) depends on it."""
+    wl = _wl(with_aggs=True)
+    batch = _stream(n=200, t_max=40, seed=13)     # heavy timestamp ties
+    want = HamletRuntime(wl).run(batch, t_end=40)
+    ds = apply_disorder(batch, DisorderConfig(fraction=0.4, max_skew=9,
+                                              seed=14))
+    for chunk in (len(batch), 77):
+        et = EventTimeRuntime(wl, EventTimeConfig(skew=2))
+        got = et.run_disordered(ds.base, ds.order, chunk=chunk, t_end=40)
+        for k in want:
+            assert got[k] == want[k], (chunk, k)
+
+
+def test_flush_t_end_truncates_and_extends():
+    wl = _wl(with_not=False)
+    batch = _stream(n=120, t_max=40, seed=12, groups=1)
+    # truncation: in baseline mode nothing was emitted pre-flush (a huge
+    # skew keeps every pane unsealed), so flush(t_end=20) bounds emission
+    et = EventTimeRuntime(wl, EventTimeConfig(skew=100, speculative=False))
+    et.ingest(batch)
+    et.flush(t_end=20)
+    want = HamletRuntime(wl).run(batch.time_slice(0, 20), t_end=20)
+    got = et.results()
+    assert set(got) == set(want)
+    for k in want:
+        assert got[k] == want[k], k
+    # extension over an empty tail emits the remaining (partly empty) windows
+    et2 = EventTimeRuntime(wl, EventTimeConfig(skew=0))
+    et2.ingest(batch.time_slice(0, 20))
+    et2.flush(t_end=40)
+    want2 = HamletRuntime(wl).run(batch.time_slice(0, 20), t_end=40)
+    got2 = et2.results()
+    assert set(got2) == set(want2)
+    for k in want2:
+        assert got2[k] == want2[k], k
+
+
+def test_straggler_into_unemitted_window_absorbed_despite_horizon():
+    """A straggler behind the watermark-minus-horizon line whose pane is
+    still live (its windows unemitted) must be absorbed, not expired —
+    expiry tracks pane retirement, not raw watermark lag."""
+    wl = Workload(SCHEMA, [Query("q", Seq(A, Kleene(B)), within=60,
+                                 slide=60)])
+    et = EventTimeRuntime(wl, EventTimeConfig(skew=0, lateness_horizon=5))
+    et.ingest(EventBatch(SCHEMA, np.array([0, 1], np.int32),
+                         np.array([10, 30], np.int64), None))
+    # t=20 is 10 behind the watermark (> horizon) but window [0,60) is
+    # open and its pane retained
+    et.ingest(EventBatch(SCHEMA, np.array([1], np.int32),
+                         np.array([20], np.int64), None))
+    assert et.metrics.expired == 0
+    et.flush(t_end=60)
+    truth = HamletRuntime(wl).run(
+        EventBatch(SCHEMA, np.array([0, 1, 1], np.int32),
+                   np.array([10, 20, 30], np.int64), None), t_end=60)
+    got = et.results()
+    for k in truth:
+        assert got[k] == truth[k], k
+
+
+def test_group_heartbeat_unblocks_baseline_emission():
+    wl = _wl(with_not=False)
+    cfg = EventTimeConfig(watermark="group_heartbeat", skew=0,
+                          speculative=False)
+    et = EventTimeRuntime(wl, cfg)
+    b = EventBatch(SCHEMA, np.array([1, 1], np.int32),
+                   np.array([3, 25], np.int64), None,
+                   np.array([0, 1], np.int64))
+    assert et.ingest(b) == []            # group 0 holds the watermark at 3
+    recs = et.heartbeat(0, 25)
+    assert any(r.kind == "emit" for r in recs)
+
+
+# ----------------------------------------------------- differential sweeps
+
+
+def _differential(model, fraction, seed, *, speculative=True, policy=None,
+                  n=180, t_max=40, groups=2, with_aggs=True):
+    wl = _wl(with_aggs=with_aggs)
+    batch = _stream(n=n, t_max=t_max, seed=seed, groups=groups)
+    want = HamletRuntime(wl, policy=policy).run(batch, t_end=t_max)
+    ds = apply_disorder(batch, DisorderConfig(model=model, fraction=fraction,
+                                              max_skew=12, seed=seed + 100))
+    skew = 2 if speculative else ds.max_lateness()
+    et = EventTimeRuntime(wl, EventTimeConfig(skew=skew,
+                                              speculative=speculative),
+                          policy=policy)
+    got = et.run_disordered(ds.base, ds.order, chunk=13, t_end=t_max)
+    assert set(got) == set(want)
+    for k in want:
+        assert got[k] == want[k], (k, want[k], got[k])
+    return et
+
+
+def test_differential_bounded_skew_is_bitwise_exact():
+    """The acceptance property: any disordered stream within the horizon
+    yields final post-revision aggregates bitwise identical to the plain
+    runtime on the time-sorted stream."""
+    et = _differential("bounded_skew", 0.3, seed=3)
+    assert et.metrics.amendments > 0     # the revision path really ran
+
+
+def test_differential_buffer_baseline_exact():
+    _differential("bounded_skew", 0.3, seed=4, speculative=False)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("model", ["bounded_skew", "stragglers",
+                                   "adversarial_tail"])
+@pytest.mark.parametrize("seed", range(4))
+def test_differential_sweep(model, seed):
+    _differential(model, 0.25, seed=seed)
+
+
+@pytest.mark.slow
+def test_differential_across_policies():
+    from repro.core.optimizer import AlwaysShare, NeverShare
+
+    for policy in (AlwaysShare(), NeverShare(), None):
+        _differential("stragglers", 0.3, seed=9, policy=policy)
+
+
+@pytest.mark.slow
+def test_differential_percentile_watermark():
+    wl = _wl(with_aggs=True)
+    batch = _stream(n=180, t_max=40, seed=5)
+    want = HamletRuntime(wl).run(batch, t_end=40)
+    ds = apply_disorder(batch, DisorderConfig(fraction=0.3, max_skew=10,
+                                              seed=6))
+    et = EventTimeRuntime(wl, EventTimeConfig(watermark="percentile",
+                                              percentile=90.0))
+    got = et.run_disordered(ds.base, ds.order, chunk=13, t_end=40)
+    for k in want:
+        assert got[k] == want[k], k
+
+
+# ------------------------------------------------------------ service mode
+
+
+def test_service_eventtime_revises_to_exact_results():
+    qs = [Query("q1", Seq(A, Kleene(B)), within=10, slide=5),
+          Query("q2", Kleene(B), within=10, slide=10)]
+    batch = _stream(n=200, t_max=60, seed=7)
+    ref = HamletService(SCHEMA, qs)
+    for i in range(0, len(batch), 40):
+        ref.feed(batch.select(np.arange(i, min(i + 40, len(batch)))))
+    ref.close()
+
+    ds = apply_disorder(batch, DisorderConfig(fraction=0.4, max_skew=14,
+                                              seed=8))
+    svc = HamletService(SCHEMA, qs, eventtime=EventTimeConfig(skew=2))
+    for ch in ds.chunks(7):
+        svc.feed(ch)
+    svc.close()
+    assert len(svc.revisions) > 0        # stragglers crossed epoch emissions
+    assert svc.expired_late == 0
+    assert set(svc.results) == set(ref.results)
+    for k, v in ref.results.items():
+        assert svc.results[k] == v, k
+    # the channel is a changelog: retracts quote the superseded value
+    for r in svc.revisions:
+        assert r.kind in ("emit", "retract", "amend")
+
+
+def test_service_honours_horizon_deeper_than_window():
+    """A configured lateness horizon larger than max(within) must be
+    honoured (retention widens to match), not silently clamped."""
+    qs = [Query("q1", Kleene(B), within=10, slide=10)]
+    svc = HamletService(SCHEMA, qs,
+                        eventtime=EventTimeConfig(skew=0,
+                                                  lateness_horizon=50))
+    # in-order burst to t=60 seals and emits windows [0,10) .. [50,60)
+    n = 60
+    svc.feed(EventBatch(SCHEMA, np.ones(n, np.int32),
+                        np.arange(n, dtype=np.int64), None))
+    svc.feed(EventBatch(SCHEMA, np.array([1], np.int32),
+                        np.array([70], np.int64), None))
+    assert ("q1", 0, 20) in svc.results
+    before = svc.results[("q1", 0, 20)]["COUNT(*)"]
+    # straggler 40+ ticks behind the emitted frontier: inside the 50-tick
+    # horizon, so it must be revised in, not expired
+    recs = svc.revise(EventBatch(SCHEMA, np.array([1], np.int32),
+                                 np.array([25], np.int64), None))
+    assert svc.expired_late == 0
+    assert any(r.kind == "amend" and r.w0 == 20 for r in recs)
+    assert svc.results[("q1", 0, 20)]["COUNT(*)"] > before
+
+
+def test_service_revision_does_not_resurrect_late_added_queries():
+    """revise() replays the *current* workload over old history; windows of
+    a query added mid-stream that closed before it existed must not appear,
+    and untouched groups must not gain spurious emissions."""
+    qs = [Query("q1", Kleene(B), within=10, slide=10)]
+    svc = HamletService(SCHEMA, qs, eventtime=EventTimeConfig(skew=0))
+    n = 40
+    svc.feed(EventBatch(SCHEMA, np.ones(n, np.int32),
+                        np.arange(n, dtype=np.int64), None,
+                        np.arange(n, dtype=np.int64) % 2))
+    svc.add_query(Query("qnew", Kleene(B), within=10, slide=10))
+    svc.feed(EventBatch(SCHEMA, np.ones(10, np.int32),
+                        np.arange(40, 50, dtype=np.int64), None))
+    t_done = svc._t_done
+    # straggler for group 0 only, landing in window [20, 30)
+    recs = svc.revise(EventBatch(SCHEMA, np.array([1], np.int32),
+                                 np.array([25], np.int64), None))
+    assert recs, "group-0 window [20,30) must be amended"
+    for r in recs:
+        assert r.w0 == 20 and r.group == 0
+        # qnew joined at t_done >= 40: no window closing <= 40 may surface
+        assert not (r.query == "qnew" and r.w0 + 10 <= t_done)
+    from repro.overload import OverloadConfig
+
+    qs = [Query("q1", Seq(A, Kleene(B)), within=10, slide=10)]
+    batch = _stream(n=150, t_max=60, seed=9)
+    ds = apply_disorder(batch, DisorderConfig(model="adversarial_tail",
+                                              fraction=0.3, seed=10,
+                                              tail_scale=25.0))
+    svc = HamletService(
+        SCHEMA, qs,
+        eventtime=EventTimeConfig(skew=0, lateness_horizon=5),
+        overload=OverloadConfig(shed_policy="benefit_weighted",
+                                fixed_shed=0.0))
+    for ch in ds.chunks(9):
+        svc.feed(ch)
+    svc.close()
+    assert svc.expired_late > 0
+    assert svc.overload.accountant.late_events == svc.expired_late

@@ -214,6 +214,56 @@ def test_ingress_queue_poll_preserves_time_order():
     assert (np.diff(rest.time) >= 0).all()
 
 
+def test_ingress_queue_guards_out_of_order_offers():
+    """Producers feeding batches out of global order must not corrupt the
+    poll split: the buffer detects the disorder, re-sorts, and still hands
+    out every buffered event below the boundary in time order."""
+    q = IngressQueue(SCHEMA, capacity=1000)
+    b = _stream(n=60, t_max=30, seed=18)
+    q.offer(b.time_slice(15, 30))
+    q.offer(b.time_slice(0, 15))          # behind the buffered tail
+    out = q.poll_until(12)
+    assert (out.time < 12).all()
+    assert (np.diff(out.time) >= 0).all()
+    assert len(out) == int(np.sum(b.time < 12))
+    assert q.straddled_late == 0          # nothing behind a poll yet
+
+
+def test_ingress_queue_counts_poll_frontier_straddles():
+    q = IngressQueue(SCHEMA, capacity=1000)
+    b = _stream(n=60, t_max=30, seed=19)
+    q.offer(b.time_slice(0, 20))
+    q.poll_until(20)
+    n_old = int(np.sum(b.time < 20))
+    q.offer(b)                            # every event < 20 straddles
+    assert q.straddled_late == n_old
+    out = q.poll_until(40)
+    assert len(out) == len(b)             # still delivered, time-sorted
+    assert (np.diff(out.time) >= 0).all()
+
+
+def test_runtime_routes_stale_arrivals_to_accountant():
+    """The pane loop cannot fold events behind its frontier back in; they
+    must be charged as late shed events and withdraw the certificates."""
+    wl = _wl()
+    batch = _stream(n=120, t_max=40, seed=20)
+    ort = OverloadRuntime(wl, OverloadConfig(shed_policy="none"))
+    ort.offer(batch.time_slice(0, 20))
+    for _ in range(4):
+        ort.step_pane()                   # frontier now t=20
+    ort.offer(batch.time_slice(5, 12))    # a retried producer re-sends
+    ort.offer(batch.time_slice(20, 40))
+    for _ in range(4):
+        ort.step_pane()
+    n_stale = len(batch.time_slice(5, 12))
+    assert ort.queue.straddled_late == n_stale
+    assert ort.accountant.late_events == n_stale
+    assert sum(p.late for p in ort.metrics.panes) == n_stale
+    # a window covered by a stale Kleene drop loses its tight bound
+    rep = ort.accountant.report()
+    assert rep["q2"].shed_kleene > 0
+
+
 # -------------------------------------------------------------------- runtime
 
 

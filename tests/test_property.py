@@ -89,6 +89,114 @@ def test_appending_b_events_monotone(evs, extra_v):
         assert r2[k]["COUNT(*)"] >= r1[k]["COUNT(*)"]
 
 
+# ---------------------------------------------------------------------------
+# pane-edge semantics of EventBatch windows (t0/t1 boundaries, dup times)
+# ---------------------------------------------------------------------------
+
+timed_streams = st.lists(
+    st.tuples(st.integers(0, 2), st.integers(0, 9)), min_size=0, max_size=30)
+
+
+def _timed_batch(evs):
+    """Batch with *duplicate-heavy* timestamps (second tuple slot)."""
+    n = len(evs)
+    types = np.array([t for t, _ in evs], dtype=np.int32)
+    times = np.sort(np.array([tt for _, tt in evs], dtype=np.int64))
+    return EventBatch(SCHEMA, types, times, None)
+
+
+@settings(max_examples=60, deadline=None)
+@given(timed_streams, st.integers(0, 10), st.integers(0, 10))
+def test_time_slice_boundary_semantics(evs, t0, t1):
+    """[t0, t1): the left edge is inclusive, the right exclusive, and every
+    duplicate of a boundary timestamp is kept / dropped together."""
+    b = _timed_batch(evs)
+    sl = b.time_slice(t0, t1)
+    want = np.sum((b.time >= t0) & (b.time < t1))
+    assert len(sl) == want
+    if len(sl):
+        assert sl.time.min() >= t0 and sl.time.max() < t1
+
+
+@settings(max_examples=40, deadline=None)
+@given(timed_streams, st.integers(1, 5))
+def test_split_panes_partitions_exactly(evs, pane):
+    """Panes tile [0, t_end) without loss or overlap, duplicate timestamps
+    never straddle a pane edge, and empty panes appear for gaps."""
+    from repro.core.events import split_panes
+
+    b = _timed_batch(evs)
+    t_end = ((9 + pane) // pane) * pane
+    panes = list(split_panes(b, pane, 0, t_end))
+    assert [t0 for t0, _ in panes] == list(range(0, t_end, pane))
+    assert sum(len(p) for _, p in panes) == len(b)
+    for t0, p in panes:
+        if len(p):
+            assert p.time.min() >= t0 and p.time.max() < t0 + pane
+    recat = EventBatch.concat([p for _, p in panes])
+    assert (recat.time == b.time).all()
+    assert (recat.type_id == b.type_id).all()
+
+
+@settings(max_examples=40, deadline=None)
+@given(timed_streams)
+def test_from_unsorted_is_stable_inverse(evs):
+    """from_unsorted on a permuted batch with provenance recovers the batch
+    exactly under merge-by-(time, seq) — ties included."""
+    b = _timed_batch(evs)
+    base = EventBatch(SCHEMA, b.type_id, b.time, b.attrs, b.group,
+                      seq=np.arange(len(b), dtype=np.int64))
+    rng = np.random.default_rng(len(evs))
+    perm = rng.permutation(len(base))
+    re = EventBatch.from_unsorted(SCHEMA, base.type_id[perm],
+                                  base.time[perm], base.attrs[perm],
+                                  base.group[perm], seq=perm)
+    merged = EventBatch.merge([re])
+    assert (merged.time == base.time).all()
+    assert (merged.seq == base.seq).all()
+    assert (merged.type_id == base.type_id).all()
+
+
+# ---------------------------------------------------------------------------
+# watermark-policy monotonicity
+# ---------------------------------------------------------------------------
+
+arrival_chunks = st.lists(
+    st.lists(st.tuples(st.integers(0, 200), st.integers(0, 3)),
+             min_size=0, max_size=8),
+    min_size=1, max_size=12)
+
+
+@settings(max_examples=60, deadline=None)
+@given(arrival_chunks, st.integers(0, 3))
+def test_watermark_policies_are_monotone(chunks, which):
+    """No policy may ever regress its watermark, whatever arrival order,
+    group mix, or heartbeat interleaving it observes."""
+    from repro.eventtime.watermark import (BoundedSkew, GroupHeartbeat,
+                                           PercentileAdaptive)
+
+    policy = [BoundedSkew(skew=3),
+              PercentileAdaptive(percentile=90, window=16),
+              PercentileAdaptive(percentile=100, window=4, max_skew=7),
+              GroupHeartbeat(skew=1, idle_timeout=50)][which]
+    last = policy.watermark()
+    for i, chunk in enumerate(chunks):
+        if chunk:
+            times = np.array([t for t, _ in chunk], dtype=np.int64)
+            groups = np.array([g for _, g in chunk], dtype=np.int64)
+            policy.observe(times, groups)
+        else:
+            policy.heartbeat(i % 4, 50 * i)
+        wm = policy.watermark()
+        assert wm >= last, (which, i, wm, last)
+        last = wm
+    if any(chunks):
+        all_t = [t for c in chunks for t, _ in c]
+        if all_t:
+            # a watermark never runs ahead of what was promised safe
+            assert last <= max(max(all_t), 50 * (len(chunks) - 1))
+
+
 @settings(max_examples=20, deadline=None)
 @given(streams)
 def test_group_isolation(evs):

@@ -19,7 +19,7 @@ def main() -> None:
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None,
                     help="fig9|fig11|fig12|overload|batched|disorder|"
-                         "kernel|roofline")
+                         "bench_e2e|kernel|roofline")
     args = ap.parse_args()
     quick = not args.full
 
@@ -54,6 +54,10 @@ def main() -> None:
         from . import fig_disorder
 
         sections.append(("fig_disorder", fig_disorder.main(quick=quick)))
+    if args.only in (None, "bench_e2e"):
+        from . import bench_e2e
+
+        sections.append(("bench_e2e", bench_e2e.main(quick=quick)))
     if args.only in (None, "roofline"):
         from . import roofline
 

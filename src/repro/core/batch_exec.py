@@ -21,6 +21,20 @@ the differential tests assert the two modes agree bitwise.
 bucket's batch size to a list of slices (e.g.
 ``distributed.sharding.pane_bucket_shards``); each sub-batch is launched
 separately so buckets can be split across devices/hosts.
+
+Residency rules (cross-pane micro-batching support):
+
+* **numpy backend** — the stacked *input* staging arrays are reused across
+  flushes (one buffer per bucket shape, grown to the high-water batch size),
+  so a steady-state stream stops allocating per pane.  Outputs are always
+  freshly allocated: job results are views into them and must survive later
+  flushes.
+* **jax/pallas backends** — every bucket of a flush is launched before any
+  result is pulled back; the whole flush then syncs with **one**
+  ``ops.device_get_all`` call, keeping bucket outputs device-resident for
+  the duration of the flush instead of round-tripping through
+  ``np.asarray`` per bucket.  Host staging is *not* reused here: device
+  transfers may be asynchronous, so inputs get fresh buffers.
 """
 
 from __future__ import annotations
@@ -59,8 +73,13 @@ class PaneBatchExecutor:
         self.batched = batched
         self.shard_slices = shard_slices
         self._pending: list[PropagateJob] = []
+        # reusable host staging for stacked inputs, keyed by (kind, b, d,
+        # dtype) and grown to the high-water bucket size (numpy backend only;
+        # see the module docstring's residency rules)
+        self._staging: dict[tuple, np.ndarray] = {}
         self.jobs = 0
         self.launches = 0
+        self.flushes = 0
 
     def submit(self, base: np.ndarray,
                mask: np.ndarray | None = None) -> PropagateJob:
@@ -75,6 +94,7 @@ class PaneBatchExecutor:
         jobs, self._pending = self._pending, []
         if not jobs:
             return
+        self.flushes += 1
         if not self.batched:
             for j in jobs:
                 self.launches += 1
@@ -94,51 +114,86 @@ class PaneBatchExecutor:
                 b = j.base.shape[0]
                 j.mask = np.tril(np.ones((b, b)), k=-1)
                 masked.append(j)
-        self._flush_dense(dense)
-        self._flush_masked(masked)
+        # launch every bucket, then resolve the whole flush with one host
+        # sync (device backends stay device-resident until here)
+        launched = self._launch_dense(dense) + self._launch_masked(masked)
+        outs = ops.device_get_all([o for _, _, _, o in launched])
+        full: dict[int, np.ndarray] = {}
+        for (bucket, shape, sl, _), host in zip(launched, outs):
+            arr = full.get(id(bucket))
+            if arr is None:
+                arr = full[id(bucket)] = np.empty(shape, dtype=host.dtype)
+            arr[sl] = host
+        done: set[int] = set()
+        for bucket, _, _, _ in launched:
+            if id(bucket) in done:
+                continue
+            done.add(id(bucket))
+            arr = full[id(bucket)]
+            for i, j in enumerate(bucket):
+                j.result = arr[i, : j.base.shape[0]]
 
     def _slices(self, nb: int) -> list[slice]:
         if self.shard_slices is None:
             return [slice(0, nb)]
         return list(self.shard_slices(nb))
 
-    def _flush_dense(self, jobs: list[PropagateJob]) -> None:
+    def _stage(self, kind: str, nb: int, item_shape: tuple,
+               dtype) -> np.ndarray:
+        """A reusable stacked staging buffer (numpy backend only)."""
+        if self.backend != "np":
+            return np.empty((nb,) + item_shape, dtype=dtype)
+        key = (kind,) + item_shape + (np.dtype(dtype),)
+        buf = self._staging.get(key)
+        if buf is None or buf.shape[0] < nb:
+            buf = np.empty((nb,) + item_shape, dtype=dtype)
+            self._staging[key] = buf
+        return buf[:nb]
+
+    def _launch_dense(self, jobs: list[PropagateJob]) -> list:
         buckets: dict[tuple, list[PropagateJob]] = {}
         for j in jobs:
             b, d = j.base.shape
             buckets.setdefault((_next_pow2(b), d, j.base.dtype), []).append(j)
+        launched = []
         for (bp, d, dtype), bucket in buckets.items():
-            stacked = np.zeros((len(bucket), bp, d), dtype=dtype)
+            nb = len(bucket)
+            stacked = self._stage("dense", nb, (bp, d), dtype)
             for i, j in enumerate(bucket):
-                stacked[i, : j.base.shape[0]] = j.base
-            out = np.empty_like(stacked)
-            for sl in self._slices(len(bucket)):
+                bj = j.base.shape[0]
+                stacked[i, :bj] = j.base
+                stacked[i, bj:] = 0.0
+            for sl in self._slices(nb):
                 self.launches += 1
-                out[sl] = np.asarray(ops.propagate_dense_batched(
-                    stacked[sl], backend=self.backend))
-            for i, j in enumerate(bucket):
-                j.result = out[i, : j.base.shape[0]]
+                launched.append((bucket, (nb, bp, d), sl,
+                                 ops.propagate_dense_batched(
+                                     stacked[sl], backend=self.backend)))
+        return launched
 
-    def _flush_masked(self, jobs: list[PropagateJob]) -> None:
+    def _launch_masked(self, jobs: list[PropagateJob]) -> list:
         from ..kernels import ref
 
         buckets: dict[tuple, list[PropagateJob]] = {}
         for j in jobs:
             buckets.setdefault(j.base.shape + (j.base.dtype,), []).append(j)
-        for (b, d, _dtype), bucket in buckets.items():
-            base = np.stack([j.base for j in bucket])
-            mask = np.stack([j.mask for j in bucket])
-            out = np.empty_like(base)
+        launched = []
+        for (b, d, dtype), bucket in buckets.items():
+            nb = len(bucket)
+            base = self._stage("mbase", nb, (b, d), dtype)
+            mask = self._stage("mmask", nb, (b, b), bucket[0].mask.dtype)
+            for i, j in enumerate(bucket):
+                base[i] = j.base
+                mask[i] = j.mask
             small = self.backend == "np" and b < _FAST_MIN_B
-            for sl in self._slices(len(bucket)):
+            for sl in self._slices(nb):
                 self.launches += 1
                 if small:
                     # stacked row-loop oracle: b row steps for the whole
                     # bucket, each slice bitwise equal to the per-burst call
-                    out[sl] = ref.numpy_prefix_propagate_batched(base[sl],
-                                                                 mask[sl])
+                    out = ref.numpy_prefix_propagate_batched(base[sl],
+                                                             mask[sl])
                 else:
-                    out[sl] = np.asarray(ops.propagate_batched(
-                        base[sl], mask[sl], backend=self.backend))
-            for i, j in enumerate(bucket):
-                j.result = out[i]
+                    out = ops.propagate_batched(base[sl], mask[sl],
+                                                backend=self.backend)
+                launched.append((bucket, (nb, b, d), sl, out))
+        return launched

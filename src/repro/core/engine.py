@@ -16,29 +16,51 @@ over a small local snapshot basis:
     idx nu+1..     z               event-level snapshots for divergent events
                                    (Def. 9: predicate differences)
 
-Plan-then-execute pipeline
---------------------------
-A pane is processed in three phases rather than one kernel launch per burst:
+Four-phase pipeline (plan → execute → finalize → fold)
+------------------------------------------------------
+A pane is processed in three engine phases plus the runtime's window fold:
 
-1. **plan** — every burst is segmented, the sharing policy decides its
-   groups, and each group's masks/adjacency/injection rows are captured as
-   propagation *jobs*.  Nothing here depends on the running aggregates, so
-   the whole pane plans up front.
+1. **plan** — the pane is run-length segmented once, per-(query, type)
+   predicates are evaluated as *stacked* vector passes over every event of
+   that type in the pane (all bursts at once), divergence rows come from one
+   broadcast comparison, the sharing policy decides each burst's groups, and
+   each group's masks/adjacency/injection rows are captured as propagation
+   *jobs*.  Nothing here depends on the running aggregates, so the whole
+   pane plans up front.  The structural output of this phase is memoized in
+   a :class:`~repro.core.plan_cache.PanePlanCache`: the cache key is the
+   pane signature — type run-length encoding, packed per-burst predicate /
+   edge-mask bits, negation hits, and the optimizer's decided groups — so a
+   repeated pane shape skips group construction, adjacency/injection-row
+   building and the snapshot column layout entirely and only swaps in fresh
+   attribute data.  The sharing decision is recomputed every pane and lives
+   in the *key*, so plan reuse never freezes the share/no-share choice.
 2. **execute** — jobs go to a :class:`~repro.core.batch_exec
    .PaneBatchExecutor`, which buckets them by size (ragged edges padded
    where exact) and solves each bucket with **one** batched launch of the
    masked prefix-propagation primitive (``repro.kernels``) or the dense
    closed form.  Two rounds: count-unit jobs first, then the sum-unit jobs
-   that inject their coefficients.
+   that inject their coefficients.  A :class:`PaneMicroBatcher` extends the
+   backlog *across panes*: up to ``micro_batch`` planned panes flush
+   together, one launch per size bucket per K panes, with finalize deferred
+   per pane.
 3. **finalize** — a cheap sequential replay in stream order applies negation
    gates, fills event-level snapshot functionals, and folds coefficient
    column-sums (one stacked einsum per graphlet) into per-query *state
    functionals* (linear maps over the pane-entry state channels), so the
    pane yields one transfer matrix ``M[q]`` per query.
+4. **fold** — sliding-window instances advance with a single batched [C×C]
+   matmul per pane — overlapping windows share all per-event work (the
+   paper's pane sharing, Sec. 3.1).  Under micro-batching the drained panes
+   fold as one stacked matmul chain, in stream order, so the fold stays
+   bitwise identical to per-pane execution.
 
-Sliding-window instances then advance with a single batched [C×C] matmul per
-pane — overlapping windows share all per-event work (the paper's pane
-sharing, Sec. 3.1).
+``RunStats`` carries wall-clock timers for all four phases (``plan_s`` /
+``execute_s`` / ``finalize_s`` / ``fold_s``) and the plan-cache hit/miss
+counters, so benchmarks read the phase split straight from the engine.
+
+Host/device residency: on the numpy backend the executor reuses host staging
+buffers across flushes; on the jax/pallas backends bucket outputs stay
+device-resident until **one** host fetch per flush (see ``batch_exec.py``).
 
 Trend counts grow like 2^g and overflow fixed-width types for realistic panes
 (the paper is silent on this); the engine computes in float64 by default.
@@ -46,18 +68,20 @@ Trend counts grow like 2^g and overflow fixed-width types for realistic panes
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
+from time import perf_counter
 
 import numpy as np
 
 from ..kernels.ops import DENSE_B_MAX
 from .batch_exec import PaneBatchExecutor, PropagateJob
 from .events import EventBatch, StreamSchema, pane_size_for, split_panes
+from .plan_cache import PanePlan, PanePlanCache
 from .query import AtomicQuery, Workload
 from .template import QueryTemplate, build_template
 
-__all__ = ["ComponentContext", "PaneProcessor", "HamletRuntime", "RunStats",
-           "fold_panes", "vals_equal"]
+__all__ = ["ComponentContext", "PaneProcessor", "PaneMicroBatcher",
+           "HamletRuntime", "RunStats", "fold_panes", "vals_equal"]
 
 
 # --------------------------------------------------------------------------
@@ -152,6 +176,21 @@ class ComponentContext:
             el: [qi for qi in range(self.k) if self.kleene_flag[qi, el]]
             for el in range(t)
         }
+        # per-local-type query sets, hoisted out of the per-burst plan walk
+        self.q_pos = {el: [qi for qi in range(self.k)
+                           if self.match_flag[qi, el]] for el in range(t)}
+        self.kle_pos = {el: [qi for qi in self.q_pos[el]
+                             if self.kleene_flag[qi, el]] for el in range(t)}
+        # local types with at least one edge-predicated query (the per-burst
+        # edge-mask walk is skipped entirely for the rest)
+        self.edge_pred_els = {
+            el: any((qi, self.pos_type_ids[el]) in self._edge_preds
+                    for qi in self.q_pos[el]) for el in range(t)}
+        # sum units resolved to (unit idx, source type id, attr column | None)
+        self.sum_unit_cols = [
+            (ui, schema.type_id(u[1]),
+             None if u[2] is None else schema.attr_col(u[2]))
+            for ui, u in enumerate(self.units) if u[0] == "sum"]
         # which queries need the min/max side path
         self.minmax_queries = [qi for qi, q in enumerate(self.queries)
                                if any(u[0] == "minmax" for u in q.units)]
@@ -195,10 +234,28 @@ class RunStats:
     decisions: int = 0
     panes: int = 0
     windows_emitted: int = 0
+    # four-phase wall-clock split (seconds) — the engine times itself so
+    # benchmark phase breakdowns need no external profiler
+    plan_s: float = 0.0
+    execute_s: float = 0.0
+    finalize_s: float = 0.0
+    fold_s: float = 0.0
+    # plan-cache traffic (counted only when a cache is attached)
+    plan_cache_hits: int = 0
+    plan_cache_misses: int = 0
 
     def merge(self, o: "RunStats") -> None:
         for f in self.__dataclass_fields__:
             setattr(self, f, getattr(self, f) + getattr(o, f))
+
+    def phase_split(self) -> dict[str, float]:
+        """Fractions of measured engine time per phase (sums to ~1)."""
+        total = self.plan_s + self.execute_s + self.finalize_s + self.fold_s
+        if total <= 0:
+            return {"plan": 0.0, "execute": 0.0, "finalize": 0.0, "fold": 0.0}
+        return {"plan": self.plan_s / total, "execute": self.execute_s / total,
+                "finalize": self.finalize_s / total,
+                "fold": self.fold_s / total}
 
 
 # --------------------------------------------------------------------------
@@ -239,19 +296,30 @@ class _GroupPlan:
     em: np.ndarray | None         # in-burst adjacency (None when dense)
     start_q0: bool
     sum_units: list               # [(ui, injection values | None)]
-    cjob: PropagateJob | None = None
-    sjobs: dict = field(default_factory=dict)   # ui -> PropagateJob
+    bi: int = -1                  # index of the source burst within the pane
+    rows: list | None = None      # member rows within the burst's mvec stack
+    base_c: np.ndarray | None = None  # count-round injection rows (cacheable)
+    trivial: bool = False         # non-Kleene: zero adjacency, result == base
+
+    # NOTE: job handles live on the _PendingPane (parallel ``jobs`` list),
+    # never on the plan — group plans are immutable after construction so a
+    # cached pane shape can be reused zero-copy across panes and micro-batch
+    # members.
 
 
 class PaneProcessor:
     def __init__(self, ctx: ComponentContext, policy, backend: str = "np",
-                 max_local_basis: int = 512, executor=None):
+                 max_local_basis: int = 512, executor=None, plan_cache=None):
         self.ctx = ctx
         self.policy = policy
         self.backend = backend
         self.max_local_basis = max_local_basis
         self.executor = (executor if executor is not None
                          else PaneBatchExecutor(backend=backend))
+        self.plan_cache: PanePlanCache | None = plan_cache
+        # static sharing policies decide per (type, candidate set) only:
+        # their group layout is memoized per local type
+        self._static_groups: dict[int, tuple] = {}
 
     # -- burst segmentation (Def. 10) --
 
@@ -269,186 +337,360 @@ class PaneProcessor:
     def process(self, pane: EventBatch, stats: RunStats) -> np.ndarray:
         """Process one pane; returns per-query transfer matrices M [k, C, C].
 
-        Three phases: plan every burst's jobs, execute them as bucketed
-        batched launches, then replay the pane in stream order to fold
-        coefficients into the state functionals (see module docstring).
+        Single-pane convenience over the deferred phase API: plan the pane,
+        run both execute rounds through the shared executor, finalize.
+        Micro-batching callers drive the phases via :class:`PaneMicroBatcher`
+        instead.
         """
-        ctx = self.ctx
-        C = ctx.layout.size
-        k = ctx.k
-        nu = ctx.nu
-        t = len(ctx.pos_type_ids)
-
-        # state functionals over pane-entry channels
-        arow = np.zeros((k, nu, t, C))
-        if nu and t:
-            arow[:, np.arange(nu)[:, None], np.arange(t)[None, :],
-                 ctx.a_cols] = 1.0
-        rrow = np.zeros((k, nu, C))
-        if nu:
-            rrow[:, np.arange(nu), ctx.rp_cols] = 1.0
-        gaterow = np.zeros((k, C))
-        gaterow[:, ctx.layout.GATE] = 1.0
-
-        # counts saturate to inf past float64 range (documented overflow
-        # semantics) — keep the whole pipeline quiet about it
-        with np.errstate(over="ignore", invalid="ignore"):
-            return self._process_inner(pane, stats, arow, rrow, gaterow)
-
-    def _process_inner(self, pane, stats, arow, rrow, gaterow) -> np.ndarray:
-        ctx = self.ctx
-        C = ctx.layout.size
-        k = ctx.k
-        nu = ctx.nu
-        t = len(ctx.pos_type_ids)
-
-        # phase 1: plan
-        steps = self._plan_pane(pane, stats)
-
-        # phase 2: execute (two rounds — sum jobs inject count coefficients)
-        plans = [s for s in steps if isinstance(s, _GroupPlan)]
-        ex = self.executor
-        for p in plans:
-            p.cjob = ex.submit(self._count_base(p),
-                               None if p.dense else p.em)
-            stats.propagate_cells += p.b * p.B_local
-        ex.flush()
-        for p in plans:
-            for ui, vals in p.sum_units:
-                p.sjobs[ui] = ex.submit(self._sum_base(p, ui, vals),
-                                        None if p.dense else p.em)
-                stats.propagate_cells += p.b * p.B_local
-        ex.flush()
-
-        # phase 3: finalize in stream order
-        for s in steps:
-            if isinstance(s, _NegStep):
-                for qi, rule in s.hits:
-                    if rule.kind == "leading":
-                        gaterow[qi, :] = 0.0
-                    elif rule.kind == "trailing":
-                        rrow[qi, :, :] = 0.0
-                    else:
-                        arow[qi, :, rule.before_local, :] = 0.0
-            else:
-                self._finalize_group(s, arow, rrow, gaterow)
-
-        # assemble transfer matrices (vectorized over queries)
-        M = np.zeros((k, C, C))
-        M[:, ctx.layout.CONST, ctx.layout.CONST] = 1.0
-        M[:, ctx.layout.GATE, :] = gaterow
-        if nu and t:
-            M[:, ctx.a_cols.reshape(-1), :] = arow.reshape(k, nu * t, C)
-        if nu:
-            M[:, ctx.rp_cols, :] = rrow
-        return M
+        mb = PaneMicroBatcher(self.executor, k=1)
+        pend = mb.submit(self, pane, stats)
+        mb.drain()
+        return pend.finalize()
 
     # -- phase 1: plan --
 
+    def plan(self, pane: EventBatch, stats: RunStats) -> list:
+        """Phase 1: produce the pane's ordered step list (timed)."""
+        t0 = perf_counter()
+        # counts saturate to inf past float64 range (documented overflow
+        # semantics) — keep the whole pipeline quiet about it
+        with np.errstate(over="ignore", invalid="ignore"):
+            steps = self._plan_pane(pane, stats)
+        stats.plan_s += perf_counter() - t0
+        return steps
+
     def _plan_pane(self, pane: EventBatch, stats: RunStats) -> list:
         ctx = self.ctx
-        k = ctx.k
 
         keep = np.isin(pane.type_id, ctx.relevant_type_ids)
         ev = pane.select(np.nonzero(keep)[0])
         stats.events += len(ev)
         stats.panes += 1
 
-        steps: list = []
-        for type_id, sl in self._segment(ev.type_id):
-            attrs = ev.attrs[sl]
+        runs = self._segment(ev.type_id)
+        stats.bursts += len(runs)
+        if not runs:
+            return []
+
+        # stacked per-type predicate evaluation: one vectorized pass per
+        # (query, type) over *all* of the pane's events of that type, across
+        # every burst at once, instead of a Python predicate walk per burst.
+        # The transposed byte image of each stack doubles as the signature
+        # source: a burst's exact match bits are a contiguous slice of it.
+        mv_type: dict[int, np.ndarray] = {}
+        mv_bytes: dict[int, bytes] = {}
+        neg_type: dict[int, list] = {}
+        cache = self.plan_cache
+        present: list[int] = []
+        has_edge = False
+        for tid_arr in np.unique(ev.type_id):
+            tid = int(tid_arr)
+            present.append(tid)
+            idx = np.nonzero(ev.type_id == tid)[0]
+            attrs_t = ev.attrs[idx]
+            if tid in ctx.neg_rules:
+                neg_type[tid] = [(qi, rule, ctx.match_vec(qi, tid, attrs_t))
+                                 for qi, rule in ctx.neg_rules[tid]]
+            el = ctx.local.get(tid)
+            if el is not None and ctx.q_pos[el]:
+                if ctx.edge_pred_els[el]:
+                    has_edge = True
+                mv_type[tid] = np.stack([ctx.match_vec(qi, tid, attrs_t)
+                                         for qi in ctx.q_pos[el]])
+                if cache is not None:
+                    mv_bytes[tid] = np.ascontiguousarray(
+                        mv_type[tid].T).tobytes()
+
+        # sharing decisions that never read the divergence structure
+        # (AlwaysShare / NeverShare) skip the per-burst divergence pass
+        static_policy = getattr(self.policy, "decision_static", False)
+
+        # whole-pane fast signature: with a static policy, no negation types
+        # and no edge predicates in the pane, the structural plan is fully
+        # determined by the run-length encoding plus the stacked match bits
+        # — the per-burst signature walk is skipped entirely
+        fast = (cache is not None and static_policy and not neg_type
+                and not has_edge)
+        key: tuple | None = None
+        if fast:
+            key = ("F", self.max_local_basis,
+                   tuple((tid, sl.stop - sl.start) for tid, sl in runs),
+                   tuple(mv_bytes[t] for t in present if t in mv_bytes))
+            plan = cache.get(key)
+            if plan is not None:
+                stats.plan_cache_hits += 1
+                plan.apply_stats(stats)
+                return self._instantiate_fast(plan, runs, ev, mv_type)
+            stats.plan_cache_misses += 1
+        dec0 = stats.decisions
+
+        # per-burst planning inputs + the exact pane signature.  The
+        # signature stores full discriminating bytes (mask-bit slices, the
+        # decided groups) — see core/plan_cache.py for why nothing is hashed
+        # lossily.
+        cursor: dict[int, int] = {}
+        plan_bursts: list = []
+        sig: list = [(self.max_local_basis,
+                      tuple((tid, sl.stop - sl.start) for tid, sl in runs))]
+        for tid, sl in runs:
             b = sl.stop - sl.start
-            stats.bursts += 1
+            c = cursor.get(tid, 0)
+            cursor[tid] = c + b
 
             # negative-type handling (Sec. 5): applies per query with a rule
-            hits = [(qi, rule) for qi, rule in ctx.neg_rules.get(type_id, [])
-                    if ctx.match_vec(qi, type_id, attrs).any()]
+            hits = None
+            if tid in neg_type:
+                hits = [(qi, rule) for qi, rule, m in neg_type[tid]
+                        if m[c:c + b].any()]
+                if not hits:
+                    hits = None
+
+            burst = None
+            sig_part: tuple | None = None
+            el = ctx.local.get(tid)
+            if el is not None and ctx.q_pos[el]:
+                q_pos = ctx.q_pos[el]
+                nq = len(q_pos)
+                attrs = ev.attrs[sl]
+                mvec = mv_type[tid][:, c:c + b]
+                if ctx.edge_pred_els[el]:
+                    epm = [ctx.edge_mask(qi, tid, attrs) for qi in q_pos]
+                    epm_sig = tuple(
+                        None if m is None else np.packbits(m).tobytes()
+                        for m in epm)
+                else:
+                    epm = [None] * nq
+                    epm_sig = None
+
+                # sharing decision (Sec. 4): candidates have E+ (Def. 4).
+                # Decided fresh on every pane — the benefit model tracks the
+                # running event count — and folded into the cache key below.
+                # Static policies (decision independent of the burst) reuse
+                # their memoized per-type group layout.
+                kle = ctx.kle_pos[el]
+                memo = (self._static_groups.get(el) if static_policy
+                        else None)
+                if memo is not None:
+                    groups, groups_sig = memo
+                    if len(kle) >= 2:
+                        stats.decisions += 1
+                else:
+                    groups = []
+                    if len(kle) >= 2:
+                        d_rows = (None if static_policy else
+                                  self._divergence_rows(q_pos, kle, el,
+                                                        mvec, epm))
+                        shared_sets = self.policy.decide(
+                            ctx=ctx, el=el, candidates=kle, d_rows=d_rows,
+                            b=b, n=stats.events, stats=stats)
+                        in_shared = set(qq for s in shared_sets for qq in s)
+                        groups.extend([s for s in shared_sets
+                                       if len(s) >= 2])
+                        groups.extend([[qi] for s in shared_sets
+                                       if len(s) == 1 for qi in s])
+                        groups.extend([[qi] for qi in kle
+                                       if qi not in in_shared])
+                    else:
+                        groups.extend([[qi] for qi in kle])
+                    groups.extend([[qi] for qi in q_pos if qi not in kle])
+                    groups_sig = tuple(map(tuple, groups))
+                    if static_policy:
+                        self._static_groups[el] = (groups, groups_sig)
+                burst = (tid, el, attrs, b, q_pos, mvec, epm, groups)
+                if cache is not None and not fast:
+                    sig_part = (mv_bytes[tid][c * nq:(c + b) * nq], epm_sig,
+                                groups_sig)
+
+            plan_bursts.append((hits, burst))
+            if cache is not None and not fast:
+                sig.append((
+                    tid,
+                    None if hits is None else tuple(qi for qi, _ in hits),
+                    sig_part))
+
+        if cache is not None and not fast:
+            key = tuple(sig)
+            plan = cache.get(key)
+            if plan is not None:
+                stats.plan_cache_hits += 1
+                plan.apply_stats(stats)
+                return self._instantiate(plan, plan_bursts)
+            stats.plan_cache_misses += 1
+        before = cache.snapshot_stats(stats) if cache is not None else None
+
+        steps = self._build_steps(plan_bursts, stats)
+
+        if cache is not None:
+            delta = cache.stat_delta(before, stats)
+            if fast:
+                # the fast hit skips the per-burst walk, so its sharing
+                # decisions replay via the stat delta too
+                delta["decisions"] = stats.decisions - dec0
+            zero_copy = (not ctx.sum_unit_cols and all(
+                isinstance(s, _NegStep) or len(s.div_rows) == 0
+                for s in steps))
+            cache.put(key, PanePlan(
+                steps=[self._strip(s) for s in steps],
+                stat_delta=delta, zero_copy=zero_copy))
+        return steps
+
+    def _build_steps(self, plan_bursts: list, stats: RunStats) -> list:
+        """Construct the structural step list (the cacheable part of phase 1:
+        group plans with divergence layout, adjacency, z columns, and
+        count-round injection rows)."""
+        steps: list = []
+        for bi, (hits, burst) in enumerate(plan_bursts):
             if hits:
                 steps.append(_NegStep(hits))
-
-            if type_id not in ctx.local:
+            if burst is None:
                 continue
-            el = ctx.local[type_id]
-            q_pos = [qi for qi in range(k) if ctx.match_flag[qi, el]]
-            if not q_pos:
-                continue
-
-            mvec = np.stack([ctx.match_vec(qi, type_id, attrs) for qi in q_pos])
-            epm = [ctx.edge_mask(qi, type_id, attrs) for qi in q_pos]
-
-            # sharing decision (Sec. 4): candidates are queries with E+ (Def. 4)
-            kle = [qi for qi in q_pos if ctx.kleene_flag[qi, el]]
-            groups: list[list[int]] = []
-            if len(kle) >= 2:
-                d_rows = self._divergence_rows(q_pos, kle, el, mvec, epm)
-                shared_sets = self.policy.decide(
-                    ctx=ctx, el=el, candidates=kle, d_rows=d_rows, b=b,
-                    n=stats.events, stats=stats)
-                in_shared = set(qq for s in shared_sets for qq in s)
-                groups.extend([s for s in shared_sets if len(s) >= 2])
-                groups.extend([[qi] for s in shared_sets if len(s) == 1 for qi in s])
-                groups.extend([[qi] for qi in kle if qi not in in_shared])
-            else:
-                groups.extend([[qi] for qi in kle])
-            groups.extend([[qi] for qi in q_pos if qi not in kle])
-
+            tid, el, attrs, b, q_pos, mvec, epm, groups = burst
+            qpos_index = {qi: i for i, qi in enumerate(q_pos)}
             for g in groups:
                 if len(g) >= 2:
                     stats.shared_bursts += 1
                     stats.shared_graphlets += 1
                 stats.graphlets += 1
-                self._plan_group(
-                    g, el, type_id, attrs, b,
-                    mvec[[q_pos.index(qi) for qi in g]],
-                    [epm[q_pos.index(qi)] for qi in g],
-                    steps, stats)
+                rows = [qpos_index[qi] for qi in g]
+                self._plan_group(g, el, tid, attrs, b, mvec[rows],
+                                 [epm[i] for i in rows], steps, stats, bi,
+                                 rows)
         return steps
+
+    @staticmethod
+    def _strip(step):
+        """Template form of a step for caching: drop per-pane data (attrs,
+        match vectors, edge masks, sum values, job handles); keep the
+        structural arrays, the count-round injection rows, and the member
+        row indices within the burst's stacked match matrix."""
+        if isinstance(step, _NegStep):
+            return step
+        return replace(step, attrs=None, mvec=None, epm=None, sum_units=())
+
+    def _instantiate(self, plan: PanePlan, plan_bursts: list) -> list:
+        """Rehydrate a cached plan against this pane's fresh data: swap in
+        the new attribute arrays, match vectors, edge masks and sum-unit
+        values; everything structural is reused as-is.  Copies bypass the
+        dataclass constructor — this runs per group per pane on the hit
+        path."""
+        if plan.zero_copy:
+            return plan.steps
+        steps: list = []
+        sum_units_cache: dict[int, list] = {}
+        for st in plan.steps:
+            if isinstance(st, _NegStep):
+                steps.append(st)
+                continue
+            _, burst = plan_bursts[st.bi]
+            tid, el, attrs, b, q_pos, mvec, epm, groups = burst
+            gp = object.__new__(_GroupPlan)
+            gp.__dict__.update(st.__dict__)
+            if len(st.div_rows):
+                # per-event snapshot fills read the fresh data; groups
+                # without divergence never touch attrs/mvec/epm in finalize
+                rows = st.rows
+                gp.attrs = attrs
+                gp.mvec = mvec[rows]
+                gp.epm = [epm[i] for i in rows]
+            su = sum_units_cache.get(st.bi)
+            if su is None:
+                su = sum_units_cache[st.bi] = self._sum_units_for(
+                    tid, attrs, b)
+            gp.sum_units = su
+            steps.append(gp)
+        return steps
+
+    def _instantiate_fast(self, plan: PanePlan, runs: list, ev: EventBatch,
+                          mv_type: dict) -> list:
+        """Rehydrate a fast-keyed plan (static policy, no negation, no edge
+        predicates in the pane).  Zero-copy when no step carries per-pane
+        data; otherwise only the data-bearing fields are rebuilt."""
+        if plan.zero_copy:
+            return plan.steps
+        cursor: dict[int, int] = {}
+        info: list[tuple] = []
+        for tid, sl in runs:
+            b = sl.stop - sl.start
+            c = cursor.get(tid, 0)
+            cursor[tid] = c + b
+            info.append((tid, sl, c, b))
+        steps: list = []
+        sum_units_cache: dict[int, list] = {}
+        for st in plan.steps:
+            tid, sl, c, b = info[st.bi]
+            gp = object.__new__(_GroupPlan)
+            gp.__dict__.update(st.__dict__)
+            if len(st.div_rows):
+                gp.attrs = ev.attrs[sl]
+                gp.mvec = mv_type[tid][:, c:c + b][st.rows]
+                gp.epm = [None] * len(st.rows)
+            su = sum_units_cache.get(st.bi)
+            if su is None:
+                su = sum_units_cache[st.bi] = self._sum_units_for(
+                    tid, ev.attrs[sl], b)
+            gp.sum_units = su
+            steps.append(gp)
+        return steps
+
+    def _sum_units_for(self, type_id: int, attrs: np.ndarray, b: int) -> list:
+        """Per-burst sum-unit injection values (fresh attribute data)."""
+        return [(ui, None if tid != type_id
+                 else (np.ones(b) if col is None else attrs[:, col]))
+                for ui, tid, col in self.ctx.sum_unit_cols]
 
     # -- divergence detection (per-event signature differences) --
 
     def _divergence_rows(self, q_pos, kle, el, mvec, epm) -> dict[int, np.ndarray]:
-        """Per-candidate boolean rows: events where q's signature differs from
-        the reference (first candidate).  Drives Thms 4.1/4.2."""
+        """Per-candidate boolean rows: events where q's signature differs
+        from the reference (first candidate).  Drives Thms 4.1/4.2.  One
+        broadcast comparison over the stacked match vectors; the (rare)
+        edge-mask term falls back to a per-candidate pass."""
         ctx = self.ctx
         ref = kle[0]
         ri = q_pos.index(ref)
         b = mvec.shape[1]
+        idx = np.array([q_pos.index(qi) for qi in kle])
+        D = mvec[idx] != mvec[ri]                       # [n_kle, b]
+        sdiff = ctx.start_flag[kle, el] != ctx.start_flag[ref, el]
+        if sdiff.any():
+            D[sdiff] |= mvec[idx[sdiff]] | mvec[ri]
         ref_edge = epm[ri]
-        d: dict[int, np.ndarray] = {}
-        for qi in kle:
-            i = q_pos.index(qi)
-            diff = mvec[i] != mvec[ri]
-            if ctx.start_flag[qi, el] != ctx.start_flag[ref, el]:
-                diff = diff | mvec[i] | mvec[ri]
-            a, bq = ref_edge, epm[i]
+        for j, qi in enumerate(kle):
+            a, bq = ref_edge, epm[q_pos.index(qi)]
             if (a is None) != (bq is None) or (
                     a is not None and bq is not None and not np.array_equal(a, bq)):
                 am = np.ones((b, b), dtype=bool) if a is None else a
                 bm = np.ones((b, b), dtype=bool) if bq is None else bq
-                diff = diff | np.any(np.tril(am != bm, k=-1), axis=1)
-            d[qi] = diff
-        return d
+                D[j] |= np.any(np.tril(am != bm, k=-1), axis=1)
+        return {qi: D[j] for j, qi in enumerate(kle)}
 
     # -- group (graphlet) planning --
 
     def _plan_group(self, g, el, type_id, attrs, b, mvec, epm,
-                    steps: list, stats: RunStats) -> None:
+                    steps: list, stats: RunStats, bi: int = -1,
+                    rows: list | None = None) -> None:
         ctx = self.ctx
         nu = ctx.nu
         shared = len(g) >= 2
         kleene = all(ctx.kleene_flag[qi, el] for qi in g)
         assert shared is False or kleene, "shared groups must be Kleene (Def. 4)"
 
-        # per-event divergence flags within this group
+        # a non-shared graphlet none of whose events match contributes an
+        # exactly-zero update (zero injection rows, zeroed adjacency): skip
+        # its jobs and its finalize step entirely
+        if not shared and not mvec[0].any():
+            return
+
+        # per-event divergence flags within this group: one broadcast
+        # comparison against the group reference (member 0)
         if shared:
-            div = np.zeros(b, dtype=bool)
-            m0 = mvec[0]
+            div = (mvec != mvec[0]).any(axis=0)
+            sflags = ctx.start_flag[g, el]
+            sdiff = sflags != sflags[0]
+            if sdiff.any():
+                div |= mvec[sdiff].any(axis=0) | mvec[0]
             e0 = epm[0]
-            s0 = ctx.start_flag[g[0], el]
             for i in range(1, len(g)):
-                div |= mvec[i] != m0
-                if ctx.start_flag[g[i], el] != s0:
-                    div |= mvec[i] | m0
                 a, bq = e0, epm[i]
                 if (a is None) != (bq is None) or (
                         a is not None and bq is not None and not np.array_equal(a, bq)):
@@ -465,9 +707,10 @@ class PaneProcessor:
             # basis would blow up: force split (the optimizer should normally
             # have prevented this; AlwaysShare can reach it)
             for qi in g:
+                j = g.index(qi)
                 self._plan_group([qi], el, type_id, attrs, b,
-                                 mvec[[g.index(qi)]], [epm[g.index(qi)]],
-                                 steps, stats)
+                                 mvec[[j]], [epm[j]], steps, stats, bi,
+                                 None if rows is None else [rows[j]])
             stats.split_bursts += 1
             return
 
@@ -508,26 +751,65 @@ class PaneProcessor:
             if not shared:
                 em[~mvec[0], :] = 0.0
 
-        sum_units = []
-        for ui, u in enumerate(ctx.units):
-            if u[0] != "sum":
-                continue
-            _, e_name, attr = u
-            vals = None
-            if ctx.schema.type_id(e_name) == type_id:
-                vals = (np.ones(b) if attr is None
-                        else attrs[:, ctx.schema.attr_col(attr)])
-            sum_units.append((ui, vals))
-
-        steps.append(_GroupPlan(
+        plan = _GroupPlan(
             g=list(g), el=el, type_id=type_id, attrs=attrs, b=b, mvec=mvec,
             epm=epm, shared=shared, div=div, div_rows=div_rows, live=live,
             dead=dead, B_local=B_local, z_ids=z_ids, dense=dense, em=em,
-            start_q0=bool(ctx.start_flag[g[0], el]), sum_units=sum_units))
+            start_q0=bool(ctx.start_flag[g[0], el]),
+            sum_units=self._sum_units_for(type_id, attrs, b), bi=bi,
+            rows=rows, trivial=not kleene)
+        # injection-row layout is structural: build it at plan time so the
+        # plan cache carries it and repeated shapes skip the construction
+        plan.base_c = self._count_base(plan)
+        steps.append(plan)
+
+    # -- phase 2: execute (jobs to the bucketed batched executor) --
+
+    def submit_execute(self, steps: list, stats: RunStats,
+                       round_: int, jobs: list) -> None:
+        """Submit one execute round's jobs to the shared executor.
+
+        Round 1 submits every group's count-unit problem; round 2 submits
+        the sum-unit problems, whose injection rows read the (flushed)
+        count coefficients.  The caller flushes the executor between rounds
+        — per pane via :meth:`process`, per micro-batch via
+        :class:`PaneMicroBatcher`.  ``jobs`` is the pending pane's handle
+        list, parallel to ``steps`` (plans stay immutable: see _GroupPlan).
+        """
+        ex = self.executor
+        if round_ == 1:
+            for i, p in enumerate(steps):
+                if not isinstance(p, _GroupPlan):
+                    continue
+                base = self._count_base(p)
+                if p.trivial:
+                    # non-Kleene graphlet: the in-burst adjacency is all
+                    # zeros, so propagation is the identity on the injection
+                    # rows — no launch needed
+                    cjob = PropagateJob(base, None, result=base)
+                else:
+                    cjob = ex.submit(base, None if p.dense else p.em)
+                jobs[i] = (cjob, {})
+                stats.propagate_cells += p.b * p.B_local
+        else:
+            for i, p in enumerate(steps):
+                if not isinstance(p, _GroupPlan):
+                    continue
+                cjob, sjobs = jobs[i]
+                for ui, vals in p.sum_units:
+                    base = self._sum_base(p, ui, vals, cjob.result)
+                    if p.trivial:
+                        sjobs[ui] = PropagateJob(base, None, result=base)
+                    else:
+                        sjobs[ui] = ex.submit(base,
+                                              None if p.dense else p.em)
+                    stats.propagate_cells += p.b * p.B_local
 
     # -- phase 2 helpers: injection rows for the batched launches --
 
     def _count_base(self, p: _GroupPlan) -> np.ndarray:
+        if p.base_c is not None:
+            return p.base_c
         base_c = np.zeros((p.b, p.B_local))
         base_c[p.live, 1 + 0] = 1.0               # x_count entry
         if p.start_q0:
@@ -536,9 +818,9 @@ class PaneProcessor:
             base_c[i, p.z_ids[(int(i), 0)]] = 1.0
         return base_c
 
-    def _sum_base(self, p: _GroupPlan, ui: int, vals) -> np.ndarray:
+    def _sum_base(self, p: _GroupPlan, ui: int, vals,
+                  ccoef: np.ndarray) -> np.ndarray:
         # injection shares the mask and includes attr*count coefficients
-        ccoef = p.cjob.result
         base_s = np.zeros((p.b, p.B_local))
         base_s[p.live, 1 + ui] = 1.0
         if vals is not None:
@@ -548,25 +830,79 @@ class PaneProcessor:
             base_s[i, p.z_ids[(int(i), ui)]] = 1.0
         return base_s
 
-    # -- phase 3: fold a graphlet's coefficients into the state functionals --
+    # -- phase 3: finalize (replay the pane in stream order) --
 
-    def _finalize_group(self, p: _GroupPlan, arow, rrow, gaterow) -> None:
+    def finalize(self, steps: list, stats: RunStats,
+                 jobs: list) -> np.ndarray:
+        """Phase 3: fold executed coefficients into the state functionals
+        and assemble the pane's per-query transfer matrices M [k, C, C].
+        ``jobs`` is the pending pane's handle list, parallel to ``steps``."""
+        t_f = perf_counter()
+        ctx = self.ctx
+        C = ctx.layout.size
+        k = ctx.k
+        nu = ctx.nu
+        t = len(ctx.pos_type_ids)
+
+        with np.errstate(over="ignore", invalid="ignore"):
+            # state functionals over pane-entry channels
+            arow = np.zeros((k, nu, t, C))
+            if nu and t:
+                arow[:, np.arange(nu)[:, None], np.arange(t)[None, :],
+                     ctx.a_cols] = 1.0
+            rrow = np.zeros((k, nu, C))
+            if nu:
+                rrow[:, np.arange(nu), ctx.rp_cols] = 1.0
+            gaterow = np.zeros((k, C))
+            gaterow[:, ctx.layout.GATE] = 1.0
+
+            for i, s in enumerate(steps):
+                if isinstance(s, _NegStep):
+                    for qi, rule in s.hits:
+                        if rule.kind == "leading":
+                            gaterow[qi, :] = 0.0
+                        elif rule.kind == "trailing":
+                            rrow[qi, :, :] = 0.0
+                        else:
+                            arow[qi, :, rule.before_local, :] = 0.0
+                else:
+                    cjob, sjobs = jobs[i]
+                    self._finalize_group(s, cjob, sjobs, arow, rrow, gaterow)
+
+            # assemble transfer matrices (vectorized over queries)
+            M = np.zeros((k, C, C))
+            M[:, ctx.layout.CONST, ctx.layout.CONST] = 1.0
+            M[:, ctx.layout.GATE, :] = gaterow
+            if nu and t:
+                M[:, ctx.a_cols.reshape(-1), :] = arow.reshape(k, nu * t, C)
+            if nu:
+                M[:, ctx.rp_cols, :] = rrow
+        stats.finalize_s += perf_counter() - t_f
+        return M
+
+    # -- phase 3 helper: one graphlet's coefficients -> state functionals --
+
+    def _finalize_group(self, p: _GroupPlan, cjob, sjobs, arow, rrow,
+                        gaterow) -> None:
         ctx = self.ctx
         C = ctx.layout.size
         nu = ctx.nu
         g = p.g
         b = p.b
         el = p.el
-        ccoef = p.cjob.result
-        scoefs = {ui: p.sjobs[ui].result for ui, _ in p.sum_units}
+        ccoef = cjob.result
+        scoefs = {ui: sjobs[ui].result for ui in sjobs}
         z_ids = p.z_ids
         div_rows = p.div_rows
 
         W = np.zeros((len(g), p.B_local, C))
-        for gi, qi in enumerate(g):
-            W[gi, 0] = gaterow[qi]
-            for ui in range(nu):
-                W[gi, 1 + ui] = ctx.pt_mask[qi, el] @ arow[qi, ui]
+        W[:, 0] = gaterow[g]
+        if nu:
+            # one stacked matmul for every member's x_u functionals instead
+            # of a matvec per (member, unit): [G,1,1,t] @ [G,nu,t,C]
+            W[:, 1:1 + nu] = np.matmul(
+                ctx.pt_mask[g, el][:, None, None, :].astype(np.float64),
+                arow[g])[:, :, 0, :]
 
         # event-level snapshot value functionals (Def. 9), ascending order.
         # P[u] caches coef_u @ W[gi]; every snapshot fill is a rank-1 update
@@ -611,18 +947,96 @@ class PaneProcessor:
                             f_s = np.zeros(C)
                         fill(z_ids[(i, ui)], f_s)
 
-        # fold column sums into state functionals: one stacked einsum per
+        # fold column sums into state functionals: one stacked matmul per
         # graphlet instead of a matvec per (member, unit)
         used = [0] + sorted(scoefs)               # unit rows: count first
-        S = np.stack([ccoef.sum(axis=0)] +
-                     [scoefs[ui].sum(axis=0) for ui in sorted(scoefs)])
-        upd = np.einsum("ub,gbc->guc", S, W)      # [len(g), len(used), C]
+        if scoefs:
+            S = np.stack([ccoef.sum(axis=0)] +
+                         [scoefs[ui].sum(axis=0) for ui in sorted(scoefs)])
+        else:
+            S = ccoef.sum(axis=0)[None]
+        upd = np.matmul(S, W)                     # [len(g), len(used), C]
         for gi, qi in enumerate(g):
             end = ctx.end_flag[qi, el]
             for r, ui in enumerate(used):
                 arow[qi, ui, el] += upd[gi, r]
                 if end:
                     rrow[qi, ui] += upd[gi, r]
+
+
+# --------------------------------------------------------------------------
+# cross-pane fused execution (micro-batching)
+# --------------------------------------------------------------------------
+
+
+@dataclass
+class _PendingPane:
+    """A planned pane awaiting execution/finalization in a micro-batch.
+
+    ``jobs`` holds the executor handles parallel to ``steps`` — kept off the
+    (possibly cache-shared) plan objects so the same planned shape can be in
+    flight for several panes of one micro-batch at once."""
+
+    proc: PaneProcessor
+    steps: list
+    stats: RunStats
+    jobs: list = field(default_factory=list)
+    M: np.ndarray | None = None
+
+    def finalize(self) -> np.ndarray:
+        if self.M is None:
+            self.M = self.proc.finalize(self.steps, self.stats, self.jobs)
+        return self.M
+
+
+class PaneMicroBatcher:
+    """Accumulate planned panes and flush their propagation backlog together.
+
+    ``submit`` plans a pane immediately (phase 1 — plan order is therefore
+    identical to per-pane execution, which keeps the optimizer's running
+    event count, and hence every sharing decision, bitwise reproducible);
+    ``drain`` runs both execute rounds for *all* pending panes through the
+    shared executor — one launch per size bucket per K panes — and returns
+    the pending panes for deferred, in-order finalization.  ``k`` is the
+    micro-batch size; ``k=1`` degrades to exact per-pane execution.
+    """
+
+    def __init__(self, executor: PaneBatchExecutor, k: int = 1):
+        self.executor = executor
+        self.k = max(1, int(k))
+        self._pending: list[_PendingPane] = []
+
+    def __len__(self) -> int:
+        return len(self._pending)
+
+    def submit(self, proc: PaneProcessor, pane: EventBatch,
+               stats: RunStats) -> _PendingPane:
+        steps = proc.plan(pane, stats)
+        pend = _PendingPane(proc, steps, stats, jobs=[None] * len(steps))
+        self._pending.append(pend)
+        return pend
+
+    def ready(self) -> bool:
+        return len(self._pending) >= self.k
+
+    def drain(self) -> list[_PendingPane]:
+        pend, self._pending = self._pending, []
+        if not pend:
+            return pend
+        ex = self.executor
+        t0 = perf_counter()
+        with np.errstate(over="ignore", invalid="ignore"):
+            for p in pend:
+                p.proc.submit_execute(p.steps, p.stats, 1, p.jobs)
+            ex.flush()
+            for p in pend:
+                p.proc.submit_execute(p.steps, p.stats, 2, p.jobs)
+            ex.flush()
+        # amortize the fused launch wall time across the micro-batch
+        dt = (perf_counter() - t0) / len(pend)
+        for p in pend:
+            p.stats.execute_s += dt
+        return pend
 
 
 # --------------------------------------------------------------------------
@@ -668,26 +1082,54 @@ def advance_instances(M: np.ndarray, insts: dict[int, "_Instance"]) -> None:
 
 
 class HamletRuntime:
-    """Evaluates a workload over a stream, pane by pane (Sec. 2.2 / 3.1)."""
+    """Evaluates a workload over a stream, pane by pane (Sec. 2.2 / 3.1).
+
+    ``micro_batch`` sets the cross-pane fusion factor K: planned panes
+    accumulate and their propagation backlogs flush together, one launch per
+    size bucket per K panes (bitwise identical to ``micro_batch=1``).
+    ``plan_cache`` attaches a per-component :class:`PanePlanCache` shared by
+    every processor the runtime spawns (see ``core/plan_cache.py``).
+    """
 
     def __init__(self, workload: Workload, policy=None, backend: str = "np",
-                 batch_exec: bool = True, shard_slices=None):
+                 batch_exec: bool = True, shard_slices=None,
+                 micro_batch: int = 1, plan_cache: bool = True,
+                 plan_cache_size: int = 128):
         from .optimizer import DynamicPolicy
 
         self.workload = workload
         self.policy = policy if policy is not None else DynamicPolicy()
         self.backend = backend
         self.pane = pane_size_for(workload.windows)
+        self.micro_batch = max(1, int(micro_batch))
         self.components = workload.sharable_components()
         self.ctxs = [ComponentContext(workload.schema,
                                       [workload.atomic[i] for i in comp])
                      for comp in self.components]
+        self.plan_caches = [PanePlanCache(plan_cache_size) if plan_cache
+                            else None for _ in self.ctxs]
         # one executor for the whole runtime: every pane — shed or admitted,
         # any component — funnels its jobs through the same bucketed batches
         self.executor = PaneBatchExecutor(backend=backend, batched=batch_exec,
                                           shard_slices=shard_slices)
         self.stats = RunStats()
         self._empty_M: list[np.ndarray] | None = None
+
+    def make_processor(self, ci: int) -> PaneProcessor:
+        """A processor for component ``ci`` wired to the runtime's shared
+        executor and plan cache (used by the overload / event-time layers)."""
+        return PaneProcessor(self.ctxs[ci], self.policy, backend=self.backend,
+                             executor=self.executor,
+                             plan_cache=self.plan_caches[ci])
+
+    def plan_cache_stats(self) -> dict:
+        """Aggregate plan-cache counters across components."""
+        hits = sum(c.hits for c in self.plan_caches if c is not None)
+        misses = sum(c.misses for c in self.plan_caches if c is not None)
+        return {"hits": hits, "misses": misses,
+                "entries": sum(len(c) for c in self.plan_caches
+                               if c is not None),
+                "hit_rate": hits / (hits + misses) if hits + misses else 0.0}
 
     def empty_pane_matrices(self) -> list[np.ndarray]:
         """Per-component transfer matrix of an event-free pane (cached).
@@ -700,10 +1142,8 @@ class HamletRuntime:
             empty = EventBatch(self.workload.schema, np.array([], np.int32),
                                np.array([], np.int64), None)
             scratch = RunStats()
-            self._empty_M = [
-                PaneProcessor(ctx, self.policy, backend=self.backend,
-                              executor=self.executor).process(empty, scratch)
-                for ctx in self.ctxs]
+            self._empty_M = [self.make_processor(ci).process(empty, scratch)
+                             for ci in range(len(self.ctxs))]
         return self._empty_M
 
     def run(self, batch: EventBatch, t_end: int | None = None) -> dict:
@@ -727,27 +1167,48 @@ class HamletRuntime:
 
     def _run_partition(self, batch: EventBatch, t_end: int, group_key: int,
                        out: dict) -> None:
-        for comp, ctx in zip(self.components, self.ctxs):
-            proc = PaneProcessor(ctx, self.policy, backend=self.backend,
-                                 executor=self.executor)
+        for ic, (comp, ctx) in enumerate(zip(self.components, self.ctxs)):
+            proc = self.make_processor(ic)
             insts: list[dict[int, _Instance]] = [dict() for _ in comp]
+            mb = PaneMicroBatcher(self.executor, k=self.micro_batch)
+            backlog: list[tuple[int, EventBatch, _PendingPane]] = []
+
+            def flush_backlog():
+                mb.drain()
+                for t0, pane_ev, pend in backlog:
+                    self._advance_pane(comp, ctx, insts, t0, pane_ev,
+                                       pend.finalize(), t_end, group_key, out)
+                backlog.clear()
+
             for t0, pane_ev in split_panes(batch, self.pane, 0, t_end):
-                M = proc.process(pane_ev, self.stats)
-                for ci, aqi in enumerate(comp):
-                    q = self.workload.atomic[aqi]
-                    # open new instances whose window starts at this pane
-                    if t0 % q.slide == 0 and t0 + q.within <= t_end:
-                        insts[ci][t0] = _Instance(t0, ctx.layout.fresh_state())
-                    needs_minmax = ci in ctx.minmax_queries
-                    advance_instances(M[ci], insts[ci])
-                    for w0, inst in list(insts[ci].items()):
-                        if needs_minmax and len(pane_ev):
-                            inst.events.append(pane_ev)
-                        if w0 + q.within == t0 + self.pane:
-                            out[(aqi, group_key, w0)] = self._emit(
-                                ctx, ci, q, inst, group_key)
-                            del insts[ci][w0]
-                            self.stats.windows_emitted += 1
+                backlog.append((t0, pane_ev,
+                                mb.submit(proc, pane_ev, self.stats)))
+                if mb.ready():
+                    flush_backlog()
+            flush_backlog()
+
+    def _advance_pane(self, comp, ctx, insts, t0: int, pane_ev: EventBatch,
+                      M: np.ndarray, t_end: int, group_key: int,
+                      out: dict) -> None:
+        """Phase 4 (fold): advance window instances by one pane and emit
+        closing windows."""
+        for ci, aqi in enumerate(comp):
+            q = self.workload.atomic[aqi]
+            # open new instances whose window starts at this pane
+            if t0 % q.slide == 0 and t0 + q.within <= t_end:
+                insts[ci][t0] = _Instance(t0, ctx.layout.fresh_state())
+            needs_minmax = ci in ctx.minmax_queries
+            t_fold = perf_counter()
+            advance_instances(M[ci], insts[ci])
+            self.stats.fold_s += perf_counter() - t_fold
+            for w0, inst in list(insts[ci].items()):
+                if needs_minmax and len(pane_ev):
+                    inst.events.append(pane_ev)
+                if w0 + q.within == t0 + self.pane:
+                    out[(aqi, group_key, w0)] = self._emit(
+                        ctx, ci, q, inst, group_key)
+                    del insts[ci][w0]
+                    self.stats.windows_emitted += 1
 
     def _emit(self, ctx: ComponentContext, ci: int, q: AtomicQuery,
               inst: _Instance, group_key: int) -> dict:

@@ -37,12 +37,19 @@ def _union_count(d_rows: dict[int, np.ndarray], S) -> int:
 
 
 class _PolicyBase:
+    # True when ``decide`` never reads ``d_rows`` (nor any other per-burst
+    # structure): the engine then skips the divergence pass entirely and the
+    # policy is handed ``d_rows=None``
+    decision_static = False
+
     def decide(self, *, ctx, el, candidates, d_rows, b, n, stats) -> list[list[int]]:
         raise NotImplementedError
 
 
 class AlwaysShare(_PolicyBase):
     """Static plan: share every shareable burst (paper's static optimizer)."""
+
+    decision_static = True
 
     def decide(self, *, ctx, el, candidates, d_rows, b, n, stats):
         stats.decisions += 1
@@ -51,6 +58,8 @@ class AlwaysShare(_PolicyBase):
 
 class NeverShare(_PolicyBase):
     """Non-shared execution for every burst (GRETA-equivalent plan)."""
+
+    decision_static = True
 
     def decide(self, *, ctx, el, candidates, d_rows, b, n, stats):
         stats.decisions += 1

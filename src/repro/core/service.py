@@ -176,17 +176,30 @@ class OutOfOrderBuffer:
 
 
 class HamletService:
-    """Incremental HAMLET with dynamic workload changes at epoch boundaries."""
+    """Incremental HAMLET with dynamic workload changes at epoch boundaries.
+
+    ``micro_batch`` / ``plan_cache`` pass through to the replay
+    :class:`HamletRuntime` (cross-pane fused launches, pane-plan
+    memoization — see ``core/engine.py``); the runtime is reused while the
+    workload is unchanged so the plan caches stay warm across epochs."""
 
     def __init__(self, schema, queries: list[Query], policy=None,
                  lateness: int = 0, sharable_mode: str = "units",
-                 overload=None, batch_exec: bool = True, eventtime=None):
+                 overload=None, batch_exec: bool = True, eventtime=None,
+                 micro_batch: int = 1, plan_cache: bool = True):
         from .events import pane_size_for
 
         self.schema = schema
         self.sharable_mode = sharable_mode
         self.policy = policy
         self.batch_exec = batch_exec
+        self.micro_batch = max(1, int(micro_batch))
+        self.plan_cache = plan_cache
+        # the replay runtime is reused while the workload is unchanged, so
+        # the per-component plan caches (and the executor's staging buffers)
+        # stay warm across epochs; query add/remove rebuilds it
+        self._rt: HamletRuntime | None = None
+        self._rt_stale = True
         self._queries: dict[str, Query] = {q.name: q for q in queries}
         self._pending_add: dict[str, Query] = {}
         self._pending_remove: set[str] = set()
@@ -208,6 +221,7 @@ class HamletService:
                 schema, pane, make_watermark(eventtime),
                 lateness_horizon=eventtime.lateness_horizon)
         self.revisions: list = []                # retract/amend records
+        self._rev_seen = 0                       # revisions already charged
         self._revno: dict = {}                   # window key -> revision no
         # when each query became active (epoch time): revision must never
         # resurrect windows that closed before a query existed
@@ -254,6 +268,7 @@ class HamletService:
         self._pending_add.clear()
         self._pending_remove.clear()
         self._refresh_derived()
+        self._rt_stale = True
         if self.overload is not None:
             self.overload.rebind(self._workload())
 
@@ -422,11 +437,22 @@ class HamletService:
         sub = ev.select(sel)
         shifted = EventBatch(self.schema, sub.type_id, sub.time - shift,
                              sub.attrs, sub.group)
-        rt = HamletRuntime(self._workload(), policy=self.policy,
-                           batch_exec=self.batch_exec)
+        rt = self._runtime()
         res = rt.run(shifted, t_end=end - shift)
         self.stats.merge(rt.stats)
         return res
+
+    def _runtime(self) -> HamletRuntime:
+        """The replay runtime, rebuilt only after a workload migration; its
+        stats are reset per replay (the service merges them itself)."""
+        if self._rt is None or self._rt_stale:
+            self._rt = HamletRuntime(self._workload(), policy=self.policy,
+                                     batch_exec=self.batch_exec,
+                                     micro_batch=self.micro_batch,
+                                     plan_cache=self.plan_cache)
+            self._rt_stale = False
+        self._rt.stats = RunStats()
+        return self._rt
 
     def _run_epoch(self, end: int) -> dict:
         t_start = time.perf_counter()
@@ -456,6 +482,14 @@ class HamletService:
         self._t_done = end
         self._apply_pending()
         if self.overload is not None:
+            # disorder-aware admission control: besides epoch latency, feed
+            # the controller the revision load this epoch — retract/amend
+            # records per window emitted — so a revision storm under heavy
+            # disorder raises the shed ratio (see overload/controller.py)
+            n_rev = len(self.revisions) - self._rev_seen
+            self._rev_seen = len(self.revisions)
+            rev_load = n_rev / max(1, len(out))
             self.overload.controller.update(
-                (time.perf_counter() - t_start) * 1e3)
+                (time.perf_counter() - t_start) * 1e3,
+                revision_load=rev_load)
         return out

@@ -41,8 +41,8 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
-from ..core.engine import (HamletRuntime, PaneProcessor, _Instance,
-                           fold_panes, vals_equal)
+from ..core.engine import (HamletRuntime, PaneMicroBatcher, PaneProcessor,
+                           _Instance, fold_panes, vals_equal)
 from ..core.events import EventBatch
 from ..core.query import Workload
 from .config import EventTimeConfig
@@ -123,11 +123,13 @@ class _PaneState:
 class EventTimeRuntime:
     def __init__(self, workload: Workload, config: EventTimeConfig,
                  policy=None, backend: str = "np", batch_exec: bool = True,
-                 accountant=None):
+                 accountant=None, micro_batch: int = 1,
+                 plan_cache: bool = True):
         self.workload = workload
         self.config = config
+        self.micro_batch = max(1, int(micro_batch))
         self.rt = HamletRuntime(workload, policy=policy, backend=backend,
-                                batch_exec=batch_exec)
+                                batch_exec=batch_exec, plan_cache=plan_cache)
         self.pane = self.rt.pane
         self.stats = self.rt.stats
         self.metrics = EventTimeMetrics()
@@ -242,11 +244,42 @@ class EventTimeRuntime:
     def _group_procs(self, g: int) -> list[PaneProcessor]:
         if g not in self._procs:
             rt = self.rt
-            self._procs[g] = [
-                PaneProcessor(ctx, rt.policy, backend=rt.backend,
-                              executor=rt.executor) for ctx in rt.ctxs]
+            # shared executor + per-component plan caches: a pane shape
+            # learned on one group partition is reused on all of them
+            self._procs[g] = [rt.make_processor(ci)
+                              for ci in range(len(rt.ctxs))]
             self._panes[g] = {}
         return self._procs[g]
+
+    def _prefetch(self, jobs: list) -> None:
+        """Cross-pane fused execution: plan the given ``(group, pane-state)``
+        pairs in first-touch order — identical to the order the lazy
+        :meth:`_ensure_executed` walk would execute them, so sharing
+        decisions and results stay bitwise reproducible — and flush the
+        propagation backlog once per ``micro_batch`` panes."""
+        if self.micro_batch <= 1 or not jobs:
+            return
+        mb = PaneMicroBatcher(self.rt.executor, k=self.micro_batch)
+        batch: list = []
+        seen: set[int] = set()
+
+        def drain():
+            for ps, pends in batch:
+                ps.M = [p.finalize() for p in pends]
+                self.metrics.panes_executed += 1
+            batch.clear()
+
+        for g, ps in jobs:
+            if ps.M is not None or id(ps) in seen:
+                continue
+            seen.add(id(ps))
+            batch.append((ps, [mb.submit(proc, ps.events, self.stats)
+                               for proc in self._procs[g]]))
+            if len(batch) >= self.micro_batch:
+                mb.drain()
+                drain()
+        mb.drain()
+        drain()
 
     def _absorb(self, chunk: EventBatch) -> list[tuple[int, int]]:
         """Merge a chunk into per-(group, pane) state and mark the panes
@@ -294,16 +327,20 @@ class EventTimeRuntime:
                 self.metrics.expired += len(batch)
                 if self.accountant is not None:
                     self.accountant.record(batch, witnessed=False, late=True)
+        sealed_jobs: list = []
         for sp in res.sealed:
             if not len(sp.events):
                 continue
             g_parts = sp.events.partition_by_group()
             for g, gb in g_parts.items():
-                procs = self._group_procs(g)
+                self._group_procs(g)
                 ps = self._panes[g][sp.t0] = _PaneState(events=gb)
-                ps.M = [proc.process(gb, self.stats) for proc in procs]
-                self.metrics.panes_executed += 1
+                sealed_jobs.append((g, ps))
             self._frontier = max(self._frontier, int(sp.events.time.max()))
+        # fused execution across the sealed panes (lazy fallback when K=1)
+        self._prefetch(sealed_jobs)
+        for g, ps in sealed_jobs:
+            self._ensure_executed(g, ps)
         if not emit:
             return []
         return self._emit_ready(self._buffer.sealed_end)
@@ -327,32 +364,55 @@ class EventTimeRuntime:
         u = fold_panes(Ms, ctx.layout.fresh_state())
         return self.rt._emit(ctx, ci, q, _Instance(w0, u, events=evs), g)
 
+    def _unexecuted_panes(self, g: int, w0: int, q) -> list:
+        """The window's pane states still awaiting execution, in the fold's
+        own (ascending ``t0``) order — the one definition both the fused
+        prefetch and the lazy :meth:`_window_vals` walk derive from, so
+        their execution orders cannot drift apart."""
+        panes = self._panes.get(g, {})
+        out = []
+        for t0 in range(w0, w0 + q.within, self.pane):
+            ps = panes.get(t0)
+            if ps is not None and ps.M is None:
+                out.append((g, ps))
+        return out
+
     def _emit_ready(self, end: int, final: bool = False
                     ) -> list[EmissionRecord]:
-        """Emit every window with ``w0 + within <= end`` not yet emitted."""
+        """Emit every window with ``w0 + within <= end`` not yet emitted.
+
+        One traversal builds the ordered window list; the fused prefetch
+        (``micro_batch > 1``) and the emission fold both consume it, so
+        pane execution order — which the optimizer's running event count,
+        and hence bitwise reproducibility, depends on — has a single
+        source of truth."""
         records: list[EmissionRecord] = []
         rt = self.rt
-        sealed = ((self.wm.watermark() + 1) // self.pane) * self.pane
+        wins: list[tuple] = []
         for g in sorted(self._panes):
             for ic, (comp, ctx) in enumerate(zip(rt.components, rt.ctxs)):
                 for ci, aqi in enumerate(comp):
                     q = rt.workload.atomic[aqi]
                     w0 = self._next_w0.get((aqi, g), 0)
                     while w0 + q.within <= end:
-                        vals = self._window_vals(g, ic, ci, ctx, q, w0)
-                        key = (aqi, g, w0)
-                        self._atomic[key] = vals
-                        self._revno[key] = 0
-                        spec = (not final) and (w0 + q.within > sealed)
-                        records.append(EmissionRecord(
-                            "emit", q.name, g, w0, vals, 0,
-                            speculative=spec))
-                        self.metrics.windows_emitted += 1
-                        self.metrics.speculative_emits += int(spec)
-                        self.metrics.emit_lag.append(
-                            self._frontier - (w0 + q.within))
+                        wins.append((g, ic, ci, ctx, q, aqi, w0))
                         w0 += q.slide
                     self._next_w0[(aqi, g)] = w0
+        if self.micro_batch > 1:
+            self._prefetch([job for g, _ic, _ci, _ctx, q, _aqi, w0 in wins
+                            for job in self._unexecuted_panes(g, w0, q)])
+        sealed = ((self.wm.watermark() + 1) // self.pane) * self.pane
+        for g, ic, ci, ctx, q, aqi, w0 in wins:
+            vals = self._window_vals(g, ic, ci, ctx, q, w0)
+            key = (aqi, g, w0)
+            self._atomic[key] = vals
+            self._revno[key] = 0
+            spec = (not final) and (w0 + q.within > sealed)
+            records.append(EmissionRecord("emit", q.name, g, w0, vals, 0,
+                                          speculative=spec))
+            self.metrics.windows_emitted += 1
+            self.metrics.speculative_emits += int(spec)
+            self.metrics.emit_lag.append(self._frontier - (w0 + q.within))
         return records
 
     def _revise(self, dirty: list[tuple[int, int]]) -> list[EmissionRecord]:
@@ -376,8 +436,13 @@ class EventTimeRuntime:
             # a pane counts as *revised* only when its (re-)execution
             # reached back behind the emitted frontier
             self.metrics.panes_revised += int(pane_hit)
+        ordered = sorted(affected.items())
+        if self.micro_batch > 1:
+            self._prefetch([job for (aqi, g, w0), _ in ordered
+                            for job in self._unexecuted_panes(
+                                g, w0, rt.workload.atomic[aqi])])
         records: list[EmissionRecord] = []
-        for (aqi, g, w0), (ic, ci) in sorted(affected.items()):
+        for (aqi, g, w0), (ic, ci) in ordered:
             ctx = rt.ctxs[ic]
             q = rt.workload.atomic[aqi]
             new = self._window_vals(g, ic, ci, ctx, q, w0)

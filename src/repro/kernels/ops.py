@@ -19,7 +19,8 @@ from . import ref
 from .hamlet_propagate import masked_prefix_propagate_pallas
 
 __all__ = ["propagate", "propagate_batched", "propagate_dense",
-           "propagate_dense_batched", "PROPAGATE_BACKENDS", "DENSE_B_MAX"]
+           "propagate_dense_batched", "device_get_all",
+           "PROPAGATE_BACKENDS", "DENSE_B_MAX"]
 
 # largest burst the dense closed form handles exactly (2^b weight range);
 # the engine's dense-eligibility test and the executor's fallback share it
@@ -89,6 +90,23 @@ def propagate_batched(base, mask, *, backend: str = "np", tile: int = 128,
     if backend == "pallas":
         return _pallas_padded(jnp.asarray(base), jnp.asarray(mask), tile, interpret)
     raise ValueError(f"unknown backend {backend!r}; use one of {PROPAGATE_BACKENDS}")
+
+
+def device_get_all(arrays: list) -> list[np.ndarray]:
+    """Fetch many (possibly device-resident) arrays with **one** host sync.
+
+    The pane-batch executor launches every bucket of a flush before pulling
+    any result back, then converts the whole backlog here: on the jax/pallas
+    backends this is a single ``jax.device_get`` over the list (results stay
+    device-resident until this point), instead of one blocking
+    ``np.asarray`` round trip per bucket per pane.  Pure-numpy inputs pass
+    through untouched.
+    """
+    if not arrays:
+        return []
+    if all(isinstance(a, np.ndarray) for a in arrays):
+        return list(arrays)
+    return [np.asarray(a) for a in jax.device_get(list(arrays))]
 
 
 def propagate(base, mask, *, backend: str = "np", tile: int = 128,

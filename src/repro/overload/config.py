@@ -33,7 +33,22 @@ class OverloadConfig:
                        gain scales with offered load, and a hot discrete
                        loop limit-cycles between shedding nothing and
                        everything
+    kr                 gain on the *revision load* (disorder-aware admission
+                       control): under out-of-order arrival the event-time
+                       layer re-plans panes and re-folds emitted windows;
+                       that work competes with fresh panes for the same
+                       budget, so the controller treats the revision rate
+                       (revisions per emitted window, fed by the caller) as
+                       a second cost axis — a revision storm raises the shed
+                       ratio even while pane latency still looks healthy.
+                       0 disables the axis.
     max_shed           ceiling on the controller's shed ratio
+    micro_batch        cross-pane fusion factor K: admitted panes accumulate
+                       and execute as one fused launch set per K panes (the
+                       controller then observes amortized per-pane time once
+                       per micro-batch); 1 = exact per-pane control loop
+    plan_cache         enable the engine's pane-plan memoization (see
+                       ``core/plan_cache.py``)
     fixed_shed         if set, bypass the controller and shed this constant
                        fraction (used for equal-ratio policy comparisons)
     min_burst_keep     fraction of each Kleene burst the benefit-weighted
@@ -55,8 +70,11 @@ class OverloadConfig:
     kp: float = 0.1
     ki: float = 0.05
     kd: float = 0.0
+    kr: float = 0.0
     max_shed: float = 0.98
     fixed_shed: float | None = None
+    micro_batch: int = 1
+    plan_cache: bool = True
     min_burst_keep: float = 0.25
     benefit_model: str = "v1"
     seed: int = 0
@@ -70,3 +88,7 @@ class OverloadConfig:
             raise ValueError("need 0 <= low_watermark <= high_watermark <= 1")
         if self.fixed_shed is not None and not (0.0 <= self.fixed_shed < 1.0):
             raise ValueError("fixed_shed must be in [0, 1)")
+        if self.micro_batch < 1:
+            raise ValueError("micro_batch must be >= 1")
+        if self.kr < 0.0:
+            raise ValueError("kr must be >= 0")

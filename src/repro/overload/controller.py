@@ -10,6 +10,16 @@ default gains keep the discrete loop stable up to ~10x overload; a hotter
 loop limit-cycles between shedding nothing and shedding everything.
 Anti-windup: the integrator is clamped to the actuator range and frozen while
 the output is saturated in the direction of the error.
+
+Disorder-aware admission control: out-of-order streams add a cost axis pane
+latency alone cannot see — every straggler behind the emitted frontier
+re-plans its pane and re-folds the covering windows, and under a revision
+storm that replay work crowds out fresh panes *before* per-pane latency
+degrades (revisions run outside the admission path).  ``kr`` folds the
+observed revision load (revisions per emitted window, supplied by the caller
+that owns the event-time layer) into the same error signal, so the shed
+ratio rises with disorder pressure as well as latency pressure and the
+integrator trims against their sum.
 """
 
 from __future__ import annotations
@@ -23,12 +33,13 @@ def _clip(x: float, lo: float, hi: float) -> float:
 
 class LatencyController:
     def __init__(self, slo_ms: float, kp: float = 0.1, ki: float = 0.05,
-                 kd: float = 0.0, max_shed: float = 0.98,
+                 kd: float = 0.0, kr: float = 0.0, max_shed: float = 0.98,
                  fixed: float | None = None):
         if slo_ms <= 0:
             raise ValueError("slo_ms must be positive")
         self.slo_ms = float(slo_ms)
         self.kp, self.ki, self.kd = kp, ki, kd
+        self.kr = float(kr)
         self.max_shed = float(max_shed)
         self.fixed = fixed
         self.shed_ratio = fixed if fixed is not None else 0.0
@@ -39,14 +50,19 @@ class LatencyController:
     @classmethod
     def from_config(cls, cfg) -> "LatencyController":
         return cls(cfg.slo_ms, kp=cfg.kp, ki=cfg.ki, kd=cfg.kd,
-                   max_shed=cfg.max_shed, fixed=cfg.fixed_shed)
+                   kr=getattr(cfg, "kr", 0.0), max_shed=cfg.max_shed,
+                   fixed=cfg.fixed_shed)
 
-    def update(self, latency_ms: float) -> float:
-        """Feed one latency observation; returns the new shed ratio."""
+    def update(self, latency_ms: float,
+               revision_load: float = 0.0) -> float:
+        """Feed one latency observation (plus the optional revision-load
+        observation, revisions per emitted window since the last update);
+        returns the new shed ratio."""
         self.updates += 1
         if self.fixed is not None:
             return self.shed_ratio
-        e = (latency_ms - self.slo_ms) / self.slo_ms
+        e = ((latency_ms - self.slo_ms) / self.slo_ms
+             + self.kr * max(0.0, revision_load))
         d = 0.0 if self._prev_e is None else e - self._prev_e
         self._prev_e = e
         raw = self.kp * e + self._i + self.ki * e + self.kd * d

@@ -18,6 +18,17 @@ metrics additionally report end-to-end latency against a simulated arrival
 timeline (sequential processing: backlog carries over), which is what makes
 sustained overload visible as unbounded latency when shedding is off.
 
+Cross-pane fused execution: with ``config.micro_batch = K > 1`` admitted
+panes accumulate in a processing backlog and execute together — every group
+driver's propagation jobs for K pane steps flush as one launch per size
+bucket (see ``core/engine.py``).  Admission and shedding still happen per
+pane at poll time; the controller and the per-pane metrics are then fed the
+*amortized* per-pane processing time of the fused batch, so the control loop
+reacts once per micro-batch instead of once per pane.  Results are bitwise
+identical to ``K=1`` whenever the shed decisions agree (e.g. under
+``fixed_shed``); with the live PID loop the coarser observation cadence can
+shift shed ratios — that is the documented latency/efficiency trade.
+
 A group partition seen for the first time at pane ``t`` starts with fresh
 window state — correct because an absent group's earlier panes are empty and
 the empty-pane transfer matrix is the identity.
@@ -31,8 +42,8 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
-from ..core.engine import HamletRuntime, PaneProcessor, RunStats, _Instance
-from ..core.engine import advance_instances, combine_results
+from ..core.engine import (HamletRuntime, PaneMicroBatcher, RunStats,
+                           _Instance, advance_instances, combine_results)
 from ..core.events import EventBatch
 from ..core.query import Workload
 from .accountant import ErrorAccountant
@@ -95,9 +106,8 @@ class _GroupDriver:
         self.rt = rt
         self.group_key = group_key
         # shed and admitted panes alike reuse the runtime's batched executor
-        self.procs = [PaneProcessor(ctx, rt.policy, backend=rt.backend,
-                                    executor=rt.executor)
-                      for ctx in rt.ctxs]
+        # and per-component plan caches
+        self.procs = [rt.make_processor(ci) for ci in range(len(rt.ctxs))]
         # insts[component][member] : {window_start: _Instance}
         self.insts: list[list[dict[int, _Instance]]] = []
         for comp, ctx in zip(rt.components, rt.ctxs):
@@ -114,20 +124,29 @@ class _GroupDriver:
                 per.append(d)
             self.insts.append(per)
 
-    def advance(self, pane_ev: EventBatch, t0: int, out: dict,
-                stats: RunStats) -> None:
+    def plan(self, pane_ev: EventBatch, mb: PaneMicroBatcher,
+             stats: RunStats) -> list:
+        """Plan this group's pane across all components into the shared
+        micro-batch; returns the pending handles ``apply`` consumes."""
+        return [mb.submit(proc, pane_ev, stats) for proc in self.procs]
+
+    def apply(self, pends: list, pane_ev: EventBatch, t0: int, out: dict,
+              stats: RunStats) -> None:
+        """Finalize + fold this group's pane (after the micro-batch drained)."""
         rt = self.rt
         pane = rt.pane
-        for comp, ctx, proc, per in zip(rt.components, rt.ctxs, self.procs,
+        for comp, ctx, pend, per in zip(rt.components, rt.ctxs, pends,
                                         self.insts):
-            M = proc.process(pane_ev, stats)
+            M = pend.finalize()
             for ci, aqi in enumerate(comp):
                 q = rt.workload.atomic[aqi]
                 insts = per[ci]
                 if t0 % q.slide == 0:
                     insts[t0] = _Instance(t0, ctx.layout.fresh_state())
                 needs_minmax = ci in ctx.minmax_queries
+                t_fold = time.perf_counter()
                 advance_instances(M[ci], insts)
+                stats.fold_s += time.perf_counter() - t_fold
                 for w0, inst in list(insts.items()):
                     if needs_minmax and len(pane_ev):
                         inst.events.append(pane_ev)
@@ -137,6 +156,14 @@ class _GroupDriver:
                         del insts[w0]
                         stats.windows_emitted += 1
 
+    def advance(self, pane_ev: EventBatch, t0: int, out: dict,
+                stats: RunStats) -> None:
+        """Single-pane convenience: plan, drain, apply."""
+        mb = PaneMicroBatcher(self.rt.executor, k=1)
+        pends = self.plan(pane_ev, mb, stats)
+        mb.drain()
+        self.apply(pends, pane_ev, t0, out, stats)
+
 
 class OverloadRuntime:
     def __init__(self, workload: Workload, config: OverloadConfig,
@@ -145,9 +172,11 @@ class OverloadRuntime:
         self.workload = workload
         self.config = config
         self.rt = HamletRuntime(workload, policy=policy, backend=backend,
-                                batch_exec=batch_exec)
+                                batch_exec=batch_exec,
+                                plan_cache=config.plan_cache)
         self.pane = self.rt.pane
         self.stats = self.rt.stats
+        self.micro_batch = max(1, int(config.micro_batch))
         self.queue = IngressQueue(workload.schema,
                                   capacity=config.queue_capacity,
                                   high_watermark=config.high_watermark,
@@ -164,6 +193,8 @@ class OverloadRuntime:
         self._t = 0
         self._clock = clock
         self._done_s = 0.0   # completion time on the simulated timeline
+        # admitted panes awaiting fused execution (micro_batch > 1)
+        self._backlog: list[tuple[int, int, int, int, EventBatch]] = []
 
     # -- producer side --
 
@@ -210,18 +241,62 @@ class OverloadRuntime:
         else:
             kept = ev
 
-        c0 = self._clock()
-        self._process(kept, t0)
-        proc_s = self._clock() - c0
-        lat_ms = self._latency_ms(t0, proc_s)
-        # the controller acts on pane-processing time (the directly
-        # controllable quantity); end-to-end latency is reported alongside
-        self.controller.update(proc_s * 1e3)
-        self.metrics.add(PaneMetric(
-            t0=t0, offered=n, admitted=len(kept), shed=n - keep_n,
-            proc_ms=proc_s * 1e3, lat_ms=lat_ms,
-            shed_ratio=self.controller.shed_ratio, late=n_late))
+        self._backlog.append((t0, n, keep_n, n_late, kept))
         self._t = t0 + self.pane
+        if len(self._backlog) >= self.micro_batch:
+            self._drain_backlog()
+
+    def flush_panes(self) -> None:
+        """Execute any panes still deferred in the processing backlog."""
+        self._drain_backlog()
+
+    def _drain_backlog(self) -> None:
+        backlog, self._backlog = self._backlog, []
+        if not backlog:
+            return
+        c0 = self._clock()
+        if len(backlog) == 1:
+            t0, _n, _keep, _late, kept = backlog[0]
+            self._process(kept, t0)
+        else:
+            self._process_batch([(t0, kept)
+                                 for t0, _n, _k, _l, kept in backlog])
+        # the controller acts on pane-processing time (the directly
+        # controllable quantity), amortized across the fused micro-batch;
+        # end-to-end latency is reported alongside
+        proc_s = (self._clock() - c0) / len(backlog)
+        for t0, n, keep_n, n_late, kept in backlog:
+            lat_ms = self._latency_ms(t0, proc_s)
+            self.controller.update(proc_s * 1e3)
+            self.metrics.add(PaneMetric(
+                t0=t0, offered=n, admitted=len(kept), shed=n - keep_n,
+                proc_ms=proc_s * 1e3, lat_ms=lat_ms,
+                shed_ratio=self.controller.shed_ratio, late=n_late))
+
+    def _process(self, kept: EventBatch, t0: int) -> None:
+        """Process one admitted pane through the group drivers."""
+        self._process_batch([(t0, kept)])
+
+    def _process_batch(self, panes: list[tuple[int, EventBatch]]) -> None:
+        """Fused execution of K admitted panes: plan every (pane, group,
+        component) into one micro-batch, drain once — one launch per size
+        bucket per K panes — then finalize and fold in stream order."""
+        mb = PaneMicroBatcher(self.rt.executor, k=len(panes))
+        planned: list = []
+        for t0, kept in panes:
+            parts = kept.partition_by_group() if len(kept) else {}
+            for g in parts:
+                if g not in self._drivers:
+                    self._drivers[g] = _GroupDriver(self.rt, int(g), t0)
+            empty = self._empty()
+            planned.append([
+                (drv, parts.get(g, empty), drv.plan(parts.get(g, empty),
+                                                    mb, self.stats))
+                for g, drv in self._drivers.items()])
+        mb.drain()
+        for (t0, _kept), per in zip(panes, planned):
+            for drv, pane_ev, pends in per:
+                drv.apply(pends, pane_ev, t0, self._atomic, self.stats)
 
     def _latency_ms(self, t0: int, proc_s: float) -> float:
         ts = self.config.tick_seconds
@@ -233,15 +308,6 @@ class OverloadRuntime:
         self._done_s = max(self._done_s, arrival_end) + proc_s
         return (self._done_s - arrival_end) * 1e3
 
-    def _process(self, kept: EventBatch, t0: int) -> None:
-        parts = kept.partition_by_group() if len(kept) else {}
-        for g in parts:
-            if g not in self._drivers:
-                self._drivers[g] = _GroupDriver(self.rt, int(g), t0)
-        empty = self._empty()
-        for g, drv in self._drivers.items():
-            drv.advance(parts.get(g, empty), t0, self._atomic, self.stats)
-
     def _empty(self) -> EventBatch:
         return EventBatch(self.workload.schema, np.array([], np.int32),
                           np.array([], np.int64), None)
@@ -249,7 +315,9 @@ class OverloadRuntime:
     # -- results --
 
     def results(self) -> dict:
-        """User-query results for every window closed so far."""
+        """User-query results for every window closed so far (drains any
+        deferred micro-batch first)."""
+        self.flush_panes()
         return combine_results(self.workload, self._atomic)
 
     def run(self, batch: EventBatch, t_end: int | None = None) -> dict:

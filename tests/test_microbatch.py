@@ -1,0 +1,156 @@
+"""Cross-pane micro-batch differentials.
+
+Micro-batched execution (K panes' propagation backlogs flushed as one
+launch set per size bucket) must be **bitwise identical** to per-pane
+execution — across the four named workload streams, the three disorder
+models, the overload path, and with the plan cache on or off.  Fused
+launches only grow the executor's buckets; every slice stays bitwise equal
+to the per-burst call, and plan order (hence every sharing decision) is
+preserved by construction.
+
+The quick representatives run in the fast lane; the full named-workload and
+disorder sweeps carry the ``slow`` marker.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.engine import HamletRuntime, vals_equal
+from repro.core.service import HamletService
+from repro.eventtime import EventTimeConfig, EventTimeRuntime
+from repro.overload import OverloadConfig
+from repro.overload.runtime import OverloadRuntime
+from repro.streams.generator import (NAMED_STREAMS, DisorderConfig,
+                                     apply_disorder)
+
+from benchmarks.common import kleene_workload
+
+KS = (1, 4, 16)
+
+WORKLOAD_SHAPE = {
+    "ridesharing": dict(kleene_type="Travel",
+                        head_types=["Request", "Pickup", "Dropoff"]),
+    "stock": dict(kleene_type="Quote", head_types=["Buy", "Sell"]),
+    "smarthome": dict(kleene_type="Measure", head_types=["Load", "Work"]),
+    "taxi": dict(kleene_type="Travel", head_types=["Request", "Pickup"]),
+}
+
+
+def _schema_for(name):
+    from repro.streams import generator as G
+
+    return {"ridesharing": G.RIDESHARING_SCHEMA, "stock": G.STOCK_SCHEMA,
+            "smarthome": G.SMARTHOME_SCHEMA, "taxi": G.TAXI_SCHEMA}[name]
+
+
+def _named_case(name, epm=250, minutes=2, n_queries=4):
+    wl = kleene_workload(_schema_for(name), n_queries,
+                         **WORKLOAD_SHAPE[name], within=60, slide=30)
+    stream = NAMED_STREAMS[name](events_per_minute=epm, minutes=minutes,
+                                 seed=13)
+    t_end = ((int(stream.time.max()) + 30) // 30) * 30
+    return wl, stream, t_end
+
+
+def _assert_bitwise(a, b, tag=""):
+    assert a.keys() == b.keys(), tag
+    for k in a:
+        assert vals_equal(a[k], b[k]), (tag, k)
+
+
+def _sweep_runtime(name):
+    wl, stream, t_end = _named_case(name)
+    want = HamletRuntime(wl, micro_batch=1, plan_cache=False).run(
+        stream, t_end)
+    for K in KS:
+        for pc in (False, True):
+            got = HamletRuntime(wl, micro_batch=K, plan_cache=pc).run(
+                stream, t_end)
+            _assert_bitwise(got, want, (name, K, pc))
+
+
+def test_microbatch_bitwise_ridesharing():
+    _sweep_runtime("ridesharing")
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("name", ["stock", "smarthome", "taxi"])
+def test_microbatch_bitwise_named(name):
+    _sweep_runtime(name)
+
+
+# ------------------------------------------------------------- event time
+
+
+def _sweep_disorder(name, model):
+    wl, stream, t_end = _named_case(name)
+    want = HamletRuntime(wl, plan_cache=False).run(stream, t_end)
+    ds = apply_disorder(stream, DisorderConfig(model=model, fraction=0.2,
+                                               seed=2))
+    cfg = EventTimeConfig(watermark="bounded_skew",
+                          skew=max(ds.max_lateness(), 1), speculative=True)
+    for K in KS:
+        et = EventTimeRuntime(wl, cfg, micro_batch=K,
+                              plan_cache=(K != 4))
+        got = et.run_disordered(ds.base, ds.order, chunk=64, t_end=t_end)
+        _assert_bitwise(got, want, (name, model, K))
+
+
+def test_microbatch_disordered_bounded_skew():
+    _sweep_disorder("ridesharing", "bounded_skew")
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("model", ["stragglers", "adversarial_tail"])
+def test_microbatch_disordered_models(model):
+    _sweep_disorder("ridesharing", model)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("name", ["stock", "smarthome", "taxi"])
+def test_microbatch_disordered_named(name):
+    _sweep_disorder(name, "bounded_skew")
+
+
+# --------------------------------------------------------------- overload
+
+
+def test_microbatch_overload_bitwise():
+    """With deterministic shedding (fixed ratio), micro-batched overload
+    processing emits bitwise-identical windows for every K."""
+    wl, stream, t_end = _named_case("ridesharing", epm=400)
+    base_cfg = dict(slo_ms=50.0, shed_policy="benefit_weighted",
+                    fixed_shed=0.3)
+    want = OverloadRuntime(wl, OverloadConfig(
+        **base_cfg, micro_batch=1, plan_cache=False)).run(stream, t_end)
+    for K in KS:
+        got = OverloadRuntime(wl, OverloadConfig(
+            **base_cfg, micro_batch=K, plan_cache=True)).run(stream, t_end)
+        _assert_bitwise(got, want, ("overload", K))
+
+
+def test_microbatch_overload_flush_on_results():
+    """results() drains the deferred backlog: no window may go missing when
+    the stream length is not a multiple of K."""
+    wl, stream, t_end = _named_case("ridesharing", epm=300)
+    a = OverloadRuntime(wl, OverloadConfig(
+        slo_ms=50.0, shed_policy="none", micro_batch=7)).run(stream, t_end)
+    b = OverloadRuntime(wl, OverloadConfig(
+        slo_ms=50.0, shed_policy="none", micro_batch=1)).run(stream, t_end)
+    _assert_bitwise(a, b)
+
+
+# ---------------------------------------------------------------- service
+
+
+def test_microbatch_service_bitwise():
+    wl, stream, t_end = _named_case("ridesharing", epm=200)
+    queries = list(wl.queries)
+    outs = []
+    for K, pc in ((1, False), (4, True), (16, True)):
+        svc = HamletService(wl.schema, queries, micro_batch=K, plan_cache=pc)
+        svc.feed(stream)
+        svc.close()
+        outs.append(dict(svc.results))
+    _assert_bitwise(outs[1], outs[0], "service K=4")
+    _assert_bitwise(outs[2], outs[0], "service K=16")

@@ -461,3 +461,73 @@ def test_service_overload_migration_taints_new_queries():
     assert rep["q1"].subset_guarantee              # survivor keeps history
     wb = svc.overload.accountant.window_bound("q4", 0, 40)
     assert not wb.tight
+
+
+# ------------------------------------- disorder-aware admission control (kr)
+
+
+def test_revision_storm_raises_shed_ratio():
+    """The controller's second cost axis: with latency exactly on the SLO,
+    a revision storm alone must push the shed ratio up (and it must stay at
+    zero when kr is disabled)."""
+    on = LatencyController(slo_ms=20.0, kr=0.5)
+    off = LatencyController(slo_ms=20.0, kr=0.0)
+    for _ in range(10):
+        on.update(20.0, revision_load=2.0)     # storm: 2 revisions/window
+        off.update(20.0, revision_load=2.0)
+    assert on.shed_ratio > 0.2
+    assert off.shed_ratio == 0.0
+    # storm subsides at healthy latency: the integrator unwinds
+    for _ in range(60):
+        on.update(10.0, revision_load=0.0)
+    assert on.shed_ratio < 0.05
+
+
+def test_revision_load_steers_alongside_latency():
+    """Same latency trace, heavier revision load => more shedding."""
+    calm = LatencyController(slo_ms=20.0, kr=0.3)
+    storm = LatencyController(slo_ms=20.0, kr=0.3)
+    for _ in range(15):
+        calm.update(25.0, revision_load=0.0)
+        storm.update(25.0, revision_load=1.5)
+    assert storm.shed_ratio > calm.shed_ratio
+
+
+def test_service_feeds_revision_load_to_controller():
+    """HamletService (event-time + overload attached) charges per-epoch
+    revision records to the controller as the revision-load axis."""
+    from repro.eventtime import EventTimeConfig
+
+    calls = []
+
+    class _SpyController(LatencyController):
+        def update(self, latency_ms, revision_load=0.0):
+            calls.append(revision_load)
+            return super().update(latency_ms, revision_load)
+
+    qs = [Query("q1", Seq(A, Kleene(B)), within=10, slide=10)]
+    svc = HamletService(
+        SCHEMA, qs,
+        overload=OverloadConfig(slo_ms=1e9, shed_policy="none", kr=0.5),
+        eventtime=EventTimeConfig(watermark="bounded_skew", skew=2,
+                                  lateness_horizon=40))
+    svc.overload.controller = _SpyController(slo_ms=1e9, kr=0.5)
+    batch = _stream(n=160, t_max=40, seed=3)
+    svc.feed(batch)
+    svc.close()
+    n_before = len(calls)
+    assert n_before > 0
+    # a straggler storm behind the emitted frontier forces revisions; the
+    # next epoch's controller update must see a positive revision load
+    late = batch.select(np.arange(min(30, len(batch))))
+    late = EventBatch(SCHEMA, late.type_id, np.minimum(late.time, 8),
+                      late.attrs + 1.0, late.group)
+    svc.revise(late)
+    assert len(svc.revisions) > 0
+    nxt = _stream(n=80, t_max=40, seed=4)
+    nxt = EventBatch(SCHEMA, nxt.type_id, nxt.time + 40, nxt.attrs,
+                     nxt.group)
+    svc.feed(nxt)
+    svc.close()
+    assert len(calls) > n_before
+    assert max(calls[n_before:]) > 0.0

@@ -1,0 +1,195 @@
+"""Pane-plan memoization tests.
+
+Unit level: exact hit/miss behaviour on signature changes, the LRU eviction
+bound, and — critically — that plan reuse never freezes the optimizer's
+share/no-share choice (the decision is part of the cache key).
+
+Differential level: plan-cache-on vs -off is bitwise identical, including
+the RunStats evolution the benefit model feeds on (the cached path replays
+the skipped counters), across policies and across the named workload
+shapes.  The four-workload / disorder / overload sweeps live in
+``test_microbatch.py`` next door so both knobs are exercised together.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.engine import HamletRuntime, PaneProcessor, RunStats, vals_equal
+from repro.core.events import EventBatch, StreamSchema
+from repro.core.optimizer import AlwaysShare, DynamicPolicy, NeverShare, _PolicyBase
+from repro.core.pattern import EventType, Kleene, Seq
+from repro.core.plan_cache import PanePlan, PanePlanCache
+from repro.core.query import Pred, Query, Workload, agg_sum, count_star
+
+SCHEMA = StreamSchema(types=("A", "B", "C"), attrs=("v",))
+A, B, C = map(EventType, "ABC")
+
+
+def _wl():
+    return Workload(SCHEMA, [
+        Query("q1", Seq(A, Kleene(B)), aggs=(count_star(), agg_sum("B", "v")),
+              within=20, slide=10),
+        Query("q2", Seq(C, Kleene(B)), preds={"B": [Pred("v", "<", 3)]},
+              within=20, slide=20),
+        Query("q3", Kleene(B), within=20, slide=10),
+    ])
+
+
+def _batch(evs, t0=1):
+    n = len(evs)
+    types = np.array([t for t, _ in evs], dtype=np.int32)
+    attrs = np.array([[float(v)] for _, v in evs]).reshape(n, 1) if n else None
+    return EventBatch(SCHEMA, types, np.arange(t0, t0 + n), attrs)
+
+
+def _assert_bitwise(a, b):
+    assert a.keys() == b.keys()
+    for k in a:
+        assert vals_equal(a[k], b[k]), k
+
+
+# ------------------------------------------------------------------ unit
+
+
+def test_cache_lru_and_eviction_bound():
+    c = PanePlanCache(max_entries=3)
+    for i in range(5):
+        c.put(("k", i), PanePlan(steps=[]))
+    assert len(c) == 3
+    assert c.evictions == 2
+    assert c.get(("k", 0)) is None          # evicted
+    assert c.get(("k", 4)) is not None
+    # get refreshes recency: touching k2 must keep it over k3
+    assert c.get(("k", 2)) is not None
+    c.put(("k", 9), PanePlan(steps=[]))
+    assert c.get(("k", 2)) is not None
+    assert c.get(("k", 3)) is None
+
+
+def test_cache_rejects_zero_bound():
+    with pytest.raises(ValueError):
+        PanePlanCache(max_entries=0)
+
+
+def _plan_once(proc, evs):
+    stats = RunStats()
+    proc.plan(_batch(evs), stats)
+    return stats
+
+
+def test_hit_on_repeated_shape_miss_on_predicate_change():
+    rt = HamletRuntime(_wl(), plan_cache=True)
+    proc = rt.make_processor(0)
+    cache = rt.plan_caches[0]
+    shape = [(0, 1)] + [(1, 1)] * 5          # A then B-run, all v=1 (< 3)
+    _plan_once(proc, shape)
+    assert (cache.hits, cache.misses) == (0, 1)
+    # same type RLE, same predicate bits, different attr values -> hit
+    _plan_once(proc, [(0, 2)] + [(1, 2)] * 5)
+    assert (cache.hits, cache.misses) == (1, 1)
+    # same type RLE but v=4 flips q2's predicate bits -> miss
+    _plan_once(proc, [(0, 1)] + [(1, 4)] * 5)
+    assert (cache.hits, cache.misses) == (1, 2)
+    # different run-length structure -> miss
+    _plan_once(proc, [(0, 1)] + [(1, 1)] * 6)
+    assert (cache.hits, cache.misses) == (1, 3)
+
+
+def test_cached_stats_replay_identical():
+    """The cached plan replays the skipped planning counters, so stats —
+    and everything keyed off them — evolve exactly as without the cache."""
+    rng = np.random.default_rng(7)
+    evs = []
+    for _ in range(60):
+        t = int(rng.integers(0, 3))
+        evs += [(t, int(rng.integers(0, 5)))] * int(rng.integers(1, 7))
+    batch = _batch(evs)
+    t_end = (len(evs) // 40 + 2) * 40
+    for pol in (DynamicPolicy, AlwaysShare, NeverShare):
+        rt_on = HamletRuntime(_wl(), policy=pol(), plan_cache=True)
+        rt_off = HamletRuntime(_wl(), policy=pol(), plan_cache=False)
+        _assert_bitwise(rt_on.run(batch, t_end), rt_off.run(batch, t_end))
+        for f in ("events", "bursts", "graphlets", "shared_graphlets",
+                  "shared_bursts", "split_bursts", "snapshots_created",
+                  "snapshots_propagated", "decisions", "propagate_cells"):
+            assert getattr(rt_on.stats, f) == getattr(rt_off.stats, f), \
+                (pol.__name__, f)
+
+
+# ------------------------------------------- optimizer flips are never stale
+
+
+class _FlippablePolicy(_PolicyBase):
+    """Shares everything or nothing depending on a mutable flag — a stand-in
+    for the dynamic optimizer changing its mind as the stream evolves."""
+
+    def __init__(self):
+        self.share = True
+
+    def decide(self, *, ctx, el, candidates, d_rows, b, n, stats):
+        stats.decisions += 1
+        if self.share:
+            return [list(candidates)]
+        return [[q] for q in candidates]
+
+
+def test_no_stale_sharing_after_optimizer_flip():
+    """The same pane shape planned under a flipped share/no-share choice
+    must not reuse the old plan: the decision is part of the cache key."""
+    wl = _wl()
+    pol = _FlippablePolicy()
+    rt = HamletRuntime(wl, policy=pol, plan_cache=True)
+    proc = rt.make_processor(0)
+    shape = [(0, 1)] + [(1, 1)] * 6
+
+    s_share = RunStats()
+    proc.plan(_batch(shape), s_share)
+    s_share2 = RunStats()
+    proc.plan(_batch(shape), s_share2)
+    assert rt.plan_caches[0].hits == 1          # warm while decision stable
+    assert s_share2.shared_graphlets == s_share.shared_graphlets > 0
+
+    pol.share = False
+    s_split = RunStats()
+    proc.plan(_batch(shape), s_split)
+    # flipped decision -> new key -> freshly planned, non-shared groups
+    assert s_split.shared_graphlets == 0
+    assert rt.plan_caches[0].hits == 1
+
+    # results under the flip match an uncached engine doing the same flips
+    batch = _batch(shape * 3)
+    t_end = 40
+    pol_on, pol_off = _FlippablePolicy(), _FlippablePolicy()
+    pol_on.share = pol_off.share = False
+    _assert_bitwise(
+        HamletRuntime(wl, policy=pol_on, plan_cache=True).run(batch, t_end),
+        HamletRuntime(wl, policy=pol_off, plan_cache=False).run(batch, t_end))
+
+
+def test_dynamic_policy_decides_fresh_on_every_pane():
+    """With the cache on, the optimizer's decide() runs exactly as often as
+    without it (the cache never swallows a decision point)."""
+    rng = np.random.default_rng(1)
+    evs = []
+    for _ in range(50):
+        t = int(rng.integers(0, 3))
+        evs += [(t, int(rng.integers(0, 5)))] * int(rng.integers(1, 7))
+    batch = _batch(evs)
+    rt_on = HamletRuntime(_wl(), policy=DynamicPolicy(), plan_cache=True)
+    rt_off = HamletRuntime(_wl(), policy=DynamicPolicy(), plan_cache=False)
+    rt_on.run(batch, 200)
+    rt_off.run(batch, 200)
+    assert rt_on.stats.decisions == rt_off.stats.decisions > 0
+
+
+# ------------------------------------------------------------ memory bound
+
+
+def test_runtime_cache_respects_entry_bound():
+    rt = HamletRuntime(_wl(), plan_cache=True, plan_cache_size=4)
+    proc = rt.make_processor(0)
+    rng = np.random.default_rng(0)
+    for i in range(12):
+        evs = [(0, 1)] + [(1, 1)] * int(rng.integers(1, 12))
+        _plan_once(proc, evs)
+    assert len(rt.plan_caches[0]) <= 4

@@ -8,10 +8,12 @@ full pane pipeline (plan -> execute -> finalize -> fold) runs in two engine
 configurations:
 
 * ``baseline``  — bucketed batched launches only (plan cache off,
-  ``micro_batch=1``): the pre-plan-cache engine;
-* ``optimized`` — plan cache on + cross-pane fused execution
-  (``micro_batch=8``), measured **warm** (second run over the stream, so
-  repeated pane shapes hit the cache) with the cold run reported alongside.
+  ``micro_batch=1``, sequential per-graphlet finalize): the pre-plan-cache
+  engine;
+* ``optimized`` — plan cache on + cross-pane fused execution + the stacked
+  ``FoldExecutor`` (``micro_batch=16``), measured **warm** (second run over
+  the stream, so repeated pane shapes hit the plan cache and the fold
+  executor's flush-plan cache) with the cold run reported alongside.
 
 Per configuration the JSON records pane/event throughput, the engine's own
 phase split (``RunStats`` wall-clock timers), the plan-cache hit rate, and
@@ -23,7 +25,11 @@ warm speedup degrades by more than ``--rtol`` (default 25%) versus the
 committed JSON.  The check compares *speedup ratios* (optimized vs baseline
 measured in the same process) rather than absolute events/s, so it is
 meaningful across machines of different speeds — a >25% drop in the ratio
-means the optimization itself regressed, not the hardware.
+means the optimization itself regressed, not the hardware.  It additionally
+gates the warm *phase split*: the finalize share must not regress past the
+execute share (within ``--rtol``) on the overload workload — the
+FoldExecutor's acceptance headline (finalize was ~80% of warm pane time
+before it; the fold must never again dominate execution).
 """
 
 from __future__ import annotations
@@ -55,7 +61,7 @@ WORKLOAD_SHAPE = {
     "taxi": dict(kleene_type="Travel", head_types=["Request", "Pickup"]),
 }
 
-MICRO_BATCH = 8
+MICRO_BATCH = 16
 SMOKE = "overload_64plus"          # the workload the CI perf-smoke checks
 
 
@@ -81,8 +87,11 @@ def _cases(quick: bool, only_smoke: bool = False) -> dict:
                 minutes=2 if quick else 4, seed=11)
             cases[name] = (wl, stream, DynamicPolicy())
     # the >= 64-burst overload pane regime (acceptance headline); AlwaysShare
-    # like fig_batched so the measurement isolates engine throughput
-    minutes = 2 if quick else 4
+    # like fig_batched so the measurement isolates engine throughput.  Four
+    # minutes in quick mode yields ~16 qualifying panes — enough depth for
+    # the micro-batcher to fuse a full K=16 flush, which is what amortizes
+    # the fold executor's per-round launches across panes
+    minutes = 4 if quick else 6
     wl = kleene_workload(RIDESHARING_SCHEMA, 4 if quick else 8,
                          kleene_type="Travel",
                          head_types=["Request", "Pickup", "Dropoff"],
@@ -113,19 +122,20 @@ def _min_bursts_filter(wl, stream, min_bursts: int):
 
 
 def _run_once(wl, panes, policy, *, plan_cache: bool, micro_batch: int,
-              warm_rt: HamletRuntime | None = None):
+              fold_exec: bool = True, warm_rt: HamletRuntime | None = None):
     """One timed sweep of the pane pipeline over ``panes``; returns
     (metrics dict, runtime) — pass the runtime back in to measure warm."""
     from repro.core.engine import PaneMicroBatcher
 
     rt = warm_rt if warm_rt is not None else HamletRuntime(
-        wl, policy=policy, plan_cache=plan_cache, micro_batch=micro_batch)
+        wl, policy=policy, plan_cache=plan_cache, micro_batch=micro_batch,
+        fold_exec=fold_exec)
     rt.stats = RunStats()
     launches0 = rt.executor.launches
     cs0 = rt.plan_cache_stats()
     procs = [rt.make_processor(ci) for ci in range(len(rt.ctxs))]
     t0 = time.perf_counter()
-    mb = PaneMicroBatcher(rt.executor, k=micro_batch)
+    mb = PaneMicroBatcher(rt.executor, k=micro_batch, fold_exec=rt.fold_exec)
     backlog = []
     for ev in panes:
         for proc in procs:
@@ -175,7 +185,9 @@ def run_case(wl, stream, policy, quick: bool, min_bursts: int = 0) -> dict:
                 out = nxt
         return out, rt
 
-    baseline, _ = best(plan_cache=False, micro_batch=1)
+    # the baseline keeps the PR2-era sequential finalize: the speedup (and
+    # the phase-share gate) then measure plan cache + fusion + FoldExecutor
+    baseline, _ = best(plan_cache=False, micro_batch=1, fold_exec=False)
     cold, opt_rt = _run_once(wl, panes, policy, plan_cache=True,
                              micro_batch=MICRO_BATCH)
     warm, _ = best(plan_cache=True, micro_batch=MICRO_BATCH, warm_rt=opt_rt)
@@ -188,6 +200,8 @@ def run_case(wl, stream, policy, quick: bool, min_bursts: int = 0) -> dict:
         "speedup_warm": round(speedup, 2),
         "plan_below_execute": (warm["phase_split"]["plan"]
                                < warm["phase_split"]["execute"]),
+        "finalize_below_execute": (warm["phase_split"]["finalize"]
+                                   < warm["phase_split"]["execute"]),
     }
 
 
@@ -246,6 +260,18 @@ def check(rtol: float = 0.25) -> int:
     if got < floor:
         print("FAIL: pane-throughput speedup regressed by more than "
               f"{rtol:.0%} vs the committed trajectory")
+        return 1
+    # phase-share gate: warm finalize must stay at/below the execute share
+    # (the FoldExecutor's acceptance headline), with the same tolerance to
+    # absorb share jitter between the two phases
+    ps = current["optimized"]["phase_split"]
+    fin, exe = ps["finalize"], ps["execute"]
+    print(f"perf-smoke [{SMOKE}]: warm phase shares finalize {fin:.3f} "
+          f"vs execute {exe:.3f} (ceiling {exe * (1.0 + rtol):.3f})")
+    if fin > exe * (1.0 + rtol):
+        print("FAIL: warm finalize phase share regressed past the execute "
+              "share — the stacked fold path is no longer carrying the "
+              "finalize phase")
         return 1
     print("OK")
     return 0

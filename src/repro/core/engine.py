@@ -43,16 +43,29 @@ A pane is processed in three engine phases plus the runtime's window fold:
    backlog *across panes*: up to ``micro_batch`` planned panes flush
    together, one launch per size bucket per K panes, with finalize deferred
    per pane.
-3. **finalize** — a cheap sequential replay in stream order applies negation
-   gates, fills event-level snapshot functionals, and folds coefficient
-   column-sums (one stacked einsum per graphlet) into per-query *state
+3. **finalize** — executed coefficients fold into per-query *state
    functionals* (linear maps over the pane-entry state channels), so the
-   pane yields one transfer matrix ``M[q]`` per query.
+   pane yields one transfer matrix ``M[q]`` per query.  By default this
+   phase runs through the :class:`~repro.core.fold_exec.FoldExecutor`: the
+   pane's steps are *levelized* (each per-query chain of graphlets — and
+   its negation gates — stays strictly ordered; query-disjoint steps share
+   a level) and every level folds as one stacked launch per shape bucket,
+   across the pane **and** across every pane of a micro-batch flush.  The
+   level schedule is cached on the :class:`~repro.core.plan_cache.PanePlan`
+   and the merged K-pane flush plan in the executor's own LRU, so warm
+   panes skip fold planning entirely.  :meth:`PaneProcessor.finalize` keeps
+   the sequential per-graphlet replay as the reference path
+   (``fold_exec=False``) — the two are bitwise identical
+   (``tests/test_fold_exec.py``).
 4. **fold** — sliding-window instances advance with a single batched [C×C]
    matmul per pane — overlapping windows share all per-event work (the
    paper's pane sharing, Sec. 3.1).  Under micro-batching the drained panes
    fold as one stacked matmul chain, in stream order, so the fold stays
-   bitwise identical to per-pane execution.
+   bitwise identical to per-pane execution.  Window *replays* (the
+   event-time revision path) go through the same executor:
+   :meth:`FoldExecutor.fold_windows` is the batched twin of
+   :func:`fold_panes`, re-folding every dirty window of a revision storm
+   as one stacked launch set.
 
 ``RunStats`` carries wall-clock timers for all four phases (``plan_s`` /
 ``execute_s`` / ``finalize_s`` / ``fold_s``) and the plan-cache hit/miss
@@ -76,6 +89,7 @@ import numpy as np
 from ..kernels.ops import DENSE_B_MAX
 from .batch_exec import PaneBatchExecutor, PropagateJob
 from .events import EventBatch, StreamSchema, pane_size_for, split_panes
+from .fold_exec import FoldExecutor
 from .plan_cache import PanePlan, PanePlanCache
 from .query import AtomicQuery, Workload
 from .template import QueryTemplate, build_template
@@ -309,7 +323,8 @@ class _GroupPlan:
 
 class PaneProcessor:
     def __init__(self, ctx: ComponentContext, policy, backend: str = "np",
-                 max_local_basis: int = 512, executor=None, plan_cache=None):
+                 max_local_basis: int = 512, executor=None, plan_cache=None,
+                 fold_exec=None):
         self.ctx = ctx
         self.policy = policy
         self.backend = backend
@@ -317,6 +332,10 @@ class PaneProcessor:
         self.executor = (executor if executor is not None
                          else PaneBatchExecutor(backend=backend))
         self.plan_cache: PanePlanCache | None = plan_cache
+        self.fold_exec = fold_exec
+        # the PanePlan the most recent plan() hit or created (the fold
+        # schedule is cached on it); None when planning uncached
+        self._last_host: PanePlan | None = None
         # static sharing policies decide per (type, candidate set) only:
         # their group layout is memoized per local type
         self._static_groups: dict[int, tuple] = {}
@@ -342,7 +361,7 @@ class PaneProcessor:
         Micro-batching callers drive the phases via :class:`PaneMicroBatcher`
         instead.
         """
-        mb = PaneMicroBatcher(self.executor, k=1)
+        mb = PaneMicroBatcher(self.executor, k=1, fold_exec=self.fold_exec)
         pend = mb.submit(self, pane, stats)
         mb.drain()
         return pend.finalize()
@@ -361,6 +380,7 @@ class PaneProcessor:
 
     def _plan_pane(self, pane: EventBatch, stats: RunStats) -> list:
         ctx = self.ctx
+        self._last_host = None
 
         keep = np.isin(pane.type_id, ctx.relevant_type_ids)
         ev = pane.select(np.nonzero(keep)[0])
@@ -411,7 +431,19 @@ class PaneProcessor:
         # — the per-burst signature walk is skipped entirely
         fast = (cache is not None and static_policy and not neg_type
                 and not has_edge)
+        # dynamic-policy fast signature: pattern-based policies (the benefit
+        # model reads d_rows only through coverage-pattern counts) get the
+        # same whole-pane key, extended with the recomputed sharing decision
+        # — the fingerprint pass below reruns the benefit model per pane on
+        # the *exact* compressed decision inputs, so a benefit flip lands in
+        # a different cache entry instead of freezing the stale decision
+        dyn_fast = (cache is not None and not static_policy
+                    and getattr(self.policy, "pattern_based", False)
+                    and not neg_type and not has_edge
+                    and max((len(ctx.kle_pos[ctx.local[t]]) for t in mv_type),
+                            default=0) < 60)
         key: tuple | None = None
+        dyn_groups: list | None = None
         if fast:
             key = ("F", self.max_local_basis,
                    tuple((tid, sl.stop - sl.start) for tid, sl in runs),
@@ -420,6 +452,17 @@ class PaneProcessor:
             if plan is not None:
                 stats.plan_cache_hits += 1
                 plan.apply_stats(stats)
+                self._last_host = plan
+                return self._instantiate_fast(plan, runs, ev, mv_type)
+            stats.plan_cache_misses += 1
+        elif dyn_fast:
+            dyn_groups, key = self._dyn_fast_groups(runs, ev, mv_type,
+                                                    mv_bytes, present, stats)
+            plan = cache.get(key)
+            if plan is not None:
+                stats.plan_cache_hits += 1
+                plan.apply_stats(stats)
+                self._last_host = plan
                 return self._instantiate_fast(plan, runs, ev, mv_type)
             stats.plan_cache_misses += 1
         dec0 = stats.decisions
@@ -432,7 +475,7 @@ class PaneProcessor:
         plan_bursts: list = []
         sig: list = [(self.max_local_basis,
                       tuple((tid, sl.stop - sl.start) for tid, sl in runs))]
-        for tid, sl in runs:
+        for ri_, (tid, sl) in enumerate(runs):
             b = sl.stop - sl.start
             c = cursor.get(tid, 0)
             cursor[tid] = c + b
@@ -466,11 +509,15 @@ class PaneProcessor:
                 # Decided fresh on every pane — the benefit model tracks the
                 # running event count — and folded into the cache key below.
                 # Static policies (decision independent of the burst) reuse
-                # their memoized per-type group layout.
+                # their memoized per-type group layout; a dyn-fast miss
+                # injects the fingerprint pass's decisions (already counted).
                 kle = ctx.kle_pos[el]
                 memo = (self._static_groups.get(el) if static_policy
                         else None)
-                if memo is not None:
+                if dyn_groups is not None:
+                    groups = dyn_groups[ri_]
+                    groups_sig = None
+                elif memo is not None:
                     groups, groups_sig = memo
                     if len(kle) >= 2:
                         stats.decisions += 1
@@ -497,23 +544,24 @@ class PaneProcessor:
                     if static_policy:
                         self._static_groups[el] = (groups, groups_sig)
                 burst = (tid, el, attrs, b, q_pos, mvec, epm, groups)
-                if cache is not None and not fast:
+                if cache is not None and not fast and not dyn_fast:
                     sig_part = (mv_bytes[tid][c * nq:(c + b) * nq], epm_sig,
                                 groups_sig)
 
             plan_bursts.append((hits, burst))
-            if cache is not None and not fast:
+            if cache is not None and not fast and not dyn_fast:
                 sig.append((
                     tid,
                     None if hits is None else tuple(qi for qi, _ in hits),
                     sig_part))
 
-        if cache is not None and not fast:
+        if cache is not None and not fast and not dyn_fast:
             key = tuple(sig)
             plan = cache.get(key)
             if plan is not None:
                 stats.plan_cache_hits += 1
                 plan.apply_stats(stats)
+                self._last_host = plan
                 return self._instantiate(plan, plan_bursts)
             stats.plan_cache_misses += 1
         before = cache.snapshot_stats(stats) if cache is not None else None
@@ -524,14 +572,17 @@ class PaneProcessor:
             delta = cache.stat_delta(before, stats)
             if fast:
                 # the fast hit skips the per-burst walk, so its sharing
-                # decisions replay via the stat delta too
+                # decisions replay via the stat delta too (a dyn-fast hit
+                # instead reruns the benefit model live, so its decision
+                # counters must *not* be replayed)
                 delta["decisions"] = stats.decisions - dec0
             zero_copy = (not ctx.sum_unit_cols and all(
                 isinstance(s, _NegStep) or len(s.div_rows) == 0
                 for s in steps))
-            cache.put(key, PanePlan(
-                steps=[self._strip(s) for s in steps],
-                stat_delta=delta, zero_copy=zero_copy))
+            plan = PanePlan(steps=[self._strip(s) for s in steps],
+                            stat_delta=delta, zero_copy=zero_copy)
+            cache.put(key, plan)
+            self._last_host = plan
         return steps
 
     def _build_steps(self, plan_bursts: list, stats: RunStats) -> list:
@@ -637,6 +688,80 @@ class PaneProcessor:
         return [(ui, None if tid != type_id
                  else (np.ones(b) if col is None else attrs[:, col]))
                 for ui, tid, col in self.ctx.sum_unit_cols]
+
+    # -- dynamic-policy fast-key fingerprint pass --
+
+    def _dyn_fast_groups(self, runs: list, ev: EventBatch, mv_type: dict,
+                         mv_bytes: dict, present: list,
+                         stats: RunStats) -> tuple[list, tuple]:
+        """Whole-pane fast key for pattern-based dynamic policies.
+
+        Requires an edge-free, negation-free pane.  One vectorized
+        divergence image per type (the stacked twin of
+        :meth:`_divergence_rows` without the edge term) is sliced per burst
+        into coverage-pattern multisets — the benefit model's decision
+        inputs, compressed exactly (see ``optimizer.divergence_patterns``)
+        — and the sharing decision is recomputed from them via
+        ``policy.decide_patterns``.  The decided groups join the fast
+        signature, so zero-copy reuse extends to :class:`~repro.core
+        .optimizer.DynamicPolicy` panes while a benefit flip (the running
+        event count crossing a cost threshold) misses into a fresh entry.
+        Returns (per-run groups for injection into the plan walk, key).
+        """
+        ctx = self.ctx
+        codes_type: dict[int, np.ndarray] = {}
+        for tid, mv in mv_type.items():
+            el = ctx.local[tid]
+            q_pos = ctx.q_pos[el]
+            kle = ctx.kle_pos[el]
+            if len(kle) < 2:
+                continue
+            ri = q_pos.index(kle[0])
+            idx = np.array([q_pos.index(qi) for qi in kle])
+            D = mv[idx] != mv[ri]
+            sdiff = ctx.start_flag[kle, el] != ctx.start_flag[kle[0], el]
+            if sdiff.any():
+                D[sdiff] |= mv[idx[sdiff]] | mv[ri]
+            codes_type[tid] = (
+                (1 << np.arange(len(kle), dtype=np.int64)) @ D)
+        groups_all: list = []
+        sig: list = []
+        cursor: dict[int, int] = {}
+        t_layout = max(1, ctx.layout.t)
+        for tid, sl in runs:
+            b = sl.stop - sl.start
+            c = cursor.get(tid, 0)
+            cursor[tid] = c + b
+            el = ctx.local.get(tid)
+            if el is None or not ctx.q_pos[el]:
+                groups_all.append(None)
+                sig.append(None)
+                continue
+            kle = ctx.kle_pos[el]
+            groups: list = []
+            if len(kle) >= 2:
+                codes = codes_type[tid][c:c + b]
+                codes = codes[codes != 0]
+                vals, counts = np.unique(codes, return_counts=True)
+                shared_sets = self.policy.decide_patterns(
+                    patterns=tuple(zip(vals.tolist(), counts.tolist())),
+                    candidates=kle, b=b, n=stats.events, t=t_layout,
+                    stats=stats)
+                in_shared = set(qq for s in shared_sets for qq in s)
+                groups.extend([s for s in shared_sets if len(s) >= 2])
+                groups.extend([[qi] for s in shared_sets
+                               if len(s) == 1 for qi in s])
+                groups.extend([[qi] for qi in kle if qi not in in_shared])
+            else:
+                groups.extend([[qi] for qi in kle])
+            groups.extend([[qi] for qi in ctx.q_pos[el] if qi not in kle])
+            groups_all.append(groups)
+            sig.append(tuple(map(tuple, groups)))
+        key = ("FD", self.max_local_basis,
+               tuple((tid, sl.stop - sl.start) for tid, sl in runs),
+               tuple(mv_bytes[t] for t in present if t in mv_bytes),
+               tuple(sig))
+        return groups_all, key
 
     # -- divergence detection (per-event signature differences) --
 
@@ -834,9 +959,16 @@ class PaneProcessor:
 
     def finalize(self, steps: list, stats: RunStats,
                  jobs: list) -> np.ndarray:
-        """Phase 3: fold executed coefficients into the state functionals
-        and assemble the pane's per-query transfer matrices M [k, C, C].
-        ``jobs`` is the pending pane's handle list, parallel to ``steps``."""
+        """Phase 3, sequential reference path: fold executed coefficients
+        into the state functionals and assemble the pane's per-query
+        transfer matrices M [k, C, C].  ``jobs`` is the pending pane's
+        handle list, parallel to ``steps``.
+
+        With a :class:`~repro.core.fold_exec.FoldExecutor` attached the
+        micro-batcher folds pending panes through it instead (stacked
+        per-shape launches, bitwise identical to this replay); this method
+        remains the ``fold_exec=False`` oracle the differential suite pins
+        the executor against."""
         t_f = perf_counter()
         ctx = self.ctx
         C = ctx.layout.size
@@ -975,12 +1107,15 @@ class _PendingPane:
 
     ``jobs`` holds the executor handles parallel to ``steps`` — kept off the
     (possibly cache-shared) plan objects so the same planned shape can be in
-    flight for several panes of one micro-batch at once."""
+    flight for several panes of one micro-batch at once.  ``plan_host`` is
+    the :class:`~repro.core.plan_cache.PanePlan` this pane hit or created
+    (the fold executor caches its level schedule there)."""
 
     proc: PaneProcessor
     steps: list
     stats: RunStats
     jobs: list = field(default_factory=list)
+    plan_host: object = None
     M: np.ndarray | None = None
 
     def finalize(self) -> np.ndarray:
@@ -996,13 +1131,18 @@ class PaneMicroBatcher:
     identical to per-pane execution, which keeps the optimizer's running
     event count, and hence every sharing decision, bitwise reproducible);
     ``drain`` runs both execute rounds for *all* pending panes through the
-    shared executor — one launch per size bucket per K panes — and returns
-    the pending panes for deferred, in-order finalization.  ``k`` is the
-    micro-batch size; ``k=1`` degrades to exact per-pane execution.
+    shared executor — one launch per size bucket per K panes — then, when a
+    :class:`~repro.core.fold_exec.FoldExecutor` is attached, folds every
+    pending pane's finalize backlog with one stacked launch set (one flush =
+    one plan + one execute + one fold launch set) and returns the pending
+    panes for deferred, in-order consumption.  ``k`` is the micro-batch
+    size; ``k=1`` degrades to exact per-pane execution.
     """
 
-    def __init__(self, executor: PaneBatchExecutor, k: int = 1):
+    def __init__(self, executor: PaneBatchExecutor, k: int = 1,
+                 fold_exec=None):
         self.executor = executor
+        self.fold_exec = fold_exec
         self.k = max(1, int(k))
         self._pending: list[_PendingPane] = []
 
@@ -1012,7 +1152,8 @@ class PaneMicroBatcher:
     def submit(self, proc: PaneProcessor, pane: EventBatch,
                stats: RunStats) -> _PendingPane:
         steps = proc.plan(pane, stats)
-        pend = _PendingPane(proc, steps, stats, jobs=[None] * len(steps))
+        pend = _PendingPane(proc, steps, stats, jobs=[None] * len(steps),
+                            plan_host=proc._last_host)
         self._pending.append(pend)
         return pend
 
@@ -1036,6 +1177,17 @@ class PaneMicroBatcher:
         dt = (perf_counter() - t0) / len(pend)
         for p in pend:
             p.stats.execute_s += dt
+        fe = self.fold_exec
+        if fe is not None:
+            t1 = perf_counter()
+            fjobs = [fe.submit(p.proc, p.steps, p.jobs, p.stats,
+                               host=p.plan_host) for p in pend]
+            fe.flush()
+            for p, fj in zip(pend, fjobs):
+                p.M = fj.M
+            dt = (perf_counter() - t1) / len(pend)
+            for p in pend:
+                p.stats.finalize_s += dt
         return pend
 
 
@@ -1094,7 +1246,7 @@ class HamletRuntime:
     def __init__(self, workload: Workload, policy=None, backend: str = "np",
                  batch_exec: bool = True, shard_slices=None,
                  micro_batch: int = 1, plan_cache: bool = True,
-                 plan_cache_size: int = 128):
+                 plan_cache_size: int = 128, fold_exec: bool = True):
         from .optimizer import DynamicPolicy
 
         self.workload = workload
@@ -1112,6 +1264,9 @@ class HamletRuntime:
         # any component — funnels its jobs through the same bucketed batches
         self.executor = PaneBatchExecutor(backend=backend, batched=batch_exec,
                                           shard_slices=shard_slices)
+        # one fold executor likewise: finalize backlogs of every pending
+        # pane fold as stacked per-shape launches (None = sequential replay)
+        self.fold_exec = FoldExecutor(backend=backend) if fold_exec else None
         self.stats = RunStats()
         self._empty_M: list[np.ndarray] | None = None
 
@@ -1120,7 +1275,8 @@ class HamletRuntime:
         executor and plan cache (used by the overload / event-time layers)."""
         return PaneProcessor(self.ctxs[ci], self.policy, backend=self.backend,
                              executor=self.executor,
-                             plan_cache=self.plan_caches[ci])
+                             plan_cache=self.plan_caches[ci],
+                             fold_exec=self.fold_exec)
 
     def plan_cache_stats(self) -> dict:
         """Aggregate plan-cache counters across components."""
@@ -1170,7 +1326,8 @@ class HamletRuntime:
         for ic, (comp, ctx) in enumerate(zip(self.components, self.ctxs)):
             proc = self.make_processor(ic)
             insts: list[dict[int, _Instance]] = [dict() for _ in comp]
-            mb = PaneMicroBatcher(self.executor, k=self.micro_batch)
+            mb = PaneMicroBatcher(self.executor, k=self.micro_batch,
+                                  fold_exec=self.fold_exec)
             backlog: list[tuple[int, EventBatch, _PendingPane]] = []
 
             def flush_backlog():

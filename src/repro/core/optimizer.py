@@ -26,7 +26,8 @@ import numpy as np
 
 from . import benefit as B
 
-__all__ = ["DynamicPolicy", "AlwaysShare", "NeverShare", "FlopPolicy"]
+__all__ = ["DynamicPolicy", "AlwaysShare", "NeverShare", "FlopPolicy",
+           "divergence_patterns"]
 
 
 def _union_count(d_rows: dict[int, np.ndarray], S) -> int:
@@ -36,11 +37,49 @@ def _union_count(d_rows: dict[int, np.ndarray], S) -> int:
     return int(np.any(np.stack(rows), axis=0).sum())
 
 
+def divergence_patterns(d_rows: dict[int, np.ndarray],
+                        candidates) -> tuple:
+    """Exact compression of ``d_rows`` into everything the benefit model can
+    read: the multiset of per-event *coverage patterns* — for each burst
+    event, the subset of candidates whose signature diverges there (a
+    bitmask over ``candidates``), with multiplicity.  Any subset's snapshot
+    union count is recoverable exactly (sum the counts of intersecting
+    patterns), so decisions taken from patterns are bit-for-bit the
+    decisions taken from the raw rows.  This is the plan cache's quantized
+    benefit-model fingerprint: two panes with equal patterns (and equal
+    ``b``/``n``) provably take the same sharing decision."""
+    if not candidates:
+        return ()
+    D = np.stack([np.asarray(d_rows[q], dtype=bool) for q in candidates])
+    if len(candidates) < 60:
+        codes = (1 << np.arange(len(candidates), dtype=np.int64)) @ D
+        codes = codes[codes != 0]
+        if not len(codes):
+            return ()
+        vals, counts = np.unique(codes, return_counts=True)
+        return tuple(zip(vals.tolist(), counts.tolist()))
+    # wide candidate sets overflow a fixed-width bitmask: pack each event's
+    # coverage column into bytes and rebuild arbitrary-width Python ints
+    packed = np.packbits(D, axis=0, bitorder="little")
+    cols, counts = np.unique(packed, axis=1, return_counts=True)
+    out = []
+    for ci in range(cols.shape[1]):
+        mask = int.from_bytes(cols[:, ci].tobytes(), "little")
+        if mask:
+            out.append((mask, int(counts[ci])))
+    return tuple(sorted(out))
+
+
 class _PolicyBase:
     # True when ``decide`` never reads ``d_rows`` (nor any other per-burst
     # structure): the engine then skips the divergence pass entirely and the
     # policy is handed ``d_rows=None``
     decision_static = False
+    # True when the decision reads ``d_rows`` only through coverage-pattern
+    # counts (``divergence_patterns``): the engine's dynamic-policy plan-key
+    # fast path then recomputes the decision from a vectorized fingerprint
+    # via ``decide_patterns`` instead of the per-burst plan walk
+    pattern_based = False
 
     def decide(self, *, ctx, el, candidates, d_rows, b, n, stats) -> list[list[int]]:
         raise NotImplementedError
@@ -76,6 +115,8 @@ class DynamicPolicy(_PolicyBase):
     the classification with a single-move local search (beyond-paper; still
     O(m^2) plan evaluations per burst, m = snapshot-introducing queries)."""
 
+    pattern_based = True
+
     def __init__(self, model: str = "v1", local_search: bool = True):
         self.model = model
         self.local_search = local_search
@@ -88,54 +129,70 @@ class DynamicPolicy(_PolicyBase):
         return B.benefit_v2(b=b, n=n, s_p=s_p, s_c=s_c, k=k, g=g, p=max(1, t // 2))
 
     def decide(self, *, ctx, el, candidates, d_rows, b, n, stats):
+        return self.decide_patterns(
+            patterns=divergence_patterns(d_rows, candidates),
+            candidates=candidates, b=b, n=n, t=max(1, ctx.layout.t),
+            stats=stats)
+
+    def decide_patterns(self, *, patterns, candidates, b, n, t, stats):
+        """Decide from the compressed decision inputs: every snapshot union
+        count the classification / refinement reads is recovered from the
+        coverage-pattern multiset, so this is bit-for-bit :meth:`decide` —
+        the engine's plan-key fast path calls it straight off a vectorized
+        per-burst fingerprint (see ``engine._dyn_fast_groups``)."""
         stats.decisions += 1
         n = max(n, b)
-        t = max(1, ctx.layout.t)
         g = b
+        bit = {q: 1 << i for i, q in enumerate(candidates)}
 
-        d_q = {q: int(d_rows[q].sum()) for q in candidates}
+        def union(S) -> int:
+            m = 0
+            for q in S:
+                m |= bit[q]
+            return sum(c for code, c in patterns if code & m)
+
+        d_q = {q: union((q,)) for q in candidates}
         free = [q for q in candidates if d_q[q] == 0]   # Thm 4.1: share for free
         snap = [q for q in candidates if d_q[q] > 0]
 
         shared = list(free)
         Q = list(candidates)
-        full = self._costs(s_new=_union_count(d_rows, Q), b=b, n=n, k=len(Q),
-                           g=g, t=t)
+        full = self._costs(s_new=union(Q), b=b, n=n, k=len(Q), g=g, t=t)
         for q in snap:                                   # Thm 4.2 classification
             without_q = [x for x in Q if x != q]
-            alt = (self._costs(s_new=_union_count(d_rows, without_q), b=b, n=n,
+            alt = (self._costs(s_new=union(without_q), b=b, n=n,
                                k=len(without_q), g=g, t=t).shared
                    + B.nonshared_cost_v1(b, n, 1))
             if full.shared <= alt:
                 shared.append(q)
 
         if self.local_search:
-            shared = self._refine(shared, candidates, d_rows, b, n, g, t)
+            shared = self._refine(shared, candidates, union, b, n, g, t)
 
         if len(shared) < 2:
             return [[q] for q in candidates]
-        final = self._costs(s_new=_union_count(d_rows, shared), b=b, n=n,
+        final = self._costs(s_new=union(shared), b=b, n=n,
                             k=len(shared), g=g, t=t)
         if final.benefit <= 0:
             stats.split_bursts += 1
             return [[q] for q in candidates]
         return [shared] + [[q] for q in candidates if q not in shared]
 
-    def _plan_cost(self, S, candidates, d_rows, b, n, g, t) -> float:
+    def _plan_cost(self, S, candidates, union, b, n, g, t) -> float:
         rest = len(candidates) - len(S)
         cost = B.nonshared_cost_v1(b, n, rest) if rest else 0.0
         if len(S) >= 2:
-            cost += self._costs(s_new=_union_count(d_rows, S), b=b, n=n,
+            cost += self._costs(s_new=union(S), b=b, n=n,
                                 k=len(S), g=g, t=t).shared
         elif len(S) == 1:
             cost += B.nonshared_cost_v1(b, n, 1)
         return cost
 
-    def _refine(self, shared, candidates, d_rows, b, n, g, t) -> list[int]:
+    def _refine(self, shared, candidates, union, b, n, g, t) -> list[int]:
         """Multi-start single-move local search over shared-set membership."""
 
         def descend(S: set) -> tuple[set, float]:
-            best = self._plan_cost(S, candidates, d_rows, b, n, g, t)
+            best = self._plan_cost(S, candidates, union, b, n, g, t)
             improved = True
             while improved:
                 improved = False
@@ -143,7 +200,7 @@ class DynamicPolicy(_PolicyBase):
                     S2 = S ^ {q}
                     if len(S2) == 1:
                         continue
-                    c2 = self._plan_cost(S2, candidates, d_rows, b, n, g, t)
+                    c2 = self._plan_cost(S2, candidates, union, b, n, g, t)
                     if c2 < best - 1e-12:
                         S, best, improved = S2, c2, True
             return S, best
@@ -154,7 +211,7 @@ class DynamicPolicy(_PolicyBase):
             pair = min(
                 ((a, c) for i, a in enumerate(candidates)
                  for c in candidates[i + 1:]),
-                key=lambda p: self._plan_cost(set(p), candidates, d_rows,
+                key=lambda p: self._plan_cost(set(p), candidates, union,
                                               b, n, g, t))
             starts.append(set(pair))
         best_S, best_c = None, float("inf")

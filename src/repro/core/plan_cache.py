@@ -57,11 +57,17 @@ class PanePlan:
     ``zero_copy`` marks a plan none of whose steps carry per-pane data (no
     divergent rows, no sum-unit injection values, no negation steps): the
     cached step list is then reused *as is* on a hit — job handles live on
-    the pending pane, so the shared plan objects are never written."""
+    the pending pane, so the shared plan objects are never written.
+
+    ``fold_schedule`` memoizes the fold executor's level/bucket schedule
+    (``core/fold_exec.py``) for this plan's step list — structural like the
+    steps themselves, filled in lazily on the first fold, so warm panes skip
+    fold planning entirely."""
 
     steps: list
     stat_delta: dict = field(default_factory=dict)
     zero_copy: bool = False
+    fold_schedule: object = None
 
     def apply_stats(self, stats) -> None:
         for f, v in self.stat_delta.items():

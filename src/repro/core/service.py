@@ -178,15 +178,17 @@ class OutOfOrderBuffer:
 class HamletService:
     """Incremental HAMLET with dynamic workload changes at epoch boundaries.
 
-    ``micro_batch`` / ``plan_cache`` pass through to the replay
-    :class:`HamletRuntime` (cross-pane fused launches, pane-plan
-    memoization — see ``core/engine.py``); the runtime is reused while the
-    workload is unchanged so the plan caches stay warm across epochs."""
+    ``micro_batch`` / ``plan_cache`` / ``fold_exec`` pass through to the
+    replay :class:`HamletRuntime` (cross-pane fused launches, pane-plan
+    memoization, the stacked finalize/fold executor — see
+    ``core/engine.py``); the runtime is reused while the workload is
+    unchanged so the plan caches stay warm across epochs."""
 
     def __init__(self, schema, queries: list[Query], policy=None,
                  lateness: int = 0, sharable_mode: str = "units",
                  overload=None, batch_exec: bool = True, eventtime=None,
-                 micro_batch: int = 1, plan_cache: bool = True):
+                 micro_batch: int = 1, plan_cache: bool = True,
+                 fold_exec: bool = True):
         from .events import pane_size_for
 
         self.schema = schema
@@ -195,6 +197,7 @@ class HamletService:
         self.batch_exec = batch_exec
         self.micro_batch = max(1, int(micro_batch))
         self.plan_cache = plan_cache
+        self.fold_exec = fold_exec
         # the replay runtime is reused while the workload is unchanged, so
         # the per-component plan caches (and the executor's staging buffers)
         # stay warm across epochs; query add/remove rebuilds it
@@ -449,7 +452,8 @@ class HamletService:
             self._rt = HamletRuntime(self._workload(), policy=self.policy,
                                      batch_exec=self.batch_exec,
                                      micro_batch=self.micro_batch,
-                                     plan_cache=self.plan_cache)
+                                     plan_cache=self.plan_cache,
+                                     fold_exec=self.fold_exec)
             self._rt_stale = False
         self._rt.stats = RunStats()
         return self._rt

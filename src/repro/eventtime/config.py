@@ -32,6 +32,20 @@ class EventTimeConfig:
                        the global max by more than this stops holding the
                        watermark back (None = silent groups hold it forever;
                        send heartbeats to advance)
+    max_retained_panes caps, per group partition, how many panes retain
+                       their raw events for revision (bounded revision
+                       memory).  When the cap is exceeded the *oldest*
+                       retained panes are evicted: the pane is executed if
+                       it has not been yet, its transfer matrices are kept
+                       (emission and re-folds of *other* panes stay exact),
+                       but its raw ``EventBatch`` is dropped — the evicted
+                       events are expired into the shedding accountant
+                       (``late_events``; bound certificates withdrawn) and
+                       any later straggler landing in an evicted pane is
+                       expired instead of absorbed.  MIN/MAX aggregates of
+                       still-revisable windows covering an evicted pane lose
+                       that pane's events.  None = retain for the whole
+                       lateness horizon
     lateness_horizon   bounds how long pane state is retained for revision.
                        The speculative runtime expires an event only once
                        its pane has been *retired* (no still-revisable
@@ -57,6 +71,7 @@ class EventTimeConfig:
     percentile_window: int = 256
     max_skew: int | None = None
     idle_timeout: int | None = None
+    max_retained_panes: int | None = None
     lateness_horizon: int | None = None
     speculative: bool = True
 
@@ -70,3 +85,5 @@ class EventTimeConfig:
             raise ValueError("percentile must be in (0, 100]")
         if self.lateness_horizon is not None and self.lateness_horizon < 0:
             raise ValueError("lateness_horizon must be non-negative")
+        if self.max_retained_panes is not None and self.max_retained_panes < 1:
+            raise ValueError("max_retained_panes must be >= 1")

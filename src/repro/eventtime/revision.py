@@ -14,9 +14,12 @@ A late event that lands in an already-executed pane triggers *revision*:
   pipeline over its merged event set — one pane's graphlets, one bucketed
   batched launch, not a from-scratch rerun of the stream;
 * every already-emitted window covering that pane is **re-folded** from the
-  stored transfer matrices (:func:`~repro.core.engine.fold_panes`): the
-  clean panes' ``M`` are reused as-is, only the dirty pane contributes new
-  work;
+  stored transfer matrices: the clean panes' ``M`` are reused as-is, only
+  the dirty pane contributes new work — and all dirty windows of a
+  revision storm fold together as one stacked launch set through the
+  runtime's :class:`~repro.core.fold_exec.FoldExecutor`
+  (:meth:`~repro.core.fold_exec.FoldExecutor.fold_windows`, the batched
+  twin of :func:`~repro.core.engine.fold_panes`);
 * windows whose value changed produce a ``retract`` record (the superseded
   value) followed by an ``amend`` record (the new value) on the output
   channel — changelog semantics a downstream sink can apply idempotently.
@@ -24,7 +27,11 @@ A late event that lands in an already-executed pane triggers *revision*:
 An event is *expired* only when its pane state has been retired — once no
 still-revisable window covers the pane (``watermark - lateness_horizon -
 max(within)`` behind); anything landing in a live pane is absorbed exactly,
-however late.  Expired events are counted, never folded in, and — when an
+however late.  ``max_retained_panes`` additionally bounds revision *memory*:
+beyond the per-group cap the oldest panes are evicted — their transfer
+matrices survive (emission and re-folds of other panes stay exact) but the
+raw events are expired into the accountant and later stragglers into them
+expire too.  Expired events are counted, never folded in, and — when an
 :class:`ErrorAccountant` is attached — charged as (unwitnessed) shed events,
 so the overload subsystem's ``true <= 3^s * emitted`` accounting stays sound
 under disorder.
@@ -38,6 +45,7 @@ measures the emission-latency gap between the two modes.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
+from time import perf_counter
 
 import numpy as np
 
@@ -82,6 +90,7 @@ class EmissionRecord:
 class EventTimeMetrics:
     ingested: int = 0
     expired: int = 0
+    evicted_panes: int = 0       # bounded revision memory (max_retained_panes)
     panes_executed: int = 0
     panes_revised: int = 0
     windows_emitted: int = 0
@@ -100,6 +109,7 @@ class EventTimeMetrics:
         return {
             "ingested": self.ingested,
             "expired": self.expired,
+            "evicted_panes": self.evicted_panes,
             "panes_executed": self.panes_executed,
             "panes_revised": self.panes_revised,
             "windows_emitted": self.windows_emitted,
@@ -118,18 +128,20 @@ class EventTimeMetrics:
 class _PaneState:
     events: EventBatch
     M: list[np.ndarray] | None = None    # per component: [k, C, C]
+    evicted: bool = False                # events dropped (bounded memory)
 
 
 class EventTimeRuntime:
     def __init__(self, workload: Workload, config: EventTimeConfig,
                  policy=None, backend: str = "np", batch_exec: bool = True,
                  accountant=None, micro_batch: int = 1,
-                 plan_cache: bool = True):
+                 plan_cache: bool = True, fold_exec: bool = True):
         self.workload = workload
         self.config = config
         self.micro_batch = max(1, int(micro_batch))
         self.rt = HamletRuntime(workload, policy=policy, backend=backend,
-                                batch_exec=batch_exec, plan_cache=plan_cache)
+                                batch_exec=batch_exec, plan_cache=plan_cache,
+                                fold_exec=fold_exec)
         self.pane = self.rt.pane
         self.stats = self.rt.stats
         self.metrics = EventTimeMetrics()
@@ -146,6 +158,10 @@ class EventTimeRuntime:
         self._atomic: dict[tuple[int, int, int], dict] = {}
         self._revno: dict[tuple[int, int, int], int] = {}
         self._next_w0: dict[tuple[int, int], int] = {}
+        # bounded revision memory: (group, t0) eviction log, oldest first
+        # (itself bounded — metrics.evicted_panes carries the full count)
+        self.evictions: list[tuple[int, int]] = []
+        self._evictions_keep = 4096
 
     # -- producer side -----------------------------------------------------
 
@@ -259,7 +275,8 @@ class EventTimeRuntime:
         propagation backlog once per ``micro_batch`` panes."""
         if self.micro_batch <= 1 or not jobs:
             return
-        mb = PaneMicroBatcher(self.rt.executor, k=self.micro_batch)
+        mb = PaneMicroBatcher(self.rt.executor, k=self.micro_batch,
+                              fold_exec=self.rt.fold_exec)
         batch: list = []
         seen: set[int] = set()
 
@@ -305,6 +322,15 @@ class EventTimeRuntime:
                 ps = panes.get(t0)
                 if ps is None:
                     panes[t0] = _PaneState(events=sub)
+                elif ps.evicted:
+                    # bounded revision memory: the pane's raw events are
+                    # gone, so a merge would rebuild a partial pane and
+                    # corrupt final windows — expire the straggler instead
+                    self.metrics.expired += len(sub)
+                    if self.accountant is not None:
+                        self.accountant.record(sub, witnessed=False,
+                                               late=True)
+                    continue
                 else:
                     ps.events = EventBatch.merge([ps.events, sub])
                     ps.M = None
@@ -347,7 +373,11 @@ class EventTimeRuntime:
 
     # -- window folding ----------------------------------------------------
 
-    def _window_vals(self, g: int, ic: int, ci: int, ctx, q, w0: int) -> dict:
+    def _window_chain(self, g: int, ic: int, ci: int, ctx, q,
+                      w0: int) -> tuple[list, list]:
+        """Gather one window's pane transfer-matrix chain (executing any
+        still-pending pane lazily, in ascending ``t0`` order) plus the
+        retained events MIN/MAX aggregates need."""
         panes = self._panes.get(g, {})
         empty_M = self.rt.empty_pane_matrices()[ic]
         needs_minmax = ci in ctx.minmax_queries
@@ -361,13 +391,36 @@ class EventTimeRuntime:
                 Ms.append(self._ensure_executed(g, ps)[ic][ci])
                 if needs_minmax and len(ps.events):
                     evs.append(ps.events)
-        u = fold_panes(Ms, ctx.layout.fresh_state())
-        return self.rt._emit(ctx, ci, q, _Instance(w0, u, events=evs), g)
+        return Ms, evs
+
+    def _fold_windows(self, wins: list) -> list[dict]:
+        """Fold + emit a batch of windows (``wins`` rows as produced by
+        ``_emit_ready``/``_revise``).  The chain gather walks the windows in
+        order (pane execution order — and with it every sharing decision —
+        stays the sequential one); the folds then run as **one stacked
+        launch set** through the runtime's :class:`~repro.core.fold_exec
+        .FoldExecutor` (per-window :func:`fold_panes` when it is detached) —
+        a revision storm re-folds every dirty window together."""
+        rt = self.rt
+        chains = [self._window_chain(g, ic, ci, ctx, q, w0)
+                  for g, ic, ci, ctx, q, _aqi, w0 in wins]
+        t_f = perf_counter()
+        if rt.fold_exec is not None:
+            us = rt.fold_exec.fold_windows(
+                [(wins[i][3].layout.fresh_state(), Ms)
+                 for i, (Ms, _evs) in enumerate(chains)])
+        else:
+            us = [fold_panes(Ms, wins[i][3].layout.fresh_state())
+                  for i, (Ms, _evs) in enumerate(chains)]
+        self.stats.fold_s += perf_counter() - t_f
+        return [rt._emit(ctx, ci, q, _Instance(w0, u, events=evs), g)
+                for (g, _ic, ci, ctx, q, _aqi, w0), u, (_Ms, evs)
+                in zip(wins, us, chains)]
 
     def _unexecuted_panes(self, g: int, w0: int, q) -> list:
         """The window's pane states still awaiting execution, in the fold's
         own (ascending ``t0``) order — the one definition both the fused
-        prefetch and the lazy :meth:`_window_vals` walk derive from, so
+        prefetch and the lazy :meth:`_window_chain` walk derive from, so
         their execution orders cannot drift apart."""
         panes = self._panes.get(g, {})
         out = []
@@ -402,8 +455,8 @@ class EventTimeRuntime:
             self._prefetch([job for g, _ic, _ci, _ctx, q, _aqi, w0 in wins
                             for job in self._unexecuted_panes(g, w0, q)])
         sealed = ((self.wm.watermark() + 1) // self.pane) * self.pane
-        for g, ic, ci, ctx, q, aqi, w0 in wins:
-            vals = self._window_vals(g, ic, ci, ctx, q, w0)
+        vals_list = self._fold_windows(wins)
+        for (g, ic, ci, ctx, q, aqi, w0), vals in zip(wins, vals_list):
             key = (aqi, g, w0)
             self._atomic[key] = vals
             self._revno[key] = 0
@@ -442,10 +495,11 @@ class EventTimeRuntime:
                             for job in self._unexecuted_panes(
                                 g, w0, rt.workload.atomic[aqi])])
         records: list[EmissionRecord] = []
-        for (aqi, g, w0), (ic, ci) in ordered:
-            ctx = rt.ctxs[ic]
+        win_rows = [(g, ic, ci, rt.ctxs[ic], rt.workload.atomic[aqi], aqi, w0)
+                    for (aqi, g, w0), (ic, ci) in ordered]
+        news = self._fold_windows(win_rows)
+        for ((aqi, g, w0), (_ic, _ci)), new in zip(ordered, news):
             q = rt.workload.atomic[aqi]
-            new = self._window_vals(g, ic, ci, ctx, q, w0)
             old = self._atomic[(aqi, g, w0)]
             if vals_equal(old, new):
                 self.metrics.noop_revisions += 1
@@ -463,13 +517,44 @@ class EventTimeRuntime:
     def _retire(self) -> None:
         """Drop pane state no still-revisable window can reference: with a
         lateness horizon, panes older than ``watermark - horizon -
-        max(within)`` only serve windows that are already final."""
-        if self.config.lateness_horizon is None:
+        max(within)`` only serve windows that are already final.  With
+        ``max_retained_panes`` set, additionally bound revision *memory*:
+        evict the oldest event-retaining panes beyond the per-group cap."""
+        if self.config.lateness_horizon is not None:
+            bound = self.wm.watermark() - self.config.lateness_horizon
+            for g, panes in self._panes.items():
+                for t0 in [t for t in panes if t + self.max_within <= bound]:
+                    del panes[t0]
+        cap = self.config.max_retained_panes
+        if cap is None:
             return
-        bound = self.wm.watermark() - self.config.lateness_horizon
         for g, panes in self._panes.items():
-            for t0 in [t for t in panes if t + self.max_within <= bound]:
-                del panes[t0]
+            live = sorted(t0 for t0, ps in panes.items() if not ps.evicted)
+            for t0 in live[:max(0, len(live) - cap)]:
+                self._evict(g, t0)
+
+    def _evict(self, g: int, t0: int) -> None:
+        """Bounded revision memory: keep the pane's transfer matrices (so
+        emission and re-folds of *other* dirty panes stay exact) but drop
+        its raw events.  The dropped events are expired into the shedding
+        accountant — every certificate a straggler into this pane could
+        have invalidated is withdrawn — and later stragglers into the pane
+        expire instead of absorbing (see :meth:`_absorb`)."""
+        ps = self._panes[g][t0]
+        self._ensure_executed(g, ps)
+        if len(ps.events):
+            # the events *were* folded (the pane's M survives), so they are
+            # not counted as expired — but their revisability is gone, so
+            # the accountant withdraws every certificate they back
+            if self.accountant is not None:
+                self.accountant.record(ps.events, witnessed=False, late=True)
+        ps.events = EventBatch(self.workload.schema, np.array([], np.int32),
+                               np.array([], np.int64), None)
+        ps.evicted = True
+        self.metrics.evicted_panes += 1
+        self.evictions.append((g, t0))
+        if len(self.evictions) > self._evictions_keep:
+            del self.evictions[:len(self.evictions) - self._evictions_keep]
 
     # -- convenience driver ------------------------------------------------
 

@@ -19,7 +19,7 @@ from . import ref
 from .hamlet_propagate import masked_prefix_propagate_pallas
 
 __all__ = ["propagate", "propagate_batched", "propagate_dense",
-           "propagate_dense_batched", "device_get_all",
+           "propagate_dense_batched", "fold_stacked", "device_get_all",
            "PROPAGATE_BACKENDS", "DENSE_B_MAX"]
 
 # largest burst the dense closed form handles exactly (2^b weight range);
@@ -107,6 +107,37 @@ def device_get_all(arrays: list) -> list[np.ndarray]:
     if all(isinstance(a, np.ndarray) for a in arrays):
         return list(arrays)
     return [np.asarray(a) for a in jax.device_get(list(arrays))]
+
+
+def fold_stacked(u0, Ms, *, backend: str = "np"):
+    """Stacked window-chain fold: ``u0 [N, C]``, ``Ms [N, n, C, C]`` ->
+    ``[N, C]``.
+
+    Slice ``i`` applies the chain ``u = u @ M.T`` over ``Ms[i, 0..n)`` in
+    order — the :func:`repro.core.engine.fold_panes` recurrence — so each
+    slice is bitwise equal to the per-window fold (the same stacked-matmul
+    twin convention as ``propagate_batched``).  One call folds a whole
+    bucket of same-length windows: a revision storm re-folds every dirty
+    window with ``n`` launches instead of ``n`` per window.
+
+    On the jax backends the result stays device-resident; callers batch
+    several buckets and resolve them with **one** :func:`device_get_all`
+    sync (see ``core/fold_exec.py``).
+    """
+    n = np.shape(Ms)[1] if np.ndim(Ms) >= 2 else 0
+    if backend == "np":
+        U = np.asarray(u0)
+        Ms = np.asarray(Ms)
+        with np.errstate(over="ignore", invalid="ignore"):
+            for j in range(n):
+                U = np.matmul(U[:, None, :],
+                              np.swapaxes(Ms[:, j], 1, 2))[:, 0]
+        return U
+    U = jnp.asarray(u0)
+    Ms = jnp.asarray(Ms)
+    for j in range(n):
+        U = jnp.matmul(U[:, None, :], jnp.swapaxes(Ms[:, j], 1, 2))[:, 0]
+    return U
 
 
 def propagate(base, mask, *, backend: str = "np", tile: int = 128,

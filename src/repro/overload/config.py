@@ -49,6 +49,9 @@ class OverloadConfig:
                        per micro-batch); 1 = exact per-pane control loop
     plan_cache         enable the engine's pane-plan memoization (see
                        ``core/plan_cache.py``)
+    fold_exec          enable the stacked finalize/fold executor (see
+                       ``core/fold_exec.py``); off = the sequential
+                       per-graphlet replay (bitwise-identical results)
     fixed_shed         if set, bypass the controller and shed this constant
                        fraction (used for equal-ratio policy comparisons)
     min_burst_keep     fraction of each Kleene burst the benefit-weighted
@@ -75,6 +78,7 @@ class OverloadConfig:
     fixed_shed: float | None = None
     micro_batch: int = 1
     plan_cache: bool = True
+    fold_exec: bool = True
     min_burst_keep: float = 0.25
     benefit_model: str = "v1"
     seed: int = 0

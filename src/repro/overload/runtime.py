@@ -159,7 +159,8 @@ class _GroupDriver:
     def advance(self, pane_ev: EventBatch, t0: int, out: dict,
                 stats: RunStats) -> None:
         """Single-pane convenience: plan, drain, apply."""
-        mb = PaneMicroBatcher(self.rt.executor, k=1)
+        mb = PaneMicroBatcher(self.rt.executor, k=1,
+                              fold_exec=self.rt.fold_exec)
         pends = self.plan(pane_ev, mb, stats)
         mb.drain()
         self.apply(pends, pane_ev, t0, out, stats)
@@ -173,7 +174,8 @@ class OverloadRuntime:
         self.config = config
         self.rt = HamletRuntime(workload, policy=policy, backend=backend,
                                 batch_exec=batch_exec,
-                                plan_cache=config.plan_cache)
+                                plan_cache=config.plan_cache,
+                                fold_exec=config.fold_exec)
         self.pane = self.rt.pane
         self.stats = self.rt.stats
         self.micro_batch = max(1, int(config.micro_batch))
@@ -281,7 +283,8 @@ class OverloadRuntime:
         """Fused execution of K admitted panes: plan every (pane, group,
         component) into one micro-batch, drain once — one launch per size
         bucket per K panes — then finalize and fold in stream order."""
-        mb = PaneMicroBatcher(self.rt.executor, k=len(panes))
+        mb = PaneMicroBatcher(self.rt.executor, k=len(panes),
+                              fold_exec=self.rt.fold_exec)
         planned: list = []
         for t0, kept in panes:
             parts = kept.partition_by_group() if len(kept) else {}

@@ -182,6 +182,65 @@ def test_dynamic_policy_decides_fresh_on_every_pane():
     assert rt_on.stats.decisions == rt_off.stats.decisions > 0
 
 
+# ------------------------------------- dynamic-policy plan-key fast path
+
+
+def test_dynamic_fast_path_engages_and_stays_bitwise():
+    """Edge-free, negation-free panes under DynamicPolicy take the
+    whole-pane fast key (``FD``): repeated shapes hit zero-copy while the
+    decision fingerprint is recomputed per pane — results and stats match
+    the uncached engine exactly."""
+    rng = np.random.default_rng(3)
+    evs = []
+    for _ in range(60):
+        t = int(rng.integers(0, 3))
+        evs += [(t, int(rng.integers(0, 5)))] * int(rng.integers(1, 7))
+    batch = _batch(evs)
+    rt_on = HamletRuntime(_wl(), policy=DynamicPolicy(), plan_cache=True)
+    rt_off = HamletRuntime(_wl(), policy=DynamicPolicy(), plan_cache=False)
+    _assert_bitwise(rt_on.run(batch, 400), rt_off.run(batch, 400))
+    cache = rt_on.plan_caches[0]
+    keys = list(cache._entries)
+    assert keys and all(k[0] == "FD" for k in keys)
+    # a second identical run is all fast-key hits
+    h0 = cache.hits
+    _assert_bitwise(rt_on.run(batch, 400), rt_off.run(batch, 400))
+    assert cache.hits - h0 > 0 and cache.misses == len(keys)
+    for f in ("decisions", "shared_bursts", "split_bursts",
+              "shared_graphlets", "snapshots_created"):
+        assert getattr(rt_on.stats, f) == getattr(rt_off.stats, f), f
+
+
+def test_benefit_flip_changes_fast_key_and_decision():
+    """The benefit model flips from split to share as the running event
+    count n grows past ``k * t`` (Def. 11 with no divergence).  The same
+    pane *shape* planned before and after the flip must land in different
+    fast-key entries — reuse never freezes the decision — and the capped
+    runtime stays bitwise equal to the uncached one."""
+    wl = Workload(SCHEMA, [
+        Query("qa", Seq(A, Kleene(B)), within=4, slide=2),
+        Query("qb", Seq(A, Kleene(B)), within=4, slide=2),
+    ])
+    # identical panes: one A, one B -> b=1, k=2, t=2; benefit = b*(n - k*t)
+    # flips positive once n > 4, i.e. from the third pane on
+    n_panes = 6
+    types = np.array([0, 1] * n_panes, dtype=np.int32)
+    times = np.arange(2 * n_panes)
+    batch = EventBatch(SCHEMA, types, times,
+                       np.ones((2 * n_panes, 1)))
+    rt_on = HamletRuntime(wl, policy=DynamicPolicy(), plan_cache=True)
+    rt_off = HamletRuntime(wl, policy=DynamicPolicy(), plan_cache=False)
+    _assert_bitwise(rt_on.run(batch, 2 * n_panes),
+                    rt_off.run(batch, 2 * n_panes))
+    # the flip happened: early panes split, later ones share
+    assert 0 < rt_off.stats.shared_bursts < n_panes
+    assert rt_on.stats.shared_bursts == rt_off.stats.shared_bursts
+    # same structure, different decisions -> two distinct fast-key entries
+    cache = rt_on.plan_caches[0]
+    assert len(cache) == 2 and all(k[0] == "FD" for k in cache._entries)
+    assert cache.hits == n_panes - 2
+
+
 # ------------------------------------------------------------ memory bound
 
 

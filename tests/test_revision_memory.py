@@ -1,0 +1,117 @@
+"""Bounded revision memory (``EventTimeConfig.max_retained_panes``).
+
+The cap evicts the *oldest* event-retaining panes per group: the pane's
+transfer matrices survive (emission and re-folds of other panes stay
+exact) but the raw events are dropped — charged to the shedding accountant
+as late/unwitnessed (bound certificates withdrawn) — and any later
+straggler into an evicted pane expires instead of absorbing.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.engine import vals_equal
+from repro.core.events import EventBatch, StreamSchema
+from repro.core.pattern import EventType, Kleene, Seq
+from repro.core.query import Query, Workload, count_star
+from repro.eventtime import EventTimeConfig, EventTimeRuntime
+from repro.overload.accountant import ErrorAccountant
+
+SCHEMA = StreamSchema(types=("A", "B"), attrs=("v",))
+A, B = map(EventType, "AB")
+
+
+def _wl(within=4, slide=2):
+    return Workload(SCHEMA, [
+        Query("q", Seq(A, Kleene(B)), aggs=(count_star(),),
+              within=within, slide=slide)])
+
+
+def _chunk(t0, evs):
+    n = len(evs)
+    return EventBatch(SCHEMA, np.array([t for t, _ in evs], np.int32),
+                      np.arange(t0, t0 + n),
+                      np.array([[float(v)] for _, v in evs]).reshape(n, 1))
+
+
+def _pane(t0):
+    return _chunk(t0, [(0, 1), (1, 1)])            # A then B per pane
+
+
+def test_cap_validation():
+    with pytest.raises(ValueError):
+        EventTimeConfig(max_retained_panes=0)
+
+
+def _runtime(cap, accountant=None):
+    cfg = EventTimeConfig(watermark="bounded_skew", skew=0,
+                          lateness_horizon=100, max_retained_panes=cap,
+                          speculative=True)
+    return EventTimeRuntime(_wl(), cfg, accountant=accountant)
+
+
+def test_eviction_order_and_accounting():
+    wl = _wl()
+    acc = ErrorAccountant(wl)
+    rt = _runtime(cap=2, accountant=acc)
+    for p in range(6):
+        rt.ingest(_pane(2 * p))
+    # oldest-first eviction, per group, down to the cap
+    assert [t0 for _g, t0 in rt.evictions] == sorted(
+        t0 for _g, t0 in rt.evictions)
+    retained = [t0 for t0, ps in rt._panes[0].items() if not ps.evicted]
+    assert len(retained) <= 2
+    assert rt.metrics.evicted_panes == len(rt.evictions) > 0
+    # every evicted event was charged to the accountant as late shed
+    evicted_events = 2 * len(rt.evictions)
+    assert acc.late_events == evicted_events
+    assert acc.total_shed == evicted_events
+    # the certificate for windows over evicted panes is withdrawn
+    g0, t0 = rt.evictions[0]
+    assert not acc.window_bound("q", g0, t0).tight
+    # the evicted panes keep their transfer matrices but not their events
+    for g, t0 in rt.evictions:
+        ps = rt._panes[g][t0]
+        assert ps.evicted and ps.M is not None and len(ps.events) == 0
+
+
+def test_straggler_into_evicted_pane_expires():
+    rt = _runtime(cap=1)
+    for p in range(5):
+        rt.ingest(_pane(2 * p))
+    assert rt.evictions, "cap should have evicted panes"
+    g, t0 = rt.evictions[0]
+    expired0 = rt.metrics.expired
+    amends0 = rt.metrics.amendments
+    records = rt.ingest(_chunk(t0 + 1, [(1, 9)]))   # straggler into evicted
+    assert rt.metrics.expired == expired0 + 1
+    assert rt.metrics.amendments == amends0
+    assert not [r for r in records if r.kind in ("retract", "amend")]
+
+
+def test_straggler_into_retained_pane_still_revises():
+    rt = _runtime(cap=3)
+    for p in range(4):
+        rt.ingest(_pane(2 * p))
+    retained = sorted(t0 for t0, ps in rt._panes[0].items()
+                      if not ps.evicted)
+    # a straggler into a retained, already-emitted pane amends its windows
+    records = rt.ingest(_chunk(retained[0] + 1, [(1, 5)]))
+    kinds = [r.kind for r in records]
+    assert "retract" in kinds and "amend" in kinds
+
+
+def test_results_match_uncapped_without_stragglers():
+    """Eviction keeps the stored fold state, so an in-order stream emits
+    identical windows with and without the cap."""
+    capped = _runtime(cap=1)
+    uncapped = _runtime(cap=None)
+    for p in range(8):
+        capped.ingest(_pane(2 * p))
+        uncapped.ingest(_pane(2 * p))
+    capped.flush()
+    uncapped.flush()
+    a, b = capped.results(), uncapped.results()
+    assert a.keys() == b.keys()
+    for k in a:
+        assert vals_equal(a[k], b[k]), k

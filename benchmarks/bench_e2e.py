@@ -122,20 +122,27 @@ def _min_bursts_filter(wl, stream, min_bursts: int):
 
 
 def _run_once(wl, panes, policy, *, plan_cache: bool, micro_batch: int,
-              fold_exec: bool = True, warm_rt: HamletRuntime | None = None):
+              fold_exec: bool = True, warm_rt: HamletRuntime | None = None,
+              obs=None):
     """One timed sweep of the pane pipeline over ``panes``; returns
-    (metrics dict, runtime) — pass the runtime back in to measure warm."""
+    (metrics dict, runtime) — pass the runtime back in to measure warm.
+    ``obs`` attaches a ``repro.obs.Observability`` facade to a freshly
+    built runtime (the obs-overhead gate measures with a disabled one)."""
     from repro.core.engine import PaneMicroBatcher
 
     rt = warm_rt if warm_rt is not None else HamletRuntime(
         wl, policy=policy, plan_cache=plan_cache, micro_batch=micro_batch,
-        fold_exec=fold_exec)
+        fold_exec=fold_exec, obs=obs)
     rt.stats = RunStats()
     launches0 = rt.executor.launches
     cs0 = rt.plan_cache_stats()
+    fe = rt.fold_exec
+    fp0 = ((fe.plan_hits, fe.plan_misses, fe.plan_evictions)
+           if fe is not None else (0, 0, 0))
     procs = [rt.make_processor(ci) for ci in range(len(rt.ctxs))]
     t0 = time.perf_counter()
-    mb = PaneMicroBatcher(rt.executor, k=micro_batch, fold_exec=rt.fold_exec)
+    mb = PaneMicroBatcher(rt.executor, k=micro_batch, fold_exec=rt.fold_exec,
+                          obs=rt.obs)
     backlog = []
     for ev in panes:
         for proc in procs:
@@ -165,6 +172,11 @@ def _run_once(wl, panes, policy, *, plan_cache: bool, micro_batch: int,
         "plan_cache_hit_rate": round(d_hits / d_total, 4) if d_total else 0.0,
         "launches_per_pane": round(
             (rt.executor.launches - launches0) / n_panes, 2),
+        "fold_plan": ({"hits": fe.plan_hits - fp0[0],
+                       "misses": fe.plan_misses - fp0[1],
+                       "evictions": fe.plan_evictions - fp0[2]}
+                      if fe is not None else
+                      {"hits": 0, "misses": 0, "evictions": 0}),
     }, rt
 
 
@@ -224,6 +236,7 @@ def main(quick: bool = True, only_smoke: bool = False) -> list[dict]:
         f.write("\n")
     rows = []
     for name, r in results.items():
+        fp = r["optimized"]["fold_plan"]
         rows.append({
             "workload": name,
             "speedup_warm": r["speedup_warm"],
@@ -233,13 +246,63 @@ def main(quick: bool = True, only_smoke: bool = False) -> list[dict]:
             "launches_per_pane": r["optimized"]["launches_per_pane"],
             "plan_share": r["optimized"]["phase_split"]["plan"],
             "execute_share": r["optimized"]["phase_split"]["execute"],
+            "fold_plan_hits": fp["hits"],
+            "fold_plan_misses": fp["misses"],
         })
     return rows
 
 
-def check(rtol: float = 0.25) -> int:
+def _obs_overhead(wl, panes, policy, reps: int = 15) -> tuple[float, float]:
+    """Warm wall-time ratio of a *disabled* ``Observability`` facade vs no
+    facade.  Each rep times the two arms back to back (order alternating,
+    GC paused) and contributes one paired ratio; the estimate is the
+    *median* paired ratio — per-sample noise on a shared box dwarfs the
+    true overhead, and medians of adjacent-in-time pairs are robust to
+    both drift and spikes where per-arm minima are not.  Returns
+    (obs_wall_s, plain_wall_s) scaled so obs/plain is that median."""
+    import gc
+    import statistics
+
+    from repro.obs import Observability
+
+    def warmed(obs):
+        _, rt = _run_once(wl, panes, policy, plan_cache=True,
+                          micro_batch=MICRO_BATCH, obs=obs)
+        return rt                              # cold pass doubles as warmup
+
+    plain, obsd = warmed(None), warmed(Observability.disabled())
+
+    def timed(rt):
+        wall = 0.0
+        for _ in range(2):                     # longer samples beat timer noise
+            m, _ = _run_once(wl, panes, policy, plan_cache=True,
+                             micro_batch=MICRO_BATCH, warm_rt=rt)
+            wall += m["wall_s"]
+        return wall
+
+    ratios, plain_walls = [], []
+    gc_was_on = gc.isenabled()
+    gc.disable()
+    try:
+        for rep in range(reps):
+            if rep % 2 == 0:                   # alternate order: drift cancels
+                pw, ow = timed(plain), timed(obsd)
+            else:
+                ow, pw = timed(obsd), timed(plain)
+            ratios.append(ow / pw)
+            plain_walls.append(pw)
+            gc.collect()                       # between reps, not inside them
+    finally:
+        if gc_was_on:
+            gc.enable()
+    plain_w = statistics.median(plain_walls)
+    return plain_w * statistics.median(ratios), plain_w
+
+
+def check(rtol: float = 0.25, obs_tol: float = 0.03) -> int:
     """CI perf-smoke: re-measure the smoke workload, compare the warm
-    speedup ratio against the committed ``BENCH_e2e.json``."""
+    speedup ratio against the committed ``BENCH_e2e.json``, and gate the
+    overhead of an attached-but-disabled observability facade."""
     with open(BENCH_PATH) as f:
         payload = json.load(f)
     if not payload["meta"].get("quick", False):
@@ -273,6 +336,28 @@ def check(rtol: float = 0.25) -> int:
               "share — the stacked fold path is no longer carrying the "
               "finalize phase")
         return 1
+    # obs-overhead gate: a disabled Observability facade (tracing + audit
+    # off, registry attached) must stay within ``obs_tol`` of the plain
+    # runtime's warm wall time — the no-op span path is the contract
+    panes = _min_bursts_filter(wl, stream, 64)
+    ratio = None
+    # a shared runner's noise floor is ~+-2.5% at this workload size (A/A
+    # plain-vs-plain medians scatter that much), so take the min of up to
+    # three independent median estimates: noise spares one of them, a real
+    # regression inflates all three
+    for attempt in range(3):
+        obs_w, plain_w = _obs_overhead(wl, panes, policy)
+        r = obs_w / plain_w if plain_w > 0 else 1.0
+        ratio = r if ratio is None else min(ratio, r)
+        print(f"perf-smoke [{SMOKE}]: obs-disabled overhead {r:.3f}x "
+              f"(ceiling {1.0 + obs_tol:.3f}x; "
+              f"obs {obs_w * 1e3:.1f} ms vs plain {plain_w * 1e3:.1f} ms)")
+        if ratio <= 1.0 + obs_tol:
+            break
+    if ratio > 1.0 + obs_tol:
+        print("FAIL: a disabled observability facade costs more than "
+              f"{obs_tol:.0%} warm pane throughput")
+        return 1
     print("OK")
     return 0
 
@@ -283,8 +368,10 @@ if __name__ == "__main__":
     ap.add_argument("--check", action="store_true",
                     help="perf-smoke: compare against committed JSON")
     ap.add_argument("--rtol", type=float, default=0.25)
+    ap.add_argument("--obs-tol", type=float, default=0.03,
+                    help="obs-disabled overhead ceiling for --check")
     args = ap.parse_args()
     if args.check:
-        raise SystemExit(check(rtol=args.rtol))
+        raise SystemExit(check(rtol=args.rtol, obs_tol=args.obs_tol))
     for row in main(quick=not args.full):
         print(row)

@@ -44,6 +44,7 @@ from dataclasses import dataclass
 import numpy as np
 
 from ..kernels import ops
+from ..obs.metrics import OCCUPANCY_BUCKETS
 
 __all__ = ["PropagateJob", "PaneBatchExecutor"]
 
@@ -68,10 +69,11 @@ class PropagateJob:
 
 class PaneBatchExecutor:
     def __init__(self, backend: str = "np", batched: bool = True,
-                 shard_slices=None):
+                 shard_slices=None, obs=None):
         self.backend = backend
         self.batched = batched
         self.shard_slices = shard_slices
+        self.obs = obs
         self._pending: list[PropagateJob] = []
         # reusable host staging for stacked inputs, keyed by (kind, b, d,
         # dtype) and grown to the high-water bucket size (numpy backend only;
@@ -95,6 +97,7 @@ class PaneBatchExecutor:
         if not jobs:
             return
         self.flushes += 1
+        l0 = self.launches
         if not self.batched:
             for j in jobs:
                 self.launches += 1
@@ -132,6 +135,9 @@ class PaneBatchExecutor:
             arr = full[id(bucket)]
             for i, j in enumerate(bucket):
                 j.result = arr[i, : j.base.shape[0]]
+        if self.obs is not None:
+            self.obs.observe("batch_exec.launches_per_flush",
+                             self.launches - l0, OCCUPANCY_BUCKETS)
 
     def _slices(self, nb: int) -> list[slice]:
         if self.shard_slices is None:
@@ -158,6 +164,9 @@ class PaneBatchExecutor:
         launched = []
         for (bp, d, dtype), bucket in buckets.items():
             nb = len(bucket)
+            if self.obs is not None:
+                self.obs.observe("batch_exec.bucket_occupancy", nb,
+                                 OCCUPANCY_BUCKETS)
             stacked = self._stage("dense", nb, (bp, d), dtype)
             for i, j in enumerate(bucket):
                 bj = j.base.shape[0]
@@ -179,6 +188,9 @@ class PaneBatchExecutor:
         launched = []
         for (b, d, dtype), bucket in buckets.items():
             nb = len(bucket)
+            if self.obs is not None:
+                self.obs.observe("batch_exec.bucket_occupancy", nb,
+                                 OCCUPANCY_BUCKETS)
             base = self._stage("mbase", nb, (b, d), dtype)
             mask = self._stage("mmask", nb, (b, b), bucket[0].mask.dtype)
             for i, j in enumerate(bucket):

@@ -71,6 +71,14 @@ A pane is processed in three engine phases plus the runtime's window fold:
 ``execute_s`` / ``finalize_s`` / ``fold_s``) and the plan-cache hit/miss
 counters, so benchmarks read the phase split straight from the engine.
 
+Observability: every layer accepts an optional ``obs=`` handle (a
+:class:`repro.obs.Observability` facade — span tracer, metrics registry,
+sharing-decision audit log).  Phase spans are recorded from the *same*
+``perf_counter`` readings that feed ``RunStats``, so per-pane spans sum to
+the phase totals; the audit log captures each optimizer share/no-share
+decision verbatim as it enters the plan-cache key.  With ``obs=None``
+(default) every hook is a single guarded attribute test — zero cost.
+
 Host/device residency: on the numpy backend the executor reuses host staging
 buffers across flushes; on the jax/pallas backends bucket outputs stay
 device-resident until **one** host fetch per flush (see ``batch_exec.py``).
@@ -87,6 +95,7 @@ from time import perf_counter
 import numpy as np
 
 from ..kernels.ops import DENSE_B_MAX
+from ..obs.trace import NULL_SPAN
 from .batch_exec import PaneBatchExecutor, PropagateJob
 from .events import EventBatch, StreamSchema, pane_size_for, split_panes
 from .fold_exec import FoldExecutor
@@ -324,11 +333,13 @@ class _GroupPlan:
 class PaneProcessor:
     def __init__(self, ctx: ComponentContext, policy, backend: str = "np",
                  max_local_basis: int = 512, executor=None, plan_cache=None,
-                 fold_exec=None):
+                 fold_exec=None, obs=None, comp: int = 0):
         self.ctx = ctx
         self.policy = policy
         self.backend = backend
         self.max_local_basis = max_local_basis
+        self.obs = obs
+        self.comp = comp
         self.executor = (executor if executor is not None
                          else PaneBatchExecutor(backend=backend))
         self.plan_cache: PanePlanCache | None = plan_cache
@@ -361,7 +372,8 @@ class PaneProcessor:
         Micro-batching callers drive the phases via :class:`PaneMicroBatcher`
         instead.
         """
-        mb = PaneMicroBatcher(self.executor, k=1, fold_exec=self.fold_exec)
+        mb = PaneMicroBatcher(self.executor, k=1, fold_exec=self.fold_exec,
+                              obs=self.obs)
         pend = mb.submit(self, pane, stats)
         mb.drain()
         return pend.finalize()
@@ -375,12 +387,22 @@ class PaneProcessor:
         # semantics) — keep the whole pipeline quiet about it
         with np.errstate(over="ignore", invalid="ignore"):
             steps = self._plan_pane(pane, stats)
-        stats.plan_s += perf_counter() - t0
+        dt = perf_counter() - t0
+        stats.plan_s += dt
+        obs = self.obs
+        if obs is not None:
+            obs.pane_phase("plan", t0, dt,
+                           key=obs.pane_key(pane) if obs.tracing else None)
         return steps
 
     def _plan_pane(self, pane: EventBatch, stats: RunStats) -> list:
         ctx = self.ctx
         self._last_host = None
+        obs = self.obs
+        audit = obs.audit if obs is not None else None
+        pkey = (obs.pane_key(pane)
+                if obs is not None and (audit is not None or obs.tracing)
+                else None)
 
         keep = np.isin(pane.type_id, ctx.relevant_type_ids)
         ev = pane.select(np.nonzero(keep)[0])
@@ -451,20 +473,29 @@ class PaneProcessor:
             plan = cache.get(key)
             if plan is not None:
                 stats.plan_cache_hits += 1
+                if obs is not None:
+                    obs.cache_event(True, pkey)
                 plan.apply_stats(stats)
                 self._last_host = plan
                 return self._instantiate_fast(plan, runs, ev, mv_type)
             stats.plan_cache_misses += 1
+            if obs is not None:
+                obs.cache_event(False, pkey)
         elif dyn_fast:
             dyn_groups, key = self._dyn_fast_groups(runs, ev, mv_type,
-                                                    mv_bytes, present, stats)
+                                                    mv_bytes, present, stats,
+                                                    pkey=pkey, audit=audit)
             plan = cache.get(key)
             if plan is not None:
                 stats.plan_cache_hits += 1
+                if obs is not None:
+                    obs.cache_event(True, pkey)
                 plan.apply_stats(stats)
                 self._last_host = plan
                 return self._instantiate_fast(plan, runs, ev, mv_type)
             stats.plan_cache_misses += 1
+            if obs is not None:
+                obs.cache_event(False, pkey)
         dec0 = stats.decisions
 
         # per-burst planning inputs + the exact pane signature.  The
@@ -473,6 +504,7 @@ class PaneProcessor:
         # lossily.
         cursor: dict[int, int] = {}
         plan_bursts: list = []
+        key_groups: list = []
         sig: list = [(self.max_local_basis,
                       tuple((tid, sl.stop - sl.start) for tid, sl in runs))]
         for ri_, (tid, sl) in enumerate(runs):
@@ -521,6 +553,10 @@ class PaneProcessor:
                     groups, groups_sig = memo
                     if len(kle) >= 2:
                         stats.decisions += 1
+                        if audit is not None:
+                            audit.record(pane=pkey, comp=self.comp, el=el,
+                                         candidates=kle, decided=groups_sig,
+                                         b=b, n=stats.events)
                 else:
                     groups = []
                     if len(kle) >= 2:
@@ -543,6 +579,14 @@ class PaneProcessor:
                     groups_sig = tuple(map(tuple, groups))
                     if static_policy:
                         self._static_groups[el] = (groups, groups_sig)
+                    if audit is not None and len(kle) >= 2:
+                        audit.record(
+                            pane=pkey, comp=self.comp, el=el, candidates=kle,
+                            decided=groups_sig, b=b, n=stats.events,
+                            benefit=getattr(self.policy, "last_benefit",
+                                            None),
+                            patterns=getattr(self.policy, "last_patterns",
+                                             None))
                 burst = (tid, el, attrs, b, q_pos, mvec, epm, groups)
                 if cache is not None and not fast and not dyn_fast:
                     sig_part = (mv_bytes[tid][c * nq:(c + b) * nq], epm_sig,
@@ -554,16 +598,24 @@ class PaneProcessor:
                     tid,
                     None if hits is None else tuple(qi for qi, _ in hits),
                     sig_part))
+                if audit is not None:
+                    key_groups.append(None if burst is None else groups_sig)
 
         if cache is not None and not fast and not dyn_fast:
             key = tuple(sig)
+            if audit is not None:
+                audit.note_pane(pkey, tuple(key_groups), comp=self.comp)
             plan = cache.get(key)
             if plan is not None:
                 stats.plan_cache_hits += 1
+                if obs is not None:
+                    obs.cache_event(True, pkey)
                 plan.apply_stats(stats)
                 self._last_host = plan
                 return self._instantiate(plan, plan_bursts)
             stats.plan_cache_misses += 1
+            if obs is not None:
+                obs.cache_event(False, pkey)
         before = cache.snapshot_stats(stats) if cache is not None else None
 
         steps = self._build_steps(plan_bursts, stats)
@@ -692,8 +744,8 @@ class PaneProcessor:
     # -- dynamic-policy fast-key fingerprint pass --
 
     def _dyn_fast_groups(self, runs: list, ev: EventBatch, mv_type: dict,
-                         mv_bytes: dict, present: list,
-                         stats: RunStats) -> tuple[list, tuple]:
+                         mv_bytes: dict, present: list, stats: RunStats,
+                         pkey=None, audit=None) -> tuple[list, tuple]:
         """Whole-pane fast key for pattern-based dynamic policies.
 
         Requires an edge-free, negation-free pane.  One vectorized
@@ -739,14 +791,15 @@ class PaneProcessor:
                 continue
             kle = ctx.kle_pos[el]
             groups: list = []
+            pats = None
             if len(kle) >= 2:
                 codes = codes_type[tid][c:c + b]
                 codes = codes[codes != 0]
                 vals, counts = np.unique(codes, return_counts=True)
+                pats = tuple(zip(vals.tolist(), counts.tolist()))
                 shared_sets = self.policy.decide_patterns(
-                    patterns=tuple(zip(vals.tolist(), counts.tolist())),
-                    candidates=kle, b=b, n=stats.events, t=t_layout,
-                    stats=stats)
+                    patterns=pats, candidates=kle, b=b, n=stats.events,
+                    t=t_layout, stats=stats)
                 in_shared = set(qq for s in shared_sets for qq in s)
                 groups.extend([s for s in shared_sets if len(s) >= 2])
                 groups.extend([[qi] for s in shared_sets
@@ -757,10 +810,19 @@ class PaneProcessor:
             groups.extend([[qi] for qi in ctx.q_pos[el] if qi not in kle])
             groups_all.append(groups)
             sig.append(tuple(map(tuple, groups)))
+            if audit is not None and len(kle) >= 2:
+                audit.record(
+                    pane=pkey, comp=self.comp, el=el, candidates=kle,
+                    decided=sig[-1], b=b, n=stats.events,
+                    benefit=getattr(self.policy, "last_benefit", None),
+                    patterns=pats)
+        sig_t = tuple(sig)
+        if audit is not None:
+            audit.note_pane(pkey, sig_t, comp=self.comp)
         key = ("FD", self.max_local_basis,
                tuple((tid, sl.stop - sl.start) for tid, sl in runs),
                tuple(mv_bytes[t] for t in present if t in mv_bytes),
-               tuple(sig))
+               sig_t)
         return groups_all, key
 
     # -- divergence detection (per-event signature differences) --
@@ -958,7 +1020,7 @@ class PaneProcessor:
     # -- phase 3: finalize (replay the pane in stream order) --
 
     def finalize(self, steps: list, stats: RunStats,
-                 jobs: list) -> np.ndarray:
+                 jobs: list, pane_key=None) -> np.ndarray:
         """Phase 3, sequential reference path: fold executed coefficients
         into the state functionals and assemble the pane's per-query
         transfer matrices M [k, C, C].  ``jobs`` is the pending pane's
@@ -1009,7 +1071,11 @@ class PaneProcessor:
                 M[:, ctx.a_cols.reshape(-1), :] = arow.reshape(k, nu * t, C)
             if nu:
                 M[:, ctx.rp_cols, :] = rrow
-        stats.finalize_s += perf_counter() - t_f
+        dt = perf_counter() - t_f
+        stats.finalize_s += dt
+        obs = self.obs
+        if obs is not None:
+            obs.pane_phase("finalize", t_f, dt, key=pane_key)
         return M
 
     # -- phase 3 helper: one graphlet's coefficients -> state functionals --
@@ -1117,10 +1183,12 @@ class _PendingPane:
     jobs: list = field(default_factory=list)
     plan_host: object = None
     M: np.ndarray | None = None
+    pane_key: tuple | None = None
 
     def finalize(self) -> np.ndarray:
         if self.M is None:
-            self.M = self.proc.finalize(self.steps, self.stats, self.jobs)
+            self.M = self.proc.finalize(self.steps, self.stats, self.jobs,
+                                        pane_key=self.pane_key)
         return self.M
 
 
@@ -1140,9 +1208,10 @@ class PaneMicroBatcher:
     """
 
     def __init__(self, executor: PaneBatchExecutor, k: int = 1,
-                 fold_exec=None):
+                 fold_exec=None, obs=None):
         self.executor = executor
         self.fold_exec = fold_exec
+        self.obs = obs
         self.k = max(1, int(k))
         self._pending: list[_PendingPane] = []
 
@@ -1151,9 +1220,14 @@ class PaneMicroBatcher:
 
     def submit(self, proc: PaneProcessor, pane: EventBatch,
                stats: RunStats) -> _PendingPane:
+        obs = self.obs
+        key = None
+        if obs is not None and obs.tracing:
+            key = obs.pane_key(pane)
+            obs.lifecycle("ingest", key, args={"events": len(pane)})
         steps = proc.plan(pane, stats)
         pend = _PendingPane(proc, steps, stats, jobs=[None] * len(steps),
-                            plan_host=proc._last_host)
+                            plan_host=proc._last_host, pane_key=key)
         self._pending.append(pend)
         return pend
 
@@ -1165,29 +1239,51 @@ class PaneMicroBatcher:
         if not pend:
             return pend
         ex = self.executor
-        t0 = perf_counter()
-        with np.errstate(over="ignore", invalid="ignore"):
+        obs = self.obs
+        sp = (obs.span("flush", args={"panes": len(pend)})
+              if obs is not None else NULL_SPAN)
+        with sp:
+            t0 = perf_counter()
+            with np.errstate(over="ignore", invalid="ignore"):
+                for p in pend:
+                    p.proc.submit_execute(p.steps, p.stats, 1, p.jobs)
+                ex.flush()
+                for p in pend:
+                    p.proc.submit_execute(p.steps, p.stats, 2, p.jobs)
+                ex.flush()
+            # amortize the fused launch wall time across the micro-batch
+            dt = (perf_counter() - t0) / len(pend)
             for p in pend:
-                p.proc.submit_execute(p.steps, p.stats, 1, p.jobs)
-            ex.flush()
-            for p in pend:
-                p.proc.submit_execute(p.steps, p.stats, 2, p.jobs)
-            ex.flush()
-        # amortize the fused launch wall time across the micro-batch
-        dt = (perf_counter() - t0) / len(pend)
-        for p in pend:
-            p.stats.execute_s += dt
-        fe = self.fold_exec
-        if fe is not None:
-            t1 = perf_counter()
-            fjobs = [fe.submit(p.proc, p.steps, p.jobs, p.stats,
-                               host=p.plan_host) for p in pend]
-            fe.flush()
-            for p, fj in zip(pend, fjobs):
-                p.M = fj.M
-            dt = (perf_counter() - t1) / len(pend)
-            for p in pend:
-                p.stats.finalize_s += dt
+                p.stats.execute_s += dt
+            if obs is not None:
+                if obs.tracing:
+                    # the same amortized dt, tiled so pane spans don't overlap
+                    for i, p in enumerate(pend):
+                        obs.pane_phase("execute", t0 + i * dt, dt,
+                                       key=p.pane_key)
+                else:
+                    obs.pane_phase_n("execute", dt, len(pend))
+            fe = self.fold_exec
+            if fe is not None:
+                fsp = (obs.span("fold_flush", args={"panes": len(pend)})
+                       if obs is not None else NULL_SPAN)
+                with fsp:
+                    t1 = perf_counter()
+                    fjobs = [fe.submit(p.proc, p.steps, p.jobs, p.stats,
+                                       host=p.plan_host) for p in pend]
+                    fe.flush()
+                    for p, fj in zip(pend, fjobs):
+                        p.M = fj.M
+                    dt = (perf_counter() - t1) / len(pend)
+                    for p in pend:
+                        p.stats.finalize_s += dt
+                    if obs is not None:
+                        if obs.tracing:
+                            for i, p in enumerate(pend):
+                                obs.pane_phase("finalize", t1 + i * dt, dt,
+                                               key=p.pane_key)
+                        else:
+                            obs.pane_phase_n("finalize", dt, len(pend))
         return pend
 
 
@@ -1241,12 +1337,16 @@ class HamletRuntime:
     size bucket per K panes (bitwise identical to ``micro_batch=1``).
     ``plan_cache`` attaches a per-component :class:`PanePlanCache` shared by
     every processor the runtime spawns (see ``core/plan_cache.py``).
+    ``obs`` attaches a :class:`repro.obs.Observability` facade: phase spans,
+    lifecycle instants, executor metrics and the sharing-decision audit log
+    all record through it (None — the default — costs nothing).
     """
 
     def __init__(self, workload: Workload, policy=None, backend: str = "np",
                  batch_exec: bool = True, shard_slices=None,
                  micro_batch: int = 1, plan_cache: bool = True,
-                 plan_cache_size: int = 128, fold_exec: bool = True):
+                 plan_cache_size: int = 128, fold_exec: bool = True,
+                 obs=None):
         from .optimizer import DynamicPolicy
 
         self.workload = workload
@@ -1267,16 +1367,23 @@ class HamletRuntime:
         # one fold executor likewise: finalize backlogs of every pending
         # pane fold as stacked per-shape launches (None = sequential replay)
         self.fold_exec = FoldExecutor(backend=backend) if fold_exec else None
+        self.obs = obs
+        if obs is not None:
+            obs.pane_ticks = self.pane
+            self.executor.obs = obs
+            if self.fold_exec is not None:
+                self.fold_exec.obs = obs
         self.stats = RunStats()
         self._empty_M: list[np.ndarray] | None = None
 
     def make_processor(self, ci: int) -> PaneProcessor:
         """A processor for component ``ci`` wired to the runtime's shared
-        executor and plan cache (used by the overload / event-time layers)."""
+        executor, plan cache and observability facade (used by the
+        overload / event-time layers)."""
         return PaneProcessor(self.ctxs[ci], self.policy, backend=self.backend,
                              executor=self.executor,
                              plan_cache=self.plan_caches[ci],
-                             fold_exec=self.fold_exec)
+                             fold_exec=self.fold_exec, obs=self.obs, comp=ci)
 
     def plan_cache_stats(self) -> dict:
         """Aggregate plan-cache counters across components."""
@@ -1298,8 +1405,15 @@ class HamletRuntime:
             empty = EventBatch(self.workload.schema, np.array([], np.int32),
                                np.array([], np.int64), None)
             scratch = RunStats()
-            self._empty_M = [self.make_processor(ci).process(empty, scratch)
-                             for ci in range(len(self.ctxs))]
+            # no obs on these processors: the scratch stats never merge into
+            # the runtime's, so spans here would break the span/stat match
+            self._empty_M = [
+                PaneProcessor(self.ctxs[ci], self.policy,
+                              backend=self.backend, executor=self.executor,
+                              plan_cache=self.plan_caches[ci],
+                              fold_exec=self.fold_exec).process(empty,
+                                                                scratch)
+                for ci in range(len(self.ctxs))]
         return self._empty_M
 
     def run(self, batch: EventBatch, t_end: int | None = None) -> dict:
@@ -1327,7 +1441,7 @@ class HamletRuntime:
             proc = self.make_processor(ic)
             insts: list[dict[int, _Instance]] = [dict() for _ in comp]
             mb = PaneMicroBatcher(self.executor, k=self.micro_batch,
-                                  fold_exec=self.fold_exec)
+                                  fold_exec=self.fold_exec, obs=self.obs)
             backlog: list[tuple[int, EventBatch, _PendingPane]] = []
 
             def flush_backlog():
@@ -1349,6 +1463,11 @@ class HamletRuntime:
                       out: dict) -> None:
         """Phase 4 (fold): advance window instances by one pane and emit
         closing windows."""
+        obs = self.obs
+        key = (obs.pane_key(pane_ev)
+               if obs is not None and obs.tracing else None)
+        fold_t0 = None
+        fold_dt = 0.0
         for ci, aqi in enumerate(comp):
             q = self.workload.atomic[aqi]
             # open new instances whose window starts at this pane
@@ -1357,7 +1476,11 @@ class HamletRuntime:
             needs_minmax = ci in ctx.minmax_queries
             t_fold = perf_counter()
             advance_instances(M[ci], insts[ci])
-            self.stats.fold_s += perf_counter() - t_fold
+            d = perf_counter() - t_fold
+            self.stats.fold_s += d
+            if fold_t0 is None:
+                fold_t0 = t_fold
+            fold_dt += d
             for w0, inst in list(insts[ci].items()):
                 if needs_minmax and len(pane_ev):
                     inst.events.append(pane_ev)
@@ -1366,6 +1489,11 @@ class HamletRuntime:
                         ctx, ci, q, inst, group_key)
                     del insts[ci][w0]
                     self.stats.windows_emitted += 1
+                    if key is not None:
+                        obs.lifecycle("emit", key,
+                                      args={"w0": w0, "q": aqi})
+        if obs is not None and fold_t0 is not None:
+            obs.pane_phase("fold", fold_t0, fold_dt, key=key)
 
     def _emit(self, ctx: ComponentContext, ci: int, q: AtomicQuery,
               inst: _Instance, group_key: int) -> dict:

@@ -72,6 +72,7 @@ from dataclasses import dataclass, field
 import numpy as np
 
 from ..kernels import ops
+from ..obs.metrics import OCCUPANCY_BUCKETS
 
 __all__ = ["FoldExecutor", "FoldJob", "FoldSchedule", "build_fold_schedule"]
 
@@ -314,14 +315,20 @@ class FoldExecutor:
     ``tests/test_fold_exec.py``).
     """
 
-    def __init__(self, backend: str = "np", flush_plan_cache: int = 64):
+    def __init__(self, backend: str = "np", flush_plan_cache: int = 64,
+                 obs=None):
         self.backend = backend
         self.flush_plan_cache = int(flush_plan_cache)
+        self.obs = obs
         self._pending: list[FoldJob] = []
         self._plans: "OrderedDict[tuple, _FlushPlan]" = OrderedDict()
         self.flushes = 0
         self.launches = 0         # stacked group-fold launches (buckets)
         self.window_folds = 0     # stacked window-chain launches (buckets)
+        # flush-plan LRU traffic (the RunStats plan-cache counters' twin)
+        self.plan_hits = 0
+        self.plan_misses = 0
+        self.plan_evictions = 0
 
     def __len__(self) -> int:
         return len(self._pending)
@@ -352,8 +359,12 @@ class FoldExecutor:
         if not jobs:
             return
         self.flushes += 1
+        l0 = self.launches
         with np.errstate(over="ignore", invalid="ignore"):
             self._flush(jobs)
+        if self.obs is not None:
+            self.obs.observe("fold_exec.launches_per_flush",
+                             self.launches - l0, OCCUPANCY_BUCKETS)
 
     def _flush(self, jobs: list[FoldJob]) -> None:
         # group pending jobs by component context; each ctx group holds a
@@ -399,12 +410,21 @@ class FoldExecutor:
         key = (cid,) + tuple(sc.serial for sc in scheds)
         fp = self._plans.get(key)
         if fp is not None:
+            self.plan_hits += 1
+            if self.obs is not None:
+                self.obs.count("fold_exec.flush_plan.hits")
             self._plans.move_to_end(key)
             return fp
+        self.plan_misses += 1
+        if self.obs is not None:
+            self.obs.count("fold_exec.flush_plan.misses")
         fp = self._build_plan(cjobs, scheds)
         self._plans[key] = fp
         while len(self._plans) > self.flush_plan_cache:
             self._plans.popitem(last=False)
+            self.plan_evictions += 1
+            if self.obs is not None:
+                self.obs.count("fold_exec.flush_plan.evictions")
         return fp
 
     def _build_plan(self, cjobs: list[FoldJob],
@@ -526,6 +546,9 @@ class FoldExecutor:
         only through their column sums (already seeded in ``S_flat``), so
         one gather, two batched matmuls and one scatter fold the bucket."""
         self.launches += 1
+        if self.obs is not None:
+            self.obs.observe("fold_exec.bucket_occupancy", len(mb.flat_gq),
+                             OCCUPANCY_BUCKETS)
         nu, t, C = st.nu, st.t, st.C
         n_used = len(mb.used)
         zm = st.Z2.take(mb.flat_gq, axis=0)        # [Nm, R, C]
@@ -554,6 +577,9 @@ class FoldExecutor:
         """d > 0: event-level snapshot fills — exact burst length per
         bucket, per-event arrays stacked across members."""
         self.launches += 1
+        if self.obs is not None:
+            self.obs.observe("fold_exec.bucket_occupancy", len(mb.flat_gq),
+                             OCCUPANCY_BUCKETS)
         nu, t, C = st.nu, st.t, st.C
         used, n_used = mb.used, len(mb.used)
 

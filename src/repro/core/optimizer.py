@@ -80,6 +80,11 @@ class _PolicyBase:
     # fast path then recomputes the decision from a vectorized fingerprint
     # via ``decide_patterns`` instead of the per-burst plan walk
     pattern_based = False
+    # inputs/outputs of the most recent decision, read by the engine's
+    # sharing-decision audit log (``repro.obs.audit``); None for policies
+    # whose decision never evaluates the benefit model
+    last_benefit = None
+    last_patterns = None
 
     def decide(self, *, ctx, el, candidates, d_rows, b, n, stats) -> list[list[int]]:
         raise NotImplementedError
@@ -141,6 +146,8 @@ class DynamicPolicy(_PolicyBase):
         the engine's plan-key fast path calls it straight off a vectorized
         per-burst fingerprint (see ``engine._dyn_fast_groups``)."""
         stats.decisions += 1
+        self.last_patterns = patterns
+        self.last_benefit = None
         n = max(n, b)
         g = b
         bit = {q: 1 << i for i, q in enumerate(candidates)}
@@ -173,6 +180,7 @@ class DynamicPolicy(_PolicyBase):
             return [[q] for q in candidates]
         final = self._costs(s_new=union(shared), b=b, n=n,
                             k=len(shared), g=g, t=t)
+        self.last_benefit = final.benefit
         if final.benefit <= 0:
             stats.split_bursts += 1
             return [[q] for q in candidates]
@@ -236,6 +244,8 @@ class FlopPolicy(_PolicyBase):
         B_local = 1 + nu + u * nu
         shared = b * b * B_local + u * k * (b * B_local + B_local * C) + k * B_local * C
         nonshared = k * (b * b * (1 + nu) + (1 + nu) * C)
+        self.last_benefit = float(nonshared - shared)
+        self.last_patterns = None
         if k >= 2 and shared < nonshared:
             return [list(candidates)]
         stats.split_bursts += 1 if k >= 2 else 0

@@ -182,16 +182,20 @@ class HamletService:
     replay :class:`HamletRuntime` (cross-pane fused launches, pane-plan
     memoization, the stacked finalize/fold executor — see
     ``core/engine.py``); the runtime is reused while the workload is
-    unchanged so the plan caches stay warm across epochs."""
+    unchanged so the plan caches stay warm across epochs.  ``obs`` attaches
+    a :class:`repro.obs.Observability` facade: it is threaded into the
+    replay runtime (pane spans, metrics, sharing audit) and each epoch
+    replay additionally gets an ``epoch`` span on the engine track."""
 
     def __init__(self, schema, queries: list[Query], policy=None,
                  lateness: int = 0, sharable_mode: str = "units",
                  overload=None, batch_exec: bool = True, eventtime=None,
                  micro_batch: int = 1, plan_cache: bool = True,
-                 fold_exec: bool = True):
+                 fold_exec: bool = True, obs=None):
         from .events import pane_size_for
 
         self.schema = schema
+        self.obs = obs
         self.sharable_mode = sharable_mode
         self.policy = policy
         self.batch_exec = batch_exec
@@ -453,7 +457,8 @@ class HamletService:
                                      batch_exec=self.batch_exec,
                                      micro_batch=self.micro_batch,
                                      plan_cache=self.plan_cache,
-                                     fold_exec=self.fold_exec)
+                                     fold_exec=self.fold_exec,
+                                     obs=self.obs)
             self._rt_stale = False
         self._rt.stats = RunStats()
         return self._rt
@@ -476,6 +481,10 @@ class HamletService:
             if self._t_done < close_t <= end:
                 out[(qn, gk, w0 + shift)] = vals
         self.results.update(out)
+        if self.obs is not None and self.obs.tracing:
+            self.obs.tracer.complete(
+                "epoch", t_start, time.perf_counter() - t_start,
+                cat="service", args={"end": end, "emitted": len(out)})
 
         # retire history older than any future window — or, in event-time
         # mode, any still-revisable emitted window — needs

@@ -53,6 +53,7 @@ from ..core.engine import (HamletRuntime, PaneMicroBatcher, PaneProcessor,
                            _Instance, fold_panes, vals_equal)
 from ..core.events import EventBatch
 from ..core.query import Workload
+from ..obs.metrics import DEPTH_BUCKETS, LAG_BUCKETS
 from .config import EventTimeConfig
 from .reorder import ReorderBuffer
 from .watermark import WM_MIN, make_watermark
@@ -135,13 +136,14 @@ class EventTimeRuntime:
     def __init__(self, workload: Workload, config: EventTimeConfig,
                  policy=None, backend: str = "np", batch_exec: bool = True,
                  accountant=None, micro_batch: int = 1,
-                 plan_cache: bool = True, fold_exec: bool = True):
+                 plan_cache: bool = True, fold_exec: bool = True, obs=None):
         self.workload = workload
         self.config = config
+        self.obs = obs
         self.micro_batch = max(1, int(micro_batch))
         self.rt = HamletRuntime(workload, policy=policy, backend=backend,
                                 batch_exec=batch_exec, plan_cache=plan_cache,
-                                fold_exec=fold_exec)
+                                fold_exec=fold_exec, obs=obs)
         self.pane = self.rt.pane
         self.stats = self.rt.stats
         self.metrics = EventTimeMetrics()
@@ -181,6 +183,12 @@ class EventTimeRuntime:
             # advanced it — a chunk never expires its own orderly events
             wm_before = self.wm.watermark()
             self.wm.observe(chunk.time, chunk.group)
+            if self.obs is not None:
+                wm = self.wm.watermark()
+                if wm > WM_MIN:
+                    self.obs.observe("eventtime.watermark_lag",
+                                     max(0, self._frontier - wm),
+                                     LAG_BUCKETS)
             chunk = self._route_expired(chunk, wm_before)
         if len(chunk):
             dirty = self._absorb(chunk)
@@ -276,7 +284,7 @@ class EventTimeRuntime:
         if self.micro_batch <= 1 or not jobs:
             return
         mb = PaneMicroBatcher(self.rt.executor, k=self.micro_batch,
-                              fold_exec=self.rt.fold_exec)
+                              fold_exec=self.rt.fold_exec, obs=self.rt.obs)
         batch: list = []
         seen: set[int] = set()
 
@@ -362,6 +370,9 @@ class EventTimeRuntime:
                 self._group_procs(g)
                 ps = self._panes[g][sp.t0] = _PaneState(events=gb)
                 sealed_jobs.append((g, ps))
+                if self.obs is not None:
+                    self.obs.lifecycle("seal", (int(g), sp.t0),
+                                       args={"events": len(gb)})
             self._frontier = max(self._frontier, int(sp.events.time.max()))
         # fused execution across the sealed panes (lazy fallback when K=1)
         self._prefetch(sealed_jobs)
@@ -412,7 +423,12 @@ class EventTimeRuntime:
         else:
             us = [fold_panes(Ms, wins[i][3].layout.fresh_state())
                   for i, (Ms, _evs) in enumerate(chains)]
-        self.stats.fold_s += perf_counter() - t_f
+        dt = perf_counter() - t_f
+        self.stats.fold_s += dt
+        if self.obs is not None and wins:
+            # the stacked fold spans many windows/groups: an engine-track
+            # span, not a per-pane one
+            self.obs.pane_phase("fold", t_f, dt, key=None)
         return [rt._emit(ctx, ci, q, _Instance(w0, u, events=evs), g)
                 for (g, _ic, ci, ctx, q, _aqi, w0), u, (_Ms, evs)
                 in zip(wins, us, chains)]
@@ -465,7 +481,15 @@ class EventTimeRuntime:
                                           speculative=spec))
             self.metrics.windows_emitted += 1
             self.metrics.speculative_emits += int(spec)
-            self.metrics.emit_lag.append(self._frontier - (w0 + q.within))
+            lag = self._frontier - (w0 + q.within)
+            self.metrics.emit_lag.append(lag)
+            if self.obs is not None:
+                self.obs.observe("eventtime.emit_lag", max(0, lag),
+                                 LAG_BUCKETS)
+                if self.obs.tracing:
+                    self.obs.lifecycle(
+                        "emit", (int(g), (w0 // self.pane) * self.pane),
+                        args={"w0": w0, "q": aqi, "speculative": spec})
         return records
 
     def _revise(self, dirty: list[tuple[int, int]]) -> list[EmissionRecord]:
@@ -489,7 +513,13 @@ class EventTimeRuntime:
             # a pane counts as *revised* only when its (re-)execution
             # reached back behind the emitted frontier
             self.metrics.panes_revised += int(pane_hit)
+            if pane_hit and self.obs is not None:
+                self.obs.lifecycle("revise", (int(g), t0))
         ordered = sorted(affected.items())
+        if self.obs is not None:
+            # storm depth: emitted windows re-folded by one dirty batch
+            self.obs.observe("eventtime.revision_storm_depth", len(ordered),
+                             DEPTH_BUCKETS)
         if self.micro_batch > 1:
             self._prefetch([job for (aqi, g, w0), _ in ordered
                             for job in self._unexecuted_panes(
@@ -552,6 +582,8 @@ class EventTimeRuntime:
                                np.array([], np.int64), None)
         ps.evicted = True
         self.metrics.evicted_panes += 1
+        if self.obs is not None:
+            self.obs.lifecycle("evict", (int(g), t0))
         self.evictions.append((g, t0))
         if len(self.evictions) > self._evictions_keep:
             del self.evictions[:len(self.evictions) - self._evictions_keep]

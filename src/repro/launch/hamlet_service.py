@@ -15,6 +15,12 @@ controller:
 
     PYTHONPATH=src python -m repro.launch.hamlet_service --overload \
         --offered-x 2 --shed-policy benefit_weighted --recall
+
+``--trace out.jsonl`` attaches the observability layer (``repro.obs``):
+pane-lifecycle spans are exported as Chrome-trace JSONL (convert with
+``python -m repro.obs.trace out.jsonl out.json`` and load in Perfetto),
+and the run report gains the per-phase span-sum vs ``RunStats`` check plus
+the sharing-decision audit summary.
 """
 
 from __future__ import annotations
@@ -26,6 +32,7 @@ from ..core.engine import HamletRuntime
 from ..core.optimizer import AlwaysShare, DynamicPolicy, FlopPolicy, NeverShare
 from ..core.pattern import EventType, Kleene, Not, Seq
 from ..core.query import Pred, Query, Workload, agg_avg, agg_sum, count_star
+from ..obs import PHASES, Observability
 from ..streams.generator import (RIDESHARING_SCHEMA, OverloadStreamConfig,
                                  overload_stream, ridesharing_stream)
 
@@ -63,6 +70,34 @@ def ridesharing_workload(n_queries: int = 3) -> Workload:
     return Workload(RIDESHARING_SCHEMA, out)
 
 
+def _make_obs(args) -> Observability | None:
+    if not args.trace:
+        return None
+    return Observability(sample=args.trace_sample)
+
+
+def _obs_report(obs: Observability, path: str, stats) -> None:
+    """Export the trace and print the observability run report: span sums
+    checked against the RunStats phase timers, plus the audit summary."""
+    n = obs.export_trace(path)
+    print(f"trace: {n} events -> {path} "
+          f"(dropped={obs.tracer.dropped}, sample={obs.tracer.sample}); "
+          f"perfetto: python -m repro.obs.trace {path} {path}.chrome.json")
+    totals = obs.phase_totals()
+    for ph in PHASES:
+        span_s = totals.get(ph, 0.0)
+        stat_s = getattr(stats, f"{ph}_s")
+        dev = abs(span_s - stat_s) / stat_s * 100 if stat_s else 0.0
+        print(f"  {ph:8s} spans={span_s * 1e3:9.2f} ms "
+              f"stats={stat_s * 1e3:9.2f} ms (dev {dev:.2f}%)")
+    if obs.audit is not None:
+        a = obs.audit.summary()
+        print(f"audit: {a['decisions']} decisions "
+              f"(shared={a['shared']} split={a['split']} "
+              f"flips={a['flips']} sites={a['sites']} "
+              f"dropped={a['dropped']})")
+
+
 def run_overload(args) -> None:
     from ..overload import OverloadConfig, OverloadRuntime
 
@@ -89,10 +124,13 @@ def run_overload(args) -> None:
         slo_ms=slo_ms, shed_policy=args.shed_policy,
         tick_seconds=tick_seconds,
         pane_budget_events=int(capacity * pane * tick_seconds))
+    obs = _make_obs(args)
     ort = OverloadRuntime(wl, cfg, policy=POLICIES[args.policy](),
-                          backend=args.backend)
+                          backend=args.backend, obs=obs)
     res = ort.run(stream, t_end)
     s = ort.metrics.summary()
+    if obs is not None:
+        _obs_report(obs, args.trace, ort.stats)
     print(f"offered_x={args.offered_x} capacity={capacity:.0f} ev/s "
           f"slo={slo_ms:.2f} ms policy={args.shed_policy}")
     print(f"offered={s['offered']} admitted={s['admitted']} "
@@ -137,6 +175,11 @@ def main():
                     choices=["none", "drop_tail", "random", "benefit_weighted"])
     ap.add_argument("--recall", action="store_true",
                     help="also compute recall vs the unshedded run")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="attach the observability layer and export the "
+                         "pane-span trace as Chrome-trace JSONL")
+    ap.add_argument("--trace-sample", type=int, default=1,
+                    help="per-pane track sampling: trace every Nth pane")
     args = ap.parse_args()
 
     if args.overload:
@@ -146,12 +189,15 @@ def main():
     wl = ridesharing_workload(args.queries)
     batch = ridesharing_stream(events_per_minute=args.events_per_minute,
                                minutes=args.minutes, n_groups=args.groups)
+    obs = _make_obs(args)
     rt = HamletRuntime(wl, policy=POLICIES[args.policy](),
-                       backend=args.backend)
+                       backend=args.backend, obs=obs)
     t0 = time.time()
     res = rt.run(batch, t_end=args.minutes * 60)
     dt = time.time() - t0
     s = rt.stats
+    if obs is not None:
+        _obs_report(obs, args.trace, s)
     print(f"policy={args.policy} events={len(batch)} "
           f"windows={s.windows_emitted} results={len(res)}")
     print(f"wall={dt:.3f}s throughput={len(batch) / dt:.0f} ev/s "

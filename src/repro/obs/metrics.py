@@ -1,0 +1,178 @@
+"""Metrics registry: counters, gauges, histograms with fixed bucket layouts.
+
+Every series lives in a :class:`MetricsRegistry` keyed by name.  Histogram
+bucket edges are *fixed at creation* and must match on every subsequent
+lookup and on :meth:`MetricsRegistry.merge` — merging two histograms with
+different edge layouts raises instead of silently resampling, so bucket
+edges are stable across merges by construction.
+
+The module ships the canonical edge layouts the engine uses:
+
+* ``LATENCY_MS_BUCKETS`` — phase / pane latency in milliseconds.
+* ``OCCUPANCY_BUCKETS``  — bucket occupancy and launches-per-flush.
+* ``LAG_BUCKETS``        — watermark lag in stream ticks.
+* ``DEPTH_BUCKETS``      — revision-storm depth (panes per storm).
+"""
+
+from __future__ import annotations
+
+from bisect import bisect_right
+
+LATENCY_MS_BUCKETS = (0.05, 0.1, 0.25, 0.5, 1.0, 2.5, 5.0, 10.0, 25.0,
+                      50.0, 100.0, 250.0, 500.0, 1000.0)
+OCCUPANCY_BUCKETS = (1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0, 128.0, 256.0,
+                     512.0, 1024.0)
+LAG_BUCKETS = (0.0, 1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0, 128.0, 256.0)
+DEPTH_BUCKETS = (1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0, 128.0)
+
+
+class Counter:
+    """Monotonic counter."""
+
+    kind = "counter"
+    __slots__ = ("name", "value")
+
+    def __init__(self, name: str):
+        self.name = name
+        self.value = 0
+
+    def inc(self, n: int = 1) -> None:
+        self.value += n
+
+    def merge(self, other: "Counter") -> None:
+        self.value += other.value
+
+    def collect(self):
+        return self.value
+
+
+class Gauge:
+    """Last-write-wins scalar."""
+
+    kind = "gauge"
+    __slots__ = ("name", "value")
+
+    def __init__(self, name: str):
+        self.name = name
+        self.value = 0.0
+
+    def set(self, v) -> None:
+        self.value = v
+
+    def merge(self, other: "Gauge") -> None:
+        self.value = other.value
+
+    def collect(self):
+        return self.value
+
+
+class Histogram:
+    """Fixed-bucket histogram: ``len(edges) + 1`` counts, last is overflow."""
+
+    kind = "histogram"
+    __slots__ = ("name", "edges", "counts", "count", "sum")
+
+    def __init__(self, name: str, edges=LATENCY_MS_BUCKETS):
+        edges = tuple(float(e) for e in edges)
+        if not edges or list(edges) != sorted(set(edges)):
+            raise ValueError(f"histogram {name!r}: edges must be a "
+                             f"non-empty strictly increasing sequence")
+        self.name = name
+        self.edges = edges
+        self.counts = [0] * (len(edges) + 1)
+        self.count = 0
+        self.sum = 0.0
+
+    def observe(self, v) -> None:
+        self.counts[bisect_right(self.edges, v)] += 1
+        self.count += 1
+        self.sum += v
+
+    def observe_n(self, v, n: int) -> None:
+        """Record ``n`` observations of the same value in one call."""
+        self.counts[bisect_right(self.edges, v)] += n
+        self.count += n
+        self.sum += v * n
+
+    def merge(self, other: "Histogram") -> None:
+        if other.edges != self.edges:
+            raise ValueError(
+                f"histogram {self.name!r}: bucket layouts differ "
+                f"({self.edges} vs {other.edges}); edges are fixed at "
+                f"creation and must be stable across merges")
+        for i, c in enumerate(other.counts):
+            self.counts[i] += c
+        self.count += other.count
+        self.sum += other.sum
+
+    def quantile(self, q: float) -> float:
+        """Upper bucket edge containing quantile ``q`` (0..1)."""
+        if self.count == 0:
+            return 0.0
+        target = q * self.count
+        acc = 0
+        for i, c in enumerate(self.counts):
+            acc += c
+            if acc >= target:
+                return self.edges[min(i, len(self.edges) - 1)]
+        return self.edges[-1]
+
+    @property
+    def mean(self) -> float:
+        return self.sum / self.count if self.count else 0.0
+
+    def collect(self):
+        return {"count": self.count, "sum": self.sum, "mean": self.mean,
+                "edges": list(self.edges), "counts": list(self.counts)}
+
+
+class MetricsRegistry:
+    """Name-keyed registry of counters, gauges and histograms."""
+
+    def __init__(self):
+        self._m: dict = {}
+
+    def _get(self, name, cls, *args):
+        m = self._m.get(name)
+        if m is None:
+            m = self._m[name] = cls(name, *args)
+        elif not isinstance(m, cls):
+            raise TypeError(f"metric {name!r} already registered as "
+                            f"{m.kind}, requested {cls.kind}")
+        return m
+
+    def counter(self, name: str) -> Counter:
+        return self._get(name, Counter)
+
+    def gauge(self, name: str) -> Gauge:
+        return self._get(name, Gauge)
+
+    def histogram(self, name: str, edges=LATENCY_MS_BUCKETS) -> Histogram:
+        h = self._get(name, Histogram, edges)
+        if h.edges != tuple(float(e) for e in edges):
+            raise ValueError(f"histogram {name!r} already registered with "
+                             f"edges {h.edges}")
+        return h
+
+    def merge(self, other: "MetricsRegistry") -> None:
+        """Fold ``other`` into this registry (types and edges must agree)."""
+        for name, m in other._m.items():
+            if isinstance(m, Histogram):
+                self.histogram(name, m.edges).merge(m)
+            else:
+                self._get(name, type(m)).merge(m)
+
+    def names(self):
+        return sorted(self._m)
+
+    def __len__(self) -> int:
+        return len(self._m)
+
+    def __contains__(self, name) -> bool:
+        return name in self._m
+
+    def get(self, name):
+        return self._m.get(name)
+
+    def collect(self) -> dict:
+        return {name: self._m[name].collect() for name in sorted(self._m)}

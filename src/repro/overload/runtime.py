@@ -46,6 +46,7 @@ from ..core.engine import (HamletRuntime, PaneMicroBatcher, RunStats,
                            _Instance, advance_instances, combine_results)
 from ..core.events import EventBatch
 from ..core.query import Workload
+from ..obs.metrics import LATENCY_MS_BUCKETS
 from .accountant import ErrorAccountant
 from .config import OverloadConfig
 from .controller import LatencyController
@@ -80,22 +81,35 @@ class OverloadMetrics:
         return float(np.percentile([getattr(p, what) for p in self.panes], q))
 
     def summary(self) -> dict:
-        offered = sum(p.offered for p in self.panes)
-        admitted = sum(p.admitted for p in self.panes)
-        shed = sum(p.shed for p in self.panes)
+        # one pane-list pass per field (the percentile() helper would
+        # re-extract the list for every quantile — 5 passes instead of 2)
+        panes = self.panes
+        offered = sum(p.offered for p in panes)
+        admitted = sum(p.admitted for p in panes)
+        shed = sum(p.shed for p in panes)
+        if panes:
+            proc = np.fromiter((p.proc_ms for p in panes), float, len(panes))
+            lat = np.fromiter((p.lat_ms for p in panes), float, len(panes))
+            mean_ratio = float(np.mean(
+                np.fromiter((p.shed_ratio for p in panes), float,
+                            len(panes))))
+            p50_proc, p99_proc = np.percentile(proc, [50, 99])
+            p50_lat, p99_lat, max_lat = np.percentile(lat, [50, 99, 100])
+        else:
+            mean_ratio = 0.0
+            p50_proc = p99_proc = p50_lat = p99_lat = max_lat = 0.0
         return {
-            "panes": len(self.panes),
+            "panes": len(panes),
             "offered": offered,
             "admitted": admitted,
             "shed": shed,
             "shed_frac": shed / offered if offered else 0.0,
-            "mean_shed_ratio": (float(np.mean([p.shed_ratio for p in self.panes]))
-                                if self.panes else 0.0),
-            "p50_proc_ms": self.percentile(50, "proc_ms"),
-            "p99_proc_ms": self.percentile(99, "proc_ms"),
-            "p50_lat_ms": self.percentile(50, "lat_ms"),
-            "p99_lat_ms": self.percentile(99, "lat_ms"),
-            "max_lat_ms": self.percentile(100, "lat_ms"),
+            "mean_shed_ratio": mean_ratio,
+            "p50_proc_ms": float(p50_proc),
+            "p99_proc_ms": float(p99_proc),
+            "p50_lat_ms": float(p50_lat),
+            "p99_lat_ms": float(p99_lat),
+            "max_lat_ms": float(max_lat),
         }
 
 
@@ -135,6 +149,11 @@ class _GroupDriver:
         """Finalize + fold this group's pane (after the micro-batch drained)."""
         rt = self.rt
         pane = rt.pane
+        obs = rt.obs
+        key = (self.group_key, t0) if obs is not None and obs.tracing \
+            else None
+        fold_t0 = None
+        fold_dt = 0.0
         for comp, ctx, pend, per in zip(rt.components, rt.ctxs, pends,
                                         self.insts):
             M = pend.finalize()
@@ -146,7 +165,11 @@ class _GroupDriver:
                 needs_minmax = ci in ctx.minmax_queries
                 t_fold = time.perf_counter()
                 advance_instances(M[ci], insts)
-                stats.fold_s += time.perf_counter() - t_fold
+                dt = time.perf_counter() - t_fold
+                stats.fold_s += dt
+                if fold_t0 is None:
+                    fold_t0 = t_fold
+                fold_dt += dt
                 for w0, inst in list(insts.items()):
                     if needs_minmax and len(pane_ev):
                         inst.events.append(pane_ev)
@@ -155,12 +178,18 @@ class _GroupDriver:
                             ctx, ci, q, inst, self.group_key)
                         del insts[w0]
                         stats.windows_emitted += 1
+                        if key is not None:
+                            obs.lifecycle("emit", key,
+                                          args={"w0": w0, "q": aqi})
+        if obs is not None and fold_t0 is not None:
+            obs.pane_phase("fold", fold_t0, fold_dt, key=key)
 
     def advance(self, pane_ev: EventBatch, t0: int, out: dict,
                 stats: RunStats) -> None:
         """Single-pane convenience: plan, drain, apply."""
         mb = PaneMicroBatcher(self.rt.executor, k=1,
-                              fold_exec=self.rt.fold_exec)
+                              fold_exec=self.rt.fold_exec,
+                              obs=self.rt.obs)
         pends = self.plan(pane_ev, mb, stats)
         mb.drain()
         self.apply(pends, pane_ev, t0, out, stats)
@@ -169,13 +198,14 @@ class _GroupDriver:
 class OverloadRuntime:
     def __init__(self, workload: Workload, config: OverloadConfig,
                  policy=None, backend: str = "np", clock=time.perf_counter,
-                 batch_exec: bool = True):
+                 batch_exec: bool = True, obs=None):
         self.workload = workload
         self.config = config
+        self.obs = obs
         self.rt = HamletRuntime(workload, policy=policy, backend=backend,
                                 batch_exec=batch_exec,
                                 plan_cache=config.plan_cache,
-                                fold_exec=config.fold_exec)
+                                fold_exec=config.fold_exec, obs=obs)
         self.pane = self.rt.pane
         self.stats = self.rt.stats
         self.micro_batch = max(1, int(config.micro_batch))
@@ -267,6 +297,7 @@ class OverloadRuntime:
         # controllable quantity), amortized across the fused micro-batch;
         # end-to-end latency is reported alongside
         proc_s = (self._clock() - c0) / len(backlog)
+        obs = self.obs
         for t0, n, keep_n, n_late, kept in backlog:
             lat_ms = self._latency_ms(t0, proc_s)
             self.controller.update(proc_s * 1e3)
@@ -274,6 +305,15 @@ class OverloadRuntime:
                 t0=t0, offered=n, admitted=len(kept), shed=n - keep_n,
                 proc_ms=proc_s * 1e3, lat_ms=lat_ms,
                 shed_ratio=self.controller.shed_ratio, late=n_late))
+            if obs is not None:
+                obs.observe("overload.pane_proc_ms", proc_s * 1e3,
+                            LATENCY_MS_BUCKETS)
+                obs.observe("overload.pane_shed_lat_ms", lat_ms,
+                            LATENCY_MS_BUCKETS)
+                obs.set_gauge("overload.shed_ratio",
+                              self.controller.shed_ratio)
+                if n > keep_n:
+                    obs.count("overload.shed_events", n - keep_n)
 
     def _process(self, kept: EventBatch, t0: int) -> None:
         """Process one admitted pane through the group drivers."""
@@ -284,7 +324,7 @@ class OverloadRuntime:
         component) into one micro-batch, drain once — one launch per size
         bucket per K panes — then finalize and fold in stream order."""
         mb = PaneMicroBatcher(self.rt.executor, k=len(panes),
-                              fold_exec=self.rt.fold_exec)
+                              fold_exec=self.rt.fold_exec, obs=self.rt.obs)
         planned: list = []
         for t0, kept in panes:
             parts = kept.partition_by_group() if len(kept) else {}

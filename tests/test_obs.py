@@ -1,0 +1,356 @@
+"""Observability-layer differentials and contracts.
+
+The layer must be *read-only*: attaching an :class:`Observability` facade
+(tracing + audit on, or fully disabled) to any runtime — engine, overload,
+event-time — must leave results bitwise identical.  On top of that, the
+artifacts have contracts of their own: the trace exports as strict
+Chrome-trace JSONL with well-formed span nesting, per-pane phase spans sum
+to the ``RunStats`` wall-clock phase totals (they are recorded from the
+same ``perf_counter`` readings), histogram bucket layouts are stable
+across merges, and the sharing-decision audit log replays the exact
+decided-group sets the plan cache saw as key components.
+
+The quick representatives run in the fast lane; the full named-workload
+sweeps carry the ``slow`` marker.
+"""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.core.engine import HamletRuntime, vals_equal
+from repro.core.optimizer import DynamicPolicy, FlopPolicy
+from repro.core.plan_cache import PanePlanCache
+from repro.eventtime import EventTimeConfig, EventTimeRuntime
+from repro.obs import (LAG_BUCKETS, LATENCY_MS_BUCKETS, PHASES, Counter,
+                       Histogram, MetricsRegistry, Observability,
+                       SharingAuditLog, Tracer, jsonl_to_chrome)
+from repro.overload import OverloadConfig
+from repro.overload.runtime import OverloadMetrics, OverloadRuntime, PaneMetric
+from repro.streams.generator import (NAMED_STREAMS, DisorderConfig,
+                                     apply_disorder)
+
+from benchmarks.common import kleene_workload
+
+WORKLOAD_SHAPE = {
+    "ridesharing": dict(kleene_type="Travel",
+                        head_types=["Request", "Pickup", "Dropoff"]),
+    "stock": dict(kleene_type="Quote", head_types=["Buy", "Sell"]),
+    "smarthome": dict(kleene_type="Measure", head_types=["Load", "Work"]),
+    "taxi": dict(kleene_type="Travel", head_types=["Request", "Pickup"]),
+}
+
+
+def _schema_for(name):
+    from repro.streams import generator as G
+
+    return {"ridesharing": G.RIDESHARING_SCHEMA, "stock": G.STOCK_SCHEMA,
+            "smarthome": G.SMARTHOME_SCHEMA, "taxi": G.TAXI_SCHEMA}[name]
+
+
+def _named_case(name, epm=250, minutes=2, n_queries=4):
+    wl = kleene_workload(_schema_for(name), n_queries,
+                         **WORKLOAD_SHAPE[name], within=60, slide=30)
+    stream = NAMED_STREAMS[name](events_per_minute=epm, minutes=minutes,
+                                 seed=13)
+    t_end = ((int(stream.time.max()) + 30) // 30) * 30
+    return wl, stream, t_end
+
+
+def _assert_bitwise(a, b, tag=""):
+    assert a.keys() == b.keys(), tag
+    for k in a:
+        assert vals_equal(a[k], b[k]), (tag, k)
+
+
+# ------------------------------------------------- read-only: obs on == off
+
+
+def _sweep_obs_bitwise(name):
+    wl, stream, t_end = _named_case(name)
+    want = HamletRuntime(wl).run(stream, t_end)
+    for mk, K in ((Observability, 1), (Observability.disabled, 1),
+                  (Observability, 4)):
+        got = HamletRuntime(wl, obs=mk(), micro_batch=K).run(stream, t_end)
+        _assert_bitwise(got, want, (name, mk.__name__, K))
+
+
+def test_obs_bitwise_engine_ridesharing():
+    _sweep_obs_bitwise("ridesharing")
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("name", ["stock", "smarthome", "taxi"])
+def test_obs_bitwise_engine_named(name):
+    _sweep_obs_bitwise(name)
+
+
+def test_obs_bitwise_overload():
+    """Deterministic shedding: overload results with obs attached match the
+    plain run bitwise, and the registry carries the shed series."""
+    wl, stream, t_end = _named_case("ridesharing", epm=400)
+    cfg = dict(slo_ms=50.0, shed_policy="benefit_weighted", fixed_shed=0.3,
+               micro_batch=4)
+    want = OverloadRuntime(wl, OverloadConfig(**cfg)).run(stream, t_end)
+    obs = Observability()
+    got = OverloadRuntime(wl, OverloadConfig(**cfg), obs=obs).run(
+        stream, t_end)
+    _assert_bitwise(got, want, "overload")
+    series = obs.registry.collect()
+    assert "overload.pane_proc_ms" in series
+    assert "overload.pane_shed_lat_ms" in series
+    assert series["overload.shed_events"] > 0
+
+
+def test_obs_bitwise_eventtime():
+    wl, stream, t_end = _named_case("ridesharing")
+    want = HamletRuntime(wl, plan_cache=False).run(stream, t_end)
+    ds = apply_disorder(stream, DisorderConfig(model="bounded_skew",
+                                               fraction=0.2, seed=2))
+    cfg = EventTimeConfig(watermark="bounded_skew",
+                          skew=max(ds.max_lateness(), 1), speculative=True)
+    for obs in (None, Observability(), Observability.disabled()):
+        et = EventTimeRuntime(wl, cfg, micro_batch=4, obs=obs)
+        got = et.run_disordered(ds.base, ds.order, chunk=64, t_end=t_end)
+        _assert_bitwise(got, want, ("eventtime", obs is not None))
+    series = obs.registry.collect()  # last run: disabled tracer, live registry
+    assert "eventtime.watermark_lag" in series
+    assert "eventtime.emit_lag" in series
+
+
+# -------------------------------------------------------- trace contracts
+
+
+def test_trace_jsonl_schema_roundtrip(tmp_path):
+    wl, stream, t_end = _named_case("ridesharing")
+    obs = Observability()
+    rt = HamletRuntime(wl, obs=obs, micro_batch=4)
+    rt.run(stream, t_end)
+    path = tmp_path / "trace.jsonl"
+    n = obs.export_trace(path)
+    lines = path.read_text().splitlines()
+    assert len(lines) == n > 0
+    evs = [json.loads(l) for l in lines]
+    depth = 0
+    for ev in evs:
+        assert {"ph", "name", "cat", "ts", "pid", "tid"} <= ev.keys()
+        if ev["ph"] == "X":
+            assert ev["dur"] >= 0.0
+            assert ev["tid"] >= (1 if ev["cat"] == "phase" else 0)
+        elif ev["ph"] == "i":
+            assert ev["s"] == "t"
+        elif ev["ph"] == "B":
+            depth += 1
+        elif ev["ph"] == "E":
+            depth -= 1
+        assert depth >= 0, "E before matching B"
+    assert depth == 0, "unbalanced B/E spans"
+    # phase spans appear for all four pipeline phases
+    names = {e["name"] for e in evs if e["ph"] == "X" and e["cat"] == "phase"}
+    assert set(PHASES) <= names
+    # the chrome envelope converter round-trips every event
+    dst = tmp_path / "trace.json"
+    assert jsonl_to_chrome(path, dst) == n
+    chrome = json.loads(dst.read_text())
+    assert len(chrome["traceEvents"]) == n
+
+
+def test_trace_phase_spans_sum_to_runstats():
+    """Acceptance: per-pane phase spans sum (within 5%) to the RunStats
+    phase totals — they are recorded from the same perf_counter readings."""
+    wl, stream, t_end = _named_case("ridesharing")
+    obs = Observability()
+    rt = HamletRuntime(wl, obs=obs, micro_batch=4)
+    rt.run(stream, t_end)
+    assert obs.tracer.dropped == 0
+    totals = obs.phase_totals()
+    for ph in PHASES:
+        stat = getattr(rt.stats, f"{ph}_s")
+        assert abs(totals.get(ph, 0.0) - stat) <= 0.05 * stat + 1e-9, ph
+
+
+def test_trace_ring_buffer_bounds():
+    tr = Tracer(capacity=8)
+    for i in range(50):
+        tr.complete(f"e{i}", 0.0, 1e-6)
+    assert len(tr) == 8
+    assert tr.dropped == 42
+
+
+def test_trace_sampling_reduces_tracks(tmp_path):
+    wl, stream, t_end = _named_case("ridesharing")
+
+    def tracks(sample):
+        obs = Observability(sample=sample)
+        HamletRuntime(wl, obs=obs).run(stream, t_end)
+        return len({e["tid"] for e in obs.tracer.events() if e["tid"] >= 1})
+
+    full, sampled = tracks(1), tracks(4)
+    assert 0 < sampled < full
+    assert sampled <= full // 4 + 1
+
+
+def test_disabled_tracer_is_noop():
+    obs = Observability.disabled()
+    assert not obs.tracing
+    with obs.span("flush"):
+        obs.lifecycle("ingest", (0, 0))
+        obs.cache_event(True, (0, 0))
+    assert len(obs.tracer) == 0
+    obs.count("x")           # the registry stays live when tracing is off
+    assert obs.registry.collect()["x"] == 1
+
+
+# ------------------------------------------------------- metrics contracts
+
+
+def test_histogram_bucket_edges_stable_across_merges():
+    a = Histogram("lat", LATENCY_MS_BUCKETS)
+    b = Histogram("lat", LATENCY_MS_BUCKETS)
+    for v in (0.1, 5.0, 700.0, 1e6):
+        a.observe(v)
+    for v in (0.01, 5.0):
+        b.observe(v)
+    a.merge(b)
+    assert a.edges == LATENCY_MS_BUCKETS        # merge never mutates edges
+    assert a.count == 6
+    assert sum(a.counts) == 6
+    with pytest.raises(ValueError):
+        a.merge(Histogram("lat", LAG_BUCKETS))  # differing layouts refuse
+
+
+def test_registry_merge_and_kind_conflicts():
+    r1, r2 = MetricsRegistry(), MetricsRegistry()
+    r1.counter("n").inc(2)
+    r2.counter("n").inc(3)
+    r1.gauge("g").set(1.0)
+    r2.gauge("g").set(7.0)
+    r1.histogram("h", LATENCY_MS_BUCKETS).observe(1.0)
+    r2.histogram("h", LATENCY_MS_BUCKETS).observe(2.0)
+    r1.merge(r2)
+    c = r1.collect()
+    assert c["n"] == 5
+    assert c["g"] == 7.0                        # gauge merge: last wins
+    assert c["h"]["count"] == 2
+    with pytest.raises(TypeError):
+        r1.gauge("n")                           # kind conflict on one name
+    with pytest.raises(ValueError):
+        r1.histogram("h", LAG_BUCKETS)          # edge conflict on one name
+    assert isinstance(r1.counter("n"), Counter)
+
+
+def test_overload_summary_single_pass_parity():
+    """The vectorized summary must match np.percentile per field."""
+    rng = np.random.default_rng(3)
+    m = OverloadMetrics()
+    for i in range(200):
+        m.add(PaneMetric(t0=i, offered=10, admitted=7, shed=3,
+                         proc_ms=float(rng.gamma(2.0, 3.0)),
+                         lat_ms=float(rng.gamma(2.0, 8.0)),
+                         shed_ratio=float(rng.uniform(0, 0.5))))
+    s = m.summary()
+    proc = [p.proc_ms for p in m.panes]
+    lat = [p.lat_ms for p in m.panes]
+    assert s["p50_proc_ms"] == pytest.approx(np.percentile(proc, 50))
+    assert s["p99_proc_ms"] == pytest.approx(np.percentile(proc, 99))
+    assert s["p50_lat_ms"] == pytest.approx(np.percentile(lat, 50))
+    assert s["p99_lat_ms"] == pytest.approx(np.percentile(lat, 99))
+    assert s["max_lat_ms"] == pytest.approx(max(lat))
+    assert s["shed_frac"] == pytest.approx(600 / 2000)
+    assert OverloadMetrics().summary()["p99_lat_ms"] == 0.0
+
+
+def test_fold_flush_plan_lru_counters():
+    """Warm reruns hit the fold executor's flush-plan LRU; the counters
+    surface both as plain ints and through the registry facade."""
+    wl, stream, t_end = _named_case("ridesharing")
+    obs = Observability.disabled()
+    rt = HamletRuntime(wl, obs=obs, micro_batch=4)
+    rt.run(stream, t_end)
+    fe = rt.fold_exec
+    assert fe.plan_misses > 0
+    h0, m0 = fe.plan_hits, fe.plan_misses
+    rt.run(stream, t_end)                       # warm: same pane shapes
+    assert fe.plan_hits > h0
+    assert fe.plan_misses == m0                 # nothing new to build
+    series = obs.registry.collect()
+    assert series["fold_exec.flush_plan.hits"] == fe.plan_hits
+    assert series["fold_exec.flush_plan.misses"] == fe.plan_misses
+    # collect() folds the executor counters into the unified view
+    view = obs.collect(stats=rt.stats, runtime=rt)
+    assert view["executors"]["fold"]["flush_plan_hits"] == fe.plan_hits
+    assert view["engine"]["panes"] == rt.stats.panes
+
+
+# --------------------------------------------------------- audit contracts
+
+
+def test_audit_flip_and_share_counting():
+    log = SharingAuditLog(capacity=4)
+    g1, g2 = ((0, 1),), ((0,), (1,))
+    log.record(pane=(0, 0), comp=0, el=0, candidates=(0, 1), decided=g1)
+    log.record(pane=(0, 5), comp=0, el=0, candidates=(0, 1), decided=g1)
+    log.record(pane=(0, 10), comp=0, el=0, candidates=(0, 1), decided=g2)
+    assert log.flips == 1
+    assert log.shared_decisions == 2 and log.split_decisions == 1
+    for i in range(10):
+        log.record(pane=(0, i), comp=0, el=0, candidates=(0, 1), decided=g1)
+    assert len(log.entries()) == 4              # bounded ring
+    assert log.dropped > 0
+    assert log.summary()["decisions"] == 13
+
+
+@pytest.mark.parametrize("policy_cls", [DynamicPolicy, FlopPolicy])
+def test_audit_replays_plan_cache_key_groups(monkeypatch, policy_cls):
+    """Acceptance: the audit log replays the exact decided-group sets used
+    as plan-cache key components — captured here straight off every
+    ``PanePlanCache.get`` call (both the dyn-fast whole-pane key and the
+    per-burst signature walk)."""
+    captured = []
+    orig = PanePlanCache.get
+
+    def spy(self, key):
+        captured.append(key)
+        return orig(self, key)
+
+    monkeypatch.setattr(PanePlanCache, "get", spy)
+    wl, stream, t_end = _named_case("ridesharing")
+    obs = Observability()
+    rt = HamletRuntime(wl, policy=policy_cls(), obs=obs)
+    rt.run(stream, t_end)
+    assert captured
+
+    def key_groups(key):
+        if key[0] == "FD":                      # dyn-fast whole-pane key
+            return key[4]
+        return tuple(part if part is None else part[2]
+                     for _tid, _neg, part in key[1:])
+
+    extracted = {key_groups(k) for k in captured}
+    pkg = obs.audit.pane_key_groups()
+    assert pkg
+    assert extracted == set(pkg.values())
+    # every recorded decision's decided tuple is a member of its pane's key
+    entries = obs.audit.entries()
+    assert entries
+    for e in entries:
+        assert e.decided in pkg[(e.comp,) + e.pane]
+        assert e.candidates and e.shared == any(
+            len(g) >= 2 for g in e.decided)
+    if policy_cls is FlopPolicy:
+        assert all(e.benefit is not None for e in entries)
+    d = entries[0].to_dict()
+    assert json.loads(json.dumps(d)) == d       # JSON round-trip clean
+
+
+def test_audit_export_jsonl(tmp_path):
+    wl, stream, t_end = _named_case("ridesharing")
+    obs = Observability()
+    HamletRuntime(wl, policy=DynamicPolicy(), obs=obs).run(stream, t_end)
+    path = tmp_path / "audit.jsonl"
+    n = obs.audit.export_jsonl(path)
+    rows = [json.loads(l) for l in path.read_text().splitlines()]
+    assert len(rows) == n == len(obs.audit.entries())
+    assert all({"seq", "pane", "decided", "shared", "flipped"} <= r.keys()
+               for r in rows)

@@ -299,6 +299,56 @@ def _obs_overhead(wl, panes, policy, reps: int = 15) -> tuple[float, float]:
     return plain_w * statistics.median(ratios), plain_w
 
 
+# warm plan phase-share ceiling for every workload in the committed
+# trajectory: at plan-cache hit rate 1.0 the batched stacked prologue keeps
+# fixed per-pane plan work under a fifth of the pane budget
+PLAN_SHARE_CEIL = 0.20
+
+
+def _fold_depth_launches(n_bursts: int) -> tuple[int, int]:
+    """Warm FoldExecutor launches for one K=4 flush whose panes carry
+    ``n_bursts`` single-event bursts (fold-chain depth grows with the
+    burst count), on the jax backend — the scanned-flush path.  Returns
+    ``(launches, rounds)`` where ``rounds`` is the deepest cached flush
+    plan, so the caller can assert the depths really differ while the
+    launch count does not."""
+    import jax
+
+    jax.config.update("jax_enable_x64", True)
+    from repro.core.engine import HamletRuntime, PaneMicroBatcher, RunStats
+    from repro.core.events import EventBatch, StreamSchema
+    from repro.core.pattern import EventType, Kleene, Seq
+    from repro.core.query import Query, Workload
+
+    schema = StreamSchema(types=("A", "B"), attrs=("v",))
+    a, b = EventType("A"), EventType("B")
+    wl = Workload(schema, [
+        Query("q1", Seq(a, Kleene(b)), within=40, slide=20),
+        Query("q2", Kleene(b), within=40, slide=20),
+    ])
+    evs = [0] + [1, 0] * n_bursts
+    batch = EventBatch(schema, np.array(evs, dtype=np.int32),
+                       np.arange(1, len(evs) + 1),
+                       np.ones((len(evs), 1)))
+    rt = HamletRuntime(wl, backend="jax", micro_batch=4, plan_cache=True,
+                       fold_exec=True)
+    proc = rt.make_processor(0)
+    stats = RunStats()
+
+    def flush():
+        mb = PaneMicroBatcher(rt.executor, k=4, fold_exec=rt.fold_exec)
+        pends = [mb.submit(proc, batch, stats) for _ in range(4)]
+        mb.drain()
+        for p in pends:
+            p.finalize()
+
+    flush()                       # cold: builds + compiles the flush plan
+    l0 = rt.fold_exec.launches
+    flush()                       # warm: the cached plan's one scan launch
+    rounds = max(len(fp.rounds) for fp in rt.fold_exec._plans.values())
+    return rt.fold_exec.launches - l0, rounds
+
+
 def check(rtol: float = 0.25, obs_tol: float = 0.03) -> int:
     """CI perf-smoke: re-measure the smoke workload, compare the warm
     speedup ratio against the committed ``BENCH_e2e.json``, and gate the
@@ -313,6 +363,22 @@ def check(rtol: float = 0.25, obs_tol: float = 0.03) -> int:
               "regenerate it in quick mode before relying on perf-smoke")
         return 1
     committed = payload["workloads"][SMOKE]
+    # the committed artifact itself must match what the docs claim: the
+    # stacked fold carries finalize below execute on the smoke workload
+    # (a recorded ``false`` used to slip through because only the rtol
+    # ratio was gated), and every workload's warm plan share sits under
+    # the stacked-prologue ceiling
+    if not committed.get("finalize_below_execute", False):
+        print(f"FAIL: committed BENCH_e2e.json records "
+              f"finalize_below_execute=false on {SMOKE} — the trajectory "
+              f"contradicts the docs; re-run and re-commit the bench")
+        return 1
+    for name, rec in payload["workloads"].items():
+        share = rec["optimized"]["phase_split"]["plan"]
+        if share >= PLAN_SHARE_CEIL:
+            print(f"FAIL: committed warm plan share {share:.3f} on {name} "
+                  f"is at/above the {PLAN_SHARE_CEIL:.2f} ceiling")
+            return 1
     wl, stream, policy = _cases(quick=True, only_smoke=True)[SMOKE]
     current = run_case(wl, stream, policy, quick=True, min_bursts=64)
     want = committed["speedup_warm"]
@@ -335,6 +401,30 @@ def check(rtol: float = 0.25, obs_tol: float = 0.03) -> int:
         print("FAIL: warm finalize phase share regressed past the execute "
               "share — the stacked fold path is no longer carrying the "
               "finalize phase")
+        return 1
+    # plan-share gate: the re-measured warm plan share must stay under the
+    # stacked-prologue ceiling (with the same rtol slack as the other
+    # re-measured ratios — the committed values are gated exactly above)
+    plan_share = ps["plan"]
+    print(f"perf-smoke [{SMOKE}]: warm plan share {plan_share:.3f} "
+          f"(ceiling {PLAN_SHARE_CEIL * (1.0 + rtol):.3f})")
+    if plan_share > PLAN_SHARE_CEIL * (1.0 + rtol):
+        print("FAIL: warm plan phase share regressed past the "
+              f"{PLAN_SHARE_CEIL:.2f} stacked-prologue ceiling")
+        return 1
+    # launch-constancy gate: a warm scanned flush is one device program, so
+    # the per-flush launch count must not grow with fold-chain depth
+    (l_shallow, r_shallow), (l_deep, r_deep) = (
+        _fold_depth_launches(8), _fold_depth_launches(24))
+    print(f"perf-smoke [fold-depth]: warm flush launches {l_shallow} at "
+          f"{r_shallow} rounds vs {l_deep} at {r_deep} rounds")
+    if r_deep <= r_shallow:
+        print("FAIL: fold-depth probe did not produce a deeper flush plan "
+              "— the launch-constancy gate is vacuous")
+        return 1
+    if l_deep != l_shallow:
+        print("FAIL: warm fold launches per flush grew with fold-chain "
+              "depth — the flush is no longer one scanned device program")
         return 1
     # obs-overhead gate: a disabled Observability facade (tracing + audit
     # off, registry attached) must stay within ``obs_tol`` of the plain

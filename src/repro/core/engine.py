@@ -20,20 +20,29 @@ Four-phase pipeline (plan → execute → finalize → fold)
 ------------------------------------------------------
 A pane is processed in three engine phases plus the runtime's window fold:
 
-1. **plan** — the pane is run-length segmented once, per-(query, type)
-   predicates are evaluated as *stacked* vector passes over every event of
-   that type in the pane (all bursts at once), divergence rows come from one
-   broadcast comparison, the sharing policy decides each burst's groups, and
-   each group's masks/adjacency/injection rows are captured as propagation
-   *jobs*.  Nothing here depends on the running aggregates, so the whole
-   pane plans up front.  The structural output of this phase is memoized in
-   a :class:`~repro.core.plan_cache.PanePlanCache`: the cache key is the
+1. **plan** — the *prologue* runs batched across all K panes of a
+   micro-batch flush (:meth:`PaneProcessor.plan_prologues`): one
+   concatenated relevance filter, one run-length segmentation (memoized on
+   the flush's type sequence — the same structural recurrence the plan
+   cache banks on), and one stacked per-(query, type) predicate pass over
+   every event of each type across the whole flush, sliced back per pane;
+   the packed signature bytes the cache probe consumes are assembled in
+   the same pass.  The order-sensitive *finish* then walks panes in
+   submission order: the sharing policy decides each burst's groups (a
+   whole-pane decision memo keyed on the divergence image replays
+   decisions while the running event count stays inside the policy's
+   replay-stable interval), and each group's masks/adjacency/injection
+   rows are captured as propagation *jobs*.  Nothing here depends on the
+   running aggregates, so the whole pane plans up front.  The structural
+   output of this phase is memoized in a
+   :class:`~repro.core.plan_cache.PanePlanCache`: the cache key is the
    pane signature — type run-length encoding, packed per-burst predicate /
    edge-mask bits, negation hits, and the optimizer's decided groups — so a
    repeated pane shape skips group construction, adjacency/injection-row
    building and the snapshot column layout entirely and only swaps in fresh
-   attribute data.  The sharing decision is recomputed every pane and lives
-   in the *key*, so plan reuse never freezes the share/no-share choice.
+   attribute data (or reuses the cached step list zero-copy).  The sharing
+   decision is recomputed every pane and lives in the *key*, so plan reuse
+   never freezes the share/no-share choice.
 2. **execute** — jobs go to a :class:`~repro.core.batch_exec
    .PaneBatchExecutor`, which buckets them by size (ragged edges padded
    where exact) and solves each bucket with **one** batched launch of the
@@ -53,10 +62,17 @@ A pane is processed in three engine phases plus the runtime's window fold:
    across the pane **and** across every pane of a micro-batch flush.  The
    level schedule is cached on the :class:`~repro.core.plan_cache.PanePlan`
    and the merged K-pane flush plan in the executor's own LRU, so warm
-   panes skip fold planning entirely.  :meth:`PaneProcessor.finalize` keeps
+   panes skip fold planning entirely.  A *scannable* flush plan (no
+   negation splits, one d == 0 bucket per round) carries a compiled
+   execution form: on the jax/pallas backends the whole warm flush is
+   **one** ``jax.lax.scan`` device program
+   (:func:`repro.kernels.ops.fold_rounds_scan`) — one launch and one host
+   sync however deep the fold chain is — and on the numpy backend its
+   fused host twin (one flush-wide segmented ``S`` fill + gather, then the
+   identical stacked ops per round).  :meth:`PaneProcessor.finalize` keeps
    the sequential per-graphlet replay as the reference path
-   (``fold_exec=False``) — the two are bitwise identical
-   (``tests/test_fold_exec.py``).
+   (``fold_exec=False``) — all paths are bitwise identical
+   (``tests/test_fold_exec.py``, ``tests/test_fold_scan.py``).
 4. **fold** — sliding-window instances advance with a single batched [C×C]
    matmul per pane — overlapping windows share all per-event work (the
    paper's pane sharing, Sec. 3.1).  Under micro-batching the drained panes
@@ -79,9 +95,16 @@ the phase totals; the audit log captures each optimizer share/no-share
 decision verbatim as it enters the plan-cache key.  With ``obs=None``
 (default) every hook is a single guarded attribute test — zero cost.
 
-Host/device residency: on the numpy backend the executor reuses host staging
-buffers across flushes; on the jax/pallas backends bucket outputs stay
-device-resident until **one** host fetch per flush (see ``batch_exec.py``).
+Host/device residency on a fully-warm flush: the host side is the batched
+prologue (numpy vector passes), the plan-cache dict probes, and the
+executor submit bookkeeping; everything shape-dependent was precomputed
+into cached plans.  On the jax/pallas backends the execute phase launches
+every bucket before syncing once via ``ops.device_get_all`` (bucket
+outputs stay device-resident until that fetch — see ``batch_exec.py``),
+and the fold phase is one ``lax.scan`` launch whose index operands and
+fresh state already live on device; its single ``np.asarray`` of the
+scanned state is the flush's one fold-side sync point.  On the numpy
+backend the executor reuses host staging buffers across flushes instead.
 
 Trend counts grow like 2^g and overflow fixed-width types for realistic panes
 (the paper is silent on this); the engine computes in float64 by default.
@@ -135,6 +158,10 @@ class ComponentContext:
         self.pos_type_ids = sorted(pos)
         self.neg_type_ids = sorted(neg)
         self.relevant_type_ids = sorted(pos | neg)
+        # O(1) relevance filter: keep = lut[type_id] (np.isin re-sorts the
+        # needle list on every pane; the plan prologue is on the warm path)
+        self.relevant_lut = np.zeros(len(schema.types), dtype=bool)
+        self.relevant_lut[self.relevant_type_ids] = True
         self.local = {e: i for i, e in enumerate(self.pos_type_ids)}
 
         units: set[tuple] = set()
@@ -204,6 +231,11 @@ class ComponentContext:
                            if self.match_flag[qi, el]] for el in range(t)}
         self.kle_pos = {el: [qi for qi in self.q_pos[el]
                              if self.kleene_flag[qi, el]] for el in range(t)}
+        # type ids whose kleene query set is too wide for the dyn-fast
+        # signature walk (empty on every shipped workload, so the per-pane
+        # gate is one isdisjoint probe instead of a max() genexpr)
+        self.kle_big = frozenset(tid for tid, el in self.local.items()
+                                 if len(self.kle_pos[el]) >= 60)
         # local types with at least one edge-predicated query (the per-burst
         # edge-mask walk is skipped entirely for the rest)
         self.edge_pred_els = {
@@ -223,6 +255,18 @@ class ComponentContext:
         m = np.ones(len(attrs), dtype=bool)
         for p in ps:
             m &= p.eval(attrs, self.schema)
+        return m
+
+    def match_stack(self, q_pos: list[int], type_id: int,
+                    attrs: np.ndarray) -> np.ndarray:
+        """Stacked :meth:`match_vec` for several queries: one ``[nq, n]``
+        allocation instead of ``nq`` vectors plus an ``np.stack`` copy.
+        Row ``i`` is bitwise ``match_vec(q_pos[i], ...)`` (elementwise
+        predicate evaluation into a preallocated row)."""
+        m = np.ones((len(q_pos), len(attrs)), dtype=bool)
+        for i, qi in enumerate(q_pos):
+            for p in self._preds.get((qi, type_id), ()):
+                m[i] &= p.eval(attrs, self.schema)
         return m
 
     def edge_mask(self, qi: int, type_id: int, attrs: np.ndarray) -> np.ndarray | None:
@@ -330,6 +374,38 @@ class _GroupPlan:
     # members.
 
 
+class _Prologue:
+    """Order-independent phase-1 products of one pane: filtered events,
+    burst runs, stacked match vectors with their signature byte images, and
+    negation hits — everything :meth:`PaneProcessor._plan_finish` consumes
+    that does not read mutable planner state.  Built per pane by
+    :meth:`PaneProcessor._plan_prologue` or, for a whole micro-batch, in one
+    stacked pass by :meth:`PaneProcessor.plan_prologues`."""
+
+    __slots__ = ("ev", "runs", "mv_type", "mv_bytes", "neg_type", "present",
+                 "has_edge", "codes", "runs_shape", "sig_mv")
+
+    def __init__(self, ev, runs, mv_type, mv_bytes, neg_type, present,
+                 has_edge, codes=None, runs_shape=None, sig_mv=None):
+        self.ev = ev
+        self.runs = runs
+        self.mv_type = mv_type
+        self.mv_bytes = mv_bytes
+        self.neg_type = neg_type
+        self.present = present
+        self.has_edge = has_edge
+        # per-type packed divergence images (pattern-based policies only):
+        # tid -> [n_events] int64 coverage codes, sliced per burst by the
+        # dyn-fast walk
+        self.codes = codes or {}
+        # precomputed ((tid, burst len), ...) signature prefix, shared by
+        # every plan-cache key form; None on the unbatched path
+        self.runs_shape = runs_shape
+        # the match-bit bytes of every live type in ``present`` order —
+        # the plan-cache key consumes this tuple as is
+        self.sig_mv = sig_mv
+
+
 class PaneProcessor:
     def __init__(self, ctx: ComponentContext, policy, backend: str = "np",
                  max_local_basis: int = 512, executor=None, plan_cache=None,
@@ -344,12 +420,34 @@ class PaneProcessor:
                          else PaneBatchExecutor(backend=backend))
         self.plan_cache: PanePlanCache | None = plan_cache
         self.fold_exec = fold_exec
+        # policy traits probed once (the plan hot path reads them per pane)
+        self._policy_static = getattr(policy, "decision_static", False)
+        self._policy_pattern = getattr(policy, "pattern_based", False)
         # the PanePlan the most recent plan() hit or created (the fold
         # schedule is cached on it); None when planning uncached
         self._last_host: PanePlan | None = None
         # static sharing policies decide per (type, candidate set) only:
         # their group layout is memoized per local type
         self._static_groups: dict[int, tuple] = {}
+        # divergence-image layout per local type (candidate rows, reference
+        # row, start-flag diff) and burst-slice -> pattern-multiset memo for
+        # the dyn-fast walk; parked on the (long-lived) context so warm
+        # sweeps with fresh processors keep their memoized extraction
+        if not hasattr(ctx, "kle_layout_memo"):
+            ctx.kle_layout_memo = {}
+            ctx.pats_memo = {}
+            ctx.dyn_pane_memo = {}
+            ctx.seg_memo = {}
+        self._kle_layout: dict[int, tuple] = ctx.kle_layout_memo
+        self._pats_cache: dict[bytes, tuple] = ctx.pats_memo
+        # micro-batch segmentation memo: (ktype bytes, pane bounds) ->
+        # (per-pane runs, per-type (tid, idx, off) layout)
+        self._seg_memo: dict[tuple, tuple] = ctx.seg_memo
+        # whole-pane decision-walk memo for the dyn-fast path: (runs shape,
+        # per-type divergence-code bytes) -> [(n_lo, n_hi, groups_all, sig_t,
+        # decisions, splits)] — valid while the running event count stays in
+        # the intersection of the bursts' decision-replay intervals
+        self._dyn_pane_memo: dict[tuple, list] = ctx.dyn_pane_memo
 
     # -- burst segmentation (Def. 10) --
 
@@ -396,23 +494,52 @@ class PaneProcessor:
         return steps
 
     def _plan_pane(self, pane: EventBatch, stats: RunStats) -> list:
+        return self._plan_finish(pane, self._plan_prologue(pane), stats)
+
+    def _wants_codes(self, el: int) -> bool:
+        """Whether the prologue should pack a divergence image for this
+        local type (pattern-based policy with a real sharing choice)."""
+        return (self._policy_pattern
+                and len(self.ctx.kle_pos[el]) >= 2
+                and len(self.ctx.kle_pos[el]) < 60)
+
+    def _div_codes(self, el: int, mv: np.ndarray) -> np.ndarray:
+        """Packed per-event divergence image: bit ``j`` of an event's code
+        marks candidate ``j`` diverging from the reference there (the
+        stacked, edge-free twin of :meth:`_divergence_rows`).  Elementwise
+        per event, so slices of a concatenated pass equal per-pane calls."""
         ctx = self.ctx
-        self._last_host = None
-        obs = self.obs
-        audit = obs.audit if obs is not None else None
-        pkey = (obs.pane_key(pane)
-                if obs is not None and (audit is not None or obs.tracing)
-                else None)
+        lay = self._kle_layout.get(el)
+        if lay is None:
+            q_pos, kle = ctx.q_pos[el], ctx.kle_pos[el]
+            ri = q_pos.index(kle[0])
+            idx = np.array([q_pos.index(qi) for qi in kle])
+            sdiff = ctx.start_flag[kle, el] != ctx.start_flag[kle[0], el]
+            lay = self._kle_layout[el] = (
+                ri, idx, sdiff if sdiff.any() else None,
+                1 << np.arange(len(kle), dtype=np.int64))
+        ri, idx, sdiff, bits = lay
+        D = mv[idx] != mv[ri]
+        if sdiff is not None:
+            D[sdiff] |= mv[idx[sdiff]] | mv[ri]
+        return bits @ D
 
-        keep = np.isin(pane.type_id, ctx.relevant_type_ids)
+    def _plan_prologue(self, pane: EventBatch) -> "_Prologue":
+        """The order-independent half of phase 1: event filtering, burst
+        segmentation, and the stacked per-(query, type) predicate pass.
+
+        Touches no mutable planner state (``stats``, the benefit model, the
+        plan cache), so the micro-batcher may run it for all K panes of a
+        flush in one batched pass (:meth:`plan_prologues`) before the
+        order-sensitive :meth:`_plan_finish` walks replay in submission
+        order.
+        """
+        ctx = self.ctx
+        keep = ctx.relevant_lut[pane.type_id]
         ev = pane.select(np.nonzero(keep)[0])
-        stats.events += len(ev)
-        stats.panes += 1
-
         runs = self._segment(ev.type_id)
-        stats.bursts += len(runs)
         if not runs:
-            return []
+            return _Prologue(ev, runs, {}, {}, {}, [], False)
 
         # stacked per-type predicate evaluation: one vectorized pass per
         # (query, type) over *all* of the pane's events of that type, across
@@ -422,6 +549,7 @@ class PaneProcessor:
         mv_type: dict[int, np.ndarray] = {}
         mv_bytes: dict[int, bytes] = {}
         neg_type: dict[int, list] = {}
+        codes: dict[int, np.ndarray] = {}
         cache = self.plan_cache
         present: list[int] = []
         has_edge = False
@@ -437,15 +565,251 @@ class PaneProcessor:
             if el is not None and ctx.q_pos[el]:
                 if ctx.edge_pred_els[el]:
                     has_edge = True
-                mv_type[tid] = np.stack([ctx.match_vec(qi, tid, attrs_t)
-                                         for qi in ctx.q_pos[el]])
+                mv_type[tid] = ctx.match_stack(ctx.q_pos[el], tid, attrs_t)
                 if cache is not None:
                     mv_bytes[tid] = np.ascontiguousarray(
                         mv_type[tid].T).tobytes()
+                if self._wants_codes(el):
+                    codes[tid] = self._div_codes(el, mv_type[tid])
+        return _Prologue(ev, runs, mv_type, mv_bytes, neg_type, present,
+                         has_edge, codes,
+                         sig_mv=(tuple(mv_bytes[t] for t in present
+                                       if t in mv_bytes)
+                                 if cache is not None else None))
+
+    def _seg_build(self, panes: list[EventBatch]) -> tuple:
+        """Cold half of :meth:`plan_prologues`: the full index plan for one
+        flush type-shape.  Returns ``(kidx, kb, ktype, perm, runs_per,
+        layout, shapes_per)`` where ``kidx`` gathers the kept rows out of
+        the pane-major attrs concatenation, ``perm`` gathers them in
+        type-major order for the stacked predicate pass, and each layout
+        entry carries every ctx-static per-type datum the warm loop reads
+        (element id, q_pos, negation rules, edge/code flags, per-pane
+        split offsets, type-major slice bounds)."""
+        ctx = self.ctx
+        type_cat = np.concatenate([p.type_id for p in panes])
+        pb = np.cumsum([0] + [len(p) for p in panes])
+        keep = ctx.relevant_lut[type_cat]
+        kidx = np.nonzero(keep)[0]
+        ktype = type_cat[kidx]
+        kb = np.concatenate([[0], np.cumsum(keep)])[pb].tolist()
+        # one RLE pass with forced cuts at pane boundaries: each pane's
+        # runs are the consecutive cut pairs inside its slice
+        cut = (np.nonzero(np.diff(ktype))[0] + 1) if len(ktype) else \
+            np.zeros(0, dtype=int)
+        cuts = np.unique(np.concatenate([cut, kb]))
+        pos = np.searchsorted(cuts, kb)  # pane bounds are all in cuts
+        cuts_l = cuts.tolist()
+        tids_l = (ktype[cuts[:-1]].tolist() if len(ktype) else [])
+        runs_per = []
+        for i in range(len(panes)):
+            base = cuts_l[pos[i]]
+            runs_per.append([
+                (tids_l[j], slice(cuts_l[j] - base, cuts_l[j + 1] - base))
+                for j in range(pos[i], pos[i + 1])])
+        layout, perm_parts, lo = [], [], 0
+        all_static = True
+        for tid in sorted(set(tids_l)):
+            idx = np.nonzero(ktype == tid)[0]
+            el = ctx.local.get(tid)
+            live = el is not None and bool(ctx.q_pos[el])
+            qp = ctx.q_pos[el] if live else None
+            neg = ctx.neg_rules.get(tid)
+            wants = live and self._wants_codes(el)
+            stat = None
+            if live and not any(ctx._preds.get((qi, tid)) for qi in qp):
+                # predicate-free type: the stacked match pass is all-ones —
+                # a pure function of the type sequence — so the stack, its
+                # signature byte image, and the divergence codes are
+                # seg-static (consumers only ever read/slice them)
+                mv_cat = np.ones((len(qp), len(idx)), dtype=bool)
+                stat = (mv_cat, mv_cat.T.tobytes(), len(qp),
+                        self._div_codes(el, mv_cat) if wants else None)
+            elif live:
+                all_static = False
+            if neg is not None:
+                all_static = False
+            layout.append((tid, np.searchsorted(idx, kb).tolist(), el, live,
+                           el is not None and ctx.edge_pred_els[el],
+                           neg, qp, wants, lo, lo + len(idx), stat))
+            perm_parts.append(kidx[idx])
+            lo += len(idx)
+        perm = (np.concatenate(perm_parts) if perm_parts
+                else np.zeros(0, dtype=np.intp))
+        shapes_per = [tuple((tid, sl.stop - sl.start) for tid, sl in rs)
+                      for rs in runs_per]
+        static_pros = None
+        if all_static:
+            # every live type is predicate-free and no type carries
+            # negation rules: the whole per-pane prologue product except
+            # the filtered events themselves is seg-static
+            static_pros = []
+            for i in range(len(panes)):
+                mv_d, mvb_d, codes_d, pres = {}, {}, {}, []
+                edge = False
+                for (tid, off, el, live, edge_t, neg, qp, wants,
+                     lo_t, hi_t, stat) in layout:
+                    lo2, hi2 = off[i], off[i + 1]
+                    if lo2 == hi2:
+                        continue
+                    pres.append(tid)
+                    if stat is not None:
+                        mv_cat, img_b, nq, codes_cat = stat
+                        if edge_t:
+                            edge = True
+                        mv_d[tid] = mv_cat[:, lo2:hi2]
+                        mvb_d[tid] = img_b[lo2 * nq:hi2 * nq]
+                        if codes_cat is not None:
+                            codes_d[tid] = codes_cat[lo2:hi2]
+                sig = tuple(mvb_d[t] for t in pres if t in mvb_d)
+                static_pros.append((mv_d, mvb_d, codes_d, pres, edge, sig))
+        return (kidx, kb, ktype, perm, runs_per, layout, shapes_per,
+                static_pros)
+
+    def plan_prologues(self, panes: list[EventBatch]) -> list["_Prologue"]:
+        """Batched phase-1 prologue for K panes of one micro-batch flush.
+
+        One ``np.isin`` filter, one run-length segmentation (with forced
+        cuts at pane boundaries), and one predicate-stack pass per (query,
+        type) run over the *concatenation* of all K panes; per-pane results
+        are slices of the stacked arrays.  Predicates evaluate elementwise
+        and the byte images are row-major, so every slice — match vectors,
+        runs, signature bytes — is bitwise identical to the per-pane
+        :meth:`_plan_prologue` output.
+        """
+        if len(panes) == 1:
+            return [self._plan_prologue(panes[0])]
+        ctx = self.ctx
+        cache = self.plan_cache
+        # The whole index plan — keep indices, pane bounds, RLE runs, the
+        # per-type layout, and the type-major gather permutation — is a
+        # pure function of the pane type *sequences*, the recurrence the
+        # plan cache already banks on, so it is memoized on their raw
+        # bytes.  A warm flush then does one attrs concatenation plus two
+        # gathers before the predicate pass.
+        seg_key = tuple(p.type_id.tobytes() for p in panes)
+        seg = self._seg_memo.get(seg_key)
+        if seg is None:
+            if len(self._seg_memo) >= 2048:
+                self._seg_memo.clear()
+            seg = self._seg_memo[seg_key] = self._seg_build(panes)
+        (kidx, kb, ktype, perm, runs_per, layout, shapes_per,
+         static_pros) = seg
+        raw = np.concatenate([p.attrs for p in panes])
+        # each pane's filtered view is a zero-copy row slice of the
+        # pane-major gather (panes were validated at construction, so the
+        # dataclass re-validation in select() is skipped).  These views
+        # are plan-internal: the finish walk reads only ``len`` and
+        # ``attrs``, so the time/group columns are never materialized.
+        attrs_sel = raw[kidx]
+        schema = panes[0].schema
+        evs = []
+        for i in range(len(panes)):
+            ev = object.__new__(EventBatch)
+            ev.schema = schema
+            ev.type_id = ktype[kb[i]:kb[i + 1]]
+            ev.attrs = attrs_sel[kb[i]:kb[i + 1]]
+            ev.time = ev.group = ev.seq = None
+            evs.append(ev)
+        pros = [None] * len(panes)
+        if static_pros is not None:
+            # fully static flush shape: the attrs gather above is the only
+            # content-dependent work left in phase 1's prologue
+            for i, ev in enumerate(evs):
+                mv_d, mvb_d, codes_d, pres, edge, sig = static_pros[i]
+                pros[i] = _Prologue(ev, runs_per[i], mv_d,
+                                    mvb_d if cache is not None else {},
+                                    {}, pres, edge, codes_d, shapes_per[i],
+                                    sig if cache is not None else None)
+            return pros
+        # stacked predicate pass over each type's concatenated events; the
+        # per-pane split points were precomputed into the layout
+        attrs_ts = raw[perm]       # type-major rows for the predicate pass
+        mv_per: list[dict] = [{} for _ in panes]
+        mvb_per: list[dict] = [{} for _ in panes]
+        neg_per: list[dict] = [{} for _ in panes]
+        codes_per: list[dict] = [{} for _ in panes]
+        pres_per: list[list] = [[] for _ in panes]
+        sig_per: list[list] = [[] for _ in panes]
+        edge_per = [False] * len(panes)
+        for tid, off, el, live, edge_t, neg_rules, qp, wants_codes, \
+                lo_t, hi_t, stat in layout:
+            attrs_t = attrs_ts[lo_t:hi_t]
+            neg_cat = ([(qi, rule, ctx.match_vec(qi, tid, attrs_t))
+                        for qi, rule in neg_rules]
+                       if neg_rules is not None else None)
+            codes_cat = None
+            if live:
+                if stat is not None:
+                    mv_cat, img_b, row_b, codes_cat = stat
+                    if cache is None:
+                        img_b = None
+                else:
+                    mv_cat = ctx.match_stack(qp, tid, attrs_t)
+                    # one byte image for the whole type; per-pane signature
+                    # bytes are plain byte-string slices of it (row stride
+                    # = query count, C order of the transposed image)
+                    img_b = mv_cat.T.tobytes() if cache is not None else None
+                    row_b = mv_cat.shape[0] * mv_cat.itemsize
+                    if wants_codes:
+                        codes_cat = self._div_codes(el, mv_cat)
+            for i in range(len(panes)):
+                lo, hi = off[i], off[i + 1]
+                if lo == hi:
+                    continue
+                pres_per[i].append(tid)
+                if neg_cat is not None:
+                    neg_per[i][tid] = [(qi, rule, m[lo:hi])
+                                      for qi, rule, m in neg_cat]
+                if live:
+                    if edge_t:
+                        edge_per[i] = True
+                    mv_per[i][tid] = mv_cat[:, lo:hi]
+                    if img_b is not None:
+                        mvb = img_b[lo * row_b:hi * row_b]
+                        mvb_per[i][tid] = mvb
+                        sig_per[i].append(mvb)
+                    if codes_cat is not None:
+                        codes_per[i][tid] = codes_cat[lo:hi]
+        for i, ev in enumerate(evs):
+            pros[i] = _Prologue(ev, runs_per[i], mv_per[i], mvb_per[i],
+                                neg_per[i], pres_per[i], edge_per[i],
+                                codes_per[i], shapes_per[i],
+                                tuple(sig_per[i]) if cache is not None
+                                else None)
+        return pros
+
+    def _plan_finish(self, pane: EventBatch, pro: "_Prologue",
+                     stats: RunStats) -> list:
+        """The order-sensitive half of phase 1: stats evolution, sharing
+        decisions (the benefit model reads the running event count), plan
+        cache traffic, and step construction.  Must run in pane submission
+        order."""
+        ctx = self.ctx
+        self._last_host = None
+        obs = self.obs
+        audit = obs.audit if obs is not None else None
+        pkey = (obs.pane_key(pane)
+                if obs is not None and (audit is not None or obs.tracing)
+                else None)
+
+        ev = pro.ev
+        stats.events += len(ev)
+        stats.panes += 1
+        runs = pro.runs
+        stats.bursts += len(runs)
+        if not runs:
+            return []
+        mv_type = pro.mv_type
+        mv_bytes = pro.mv_bytes
+        neg_type = pro.neg_type
+        present = pro.present
+        has_edge = pro.has_edge
+        cache = self.plan_cache
 
         # sharing decisions that never read the divergence structure
         # (AlwaysShare / NeverShare) skip the per-burst divergence pass
-        static_policy = getattr(self.policy, "decision_static", False)
+        static_policy = self._policy_static
 
         # whole-pane fast signature: with a static policy, no negation types
         # and no edge predicates in the pane, the structural plan is fully
@@ -460,16 +824,19 @@ class PaneProcessor:
         # the *exact* compressed decision inputs, so a benefit flip lands in
         # a different cache entry instead of freezing the stale decision
         dyn_fast = (cache is not None and not static_policy
-                    and getattr(self.policy, "pattern_based", False)
+                    and self._policy_pattern
                     and not neg_type and not has_edge
-                    and max((len(ctx.kle_pos[ctx.local[t]]) for t in mv_type),
-                            default=0) < 60)
+                    and ctx.kle_big.isdisjoint(mv_type))
         key: tuple | None = None
         dyn_groups: list | None = None
+        rs = pro.runs_shape
+        if rs is None and cache is not None:
+            rs = tuple((tid, sl.stop - sl.start) for tid, sl in runs)
+        sig_mv = pro.sig_mv
+        if sig_mv is None and cache is not None:
+            sig_mv = tuple(mv_bytes[t] for t in present if t in mv_bytes)
         if fast:
-            key = ("F", self.max_local_basis,
-                   tuple((tid, sl.stop - sl.start) for tid, sl in runs),
-                   tuple(mv_bytes[t] for t in present if t in mv_bytes))
+            key = ("F", self.max_local_basis, rs, sig_mv)
             plan = cache.get(key)
             if plan is not None:
                 stats.plan_cache_hits += 1
@@ -484,7 +851,10 @@ class PaneProcessor:
         elif dyn_fast:
             dyn_groups, key = self._dyn_fast_groups(runs, ev, mv_type,
                                                     mv_bytes, present, stats,
-                                                    pkey=pkey, audit=audit)
+                                                    codes=pro.codes,
+                                                    pkey=pkey, audit=audit,
+                                                    runs_shape=rs,
+                                                    sig_mv=sig_mv)
             plan = cache.get(key)
             if plan is not None:
                 stats.plan_cache_hits += 1
@@ -505,8 +875,7 @@ class PaneProcessor:
         cursor: dict[int, int] = {}
         plan_bursts: list = []
         key_groups: list = []
-        sig: list = [(self.max_local_basis,
-                      tuple((tid, sl.stop - sl.start) for tid, sl in runs))]
+        sig: list = [(self.max_local_basis, rs)]
         for ri_, (tid, sl) in enumerate(runs):
             b = sl.stop - sl.start
             c = cursor.get(tid, 0)
@@ -745,7 +1114,9 @@ class PaneProcessor:
 
     def _dyn_fast_groups(self, runs: list, ev: EventBatch, mv_type: dict,
                          mv_bytes: dict, present: list, stats: RunStats,
-                         pkey=None, audit=None) -> tuple[list, tuple]:
+                         codes: dict | None = None, pkey=None,
+                         audit=None, runs_shape=None,
+                         sig_mv: tuple | None = None) -> tuple[list, tuple]:
         """Whole-pane fast key for pattern-based dynamic policies.
 
         Requires an edge-free, negation-free pane.  One vectorized
@@ -759,23 +1130,42 @@ class PaneProcessor:
         .optimizer.DynamicPolicy` panes while a benefit flip (the running
         event count crossing a cost threshold) misses into a fresh entry.
         Returns (per-run groups for injection into the plan walk, key).
+
+        The whole walk is memoized per (runs shape, per-type divergence-code
+        bytes): the sharing decisions are pure functions of the coverage
+        patterns, ``b`` and the running event count ``n``, and the policy
+        reports the exact ``n`` interval on which each decision replays
+        (:attr:`~repro.core.optimizer._PolicyBase.last_interval`).  A warm
+        pane whose ``n`` lands inside the recorded intersection skips the
+        per-burst loop entirely — one dict probe replaces the decision walk.
+        Audit-enabled runs bypass the memo (the audit log wants per-burst
+        benefit values, which vary with ``n`` inside an interval).
         """
         ctx = self.ctx
-        codes_type: dict[int, np.ndarray] = {}
-        for tid, mv in mv_type.items():
-            el = ctx.local[tid]
-            q_pos = ctx.q_pos[el]
-            kle = ctx.kle_pos[el]
-            if len(kle) < 2:
-                continue
-            ri = q_pos.index(kle[0])
-            idx = np.array([q_pos.index(qi) for qi in kle])
-            D = mv[idx] != mv[ri]
-            sdiff = ctx.start_flag[kle, el] != ctx.start_flag[kle[0], el]
-            if sdiff.any():
-                D[sdiff] |= mv[idx[sdiff]] | mv[ri]
-            codes_type[tid] = (
-                (1 << np.arange(len(kle), dtype=np.int64)) @ D)
+        codes_type = codes
+        n_pane = stats.events
+        if runs_shape is None:
+            runs_shape = tuple((tid, sl.stop - sl.start) for tid, sl in runs)
+        if sig_mv is None:
+            sig_mv = tuple(mv_bytes[t] for t in present if t in mv_bytes)
+        pm_key: tuple | None = None
+        if audit is None:
+            pm_key = (runs_shape,
+                      tuple(a.tobytes() for a in codes_type.values()))
+            ent = self._dyn_pane_memo.get(pm_key)
+            if ent is not None:
+                for lo, hi, groups_all, sig_t, n_dec, n_split in ent:
+                    if lo <= n_pane <= hi:
+                        stats.decisions += n_dec
+                        stats.split_bursts += n_split
+                        key = ("FD", self.max_local_basis, runs_shape,
+                               sig_mv, sig_t)
+                        return groups_all, key
+        dec0 = stats.decisions
+        split0 = stats.split_bursts
+        iv_lo, iv_hi = None, None
+        memoable = pm_key is not None
+        pats_cache = self._pats_cache
         groups_all: list = []
         sig: list = []
         cursor: dict[int, int] = {}
@@ -793,13 +1183,25 @@ class PaneProcessor:
             groups: list = []
             pats = None
             if len(kle) >= 2:
-                codes = codes_type[tid][c:c + b]
-                codes = codes[codes != 0]
-                vals, counts = np.unique(codes, return_counts=True)
-                pats = tuple(zip(vals.tolist(), counts.tolist()))
+                csl = codes_type[tid][c:c + b]
+                cb = csl.tobytes()
+                pats = pats_cache.get(cb)
+                if pats is None:
+                    nz = csl[csl != 0]
+                    vals, counts = np.unique(nz, return_counts=True)
+                    pats = tuple(zip(vals.tolist(), counts.tolist()))
+                    if len(pats_cache) >= 8192:
+                        pats_cache.clear()
+                    pats_cache[cb] = pats
                 shared_sets = self.policy.decide_patterns(
                     patterns=pats, candidates=kle, b=b, n=stats.events,
                     t=t_layout, stats=stats)
+                iv = self.policy.last_interval
+                if iv is None:
+                    memoable = False
+                else:
+                    iv_lo = iv[0] if iv_lo is None else max(iv_lo, iv[0])
+                    iv_hi = iv[1] if iv_hi is None else min(iv_hi, iv[1])
                 in_shared = set(qq for s in shared_sets for qq in s)
                 groups.extend([s for s in shared_sets if len(s) >= 2])
                 groups.extend([[qi] for s in shared_sets
@@ -819,10 +1221,16 @@ class PaneProcessor:
         sig_t = tuple(sig)
         if audit is not None:
             audit.note_pane(pkey, sig_t, comp=self.comp)
-        key = ("FD", self.max_local_basis,
-               tuple((tid, sl.stop - sl.start) for tid, sl in runs),
-               tuple(mv_bytes[t] for t in present if t in mv_bytes),
-               sig_t)
+        if memoable:
+            lo, hi = ((iv_lo, iv_hi) if iv_lo is not None
+                      else (0, float("inf")))
+            if lo <= hi:
+                if len(self._dyn_pane_memo) >= 4096:
+                    self._dyn_pane_memo.clear()
+                self._dyn_pane_memo.setdefault(pm_key, []).append(
+                    (lo, hi, groups_all, sig_t,
+                     stats.decisions - dec0, stats.split_bursts - split0))
+        key = ("FD", self.max_local_basis, runs_shape, sig_mv, sig_t)
         return groups_all, key
 
     # -- divergence detection (per-event signature differences) --
@@ -1184,6 +1592,7 @@ class _PendingPane:
     plan_host: object = None
     M: np.ndarray | None = None
     pane_key: tuple | None = None
+    pane: EventBatch | None = None    # unplanned payload until drain()
 
     def finalize(self) -> np.ndarray:
         if self.M is None:
@@ -1193,13 +1602,17 @@ class _PendingPane:
 
 
 class PaneMicroBatcher:
-    """Accumulate planned panes and flush their propagation backlog together.
+    """Accumulate submitted panes and flush the whole backlog together.
 
-    ``submit`` plans a pane immediately (phase 1 — plan order is therefore
-    identical to per-pane execution, which keeps the optimizer's running
-    event count, and hence every sharing decision, bitwise reproducible);
-    ``drain`` runs both execute rounds for *all* pending panes through the
-    shared executor — one launch per size bucket per K panes — then, when a
+    ``submit`` only queues the pane; planning is deferred to ``drain``,
+    which runs phase 1 for the whole micro-batch as one *batched prologue*
+    per processor (one stacked event filter / RLE segmentation / predicate
+    pass over all K panes — see :meth:`PaneProcessor.plan_prologues`)
+    followed by the per-pane decision walks **in submission order** — the
+    optimizer's running event count, and hence every sharing decision,
+    stays bitwise identical to per-pane planning.  ``drain`` then runs both
+    execute rounds for all pending panes through the shared executor — one
+    launch per size bucket per K panes — and, when a
     :class:`~repro.core.fold_exec.FoldExecutor` is attached, folds every
     pending pane's finalize backlog with one stacked launch set (one flush =
     one plan + one execute + one fold launch set) and returns the pending
@@ -1225,19 +1638,49 @@ class PaneMicroBatcher:
         if obs is not None and obs.tracing:
             key = obs.pane_key(pane)
             obs.lifecycle("ingest", key, args={"events": len(pane)})
-        steps = proc.plan(pane, stats)
-        pend = _PendingPane(proc, steps, stats, jobs=[None] * len(steps),
-                            plan_host=proc._last_host, pane_key=key)
+        pend = _PendingPane(proc, None, stats, jobs=None, pane_key=key,
+                            pane=pane)
         self._pending.append(pend)
         return pend
 
     def ready(self) -> bool:
         return len(self._pending) >= self.k
 
+    def _plan_pending(self, pend: list[_PendingPane]) -> None:
+        """Deferred phase 1 for the whole micro-batch: batched prologues
+        per processor, then the order-sensitive finish walks in submission
+        order."""
+        obs = self.obs
+        t0 = perf_counter()
+        with np.errstate(over="ignore", invalid="ignore"):
+            by_proc: dict[int, list[_PendingPane]] = {}
+            for p in pend:
+                by_proc.setdefault(id(p.proc), []).append(p)
+            pros: dict[int, object] = {}
+            for plist in by_proc.values():
+                proc = plist[0].proc
+                for p, pro in zip(plist, proc.plan_prologues(
+                        [q.pane for q in plist])):
+                    pros[id(p)] = pro
+            for p in pend:
+                p.steps = p.proc._plan_finish(p.pane, pros[id(p)], p.stats)
+                p.plan_host = p.proc._last_host
+                p.jobs = [None] * len(p.steps)
+        dt = (perf_counter() - t0) / len(pend)
+        for p in pend:
+            p.stats.plan_s += dt
+        if obs is not None:
+            if obs.tracing:
+                for i, p in enumerate(pend):
+                    obs.pane_phase("plan", t0 + i * dt, dt, key=p.pane_key)
+            else:
+                obs.pane_phase_n("plan", dt, len(pend))
+
     def drain(self) -> list[_PendingPane]:
         pend, self._pending = self._pending, []
         if not pend:
             return pend
+        self._plan_pending(pend)
         ex = self.executor
         obs = self.obs
         sp = (obs.span("flush", args={"panes": len(pend)})

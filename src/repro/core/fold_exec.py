@@ -211,28 +211,38 @@ class FoldJob:
     M: np.ndarray | None = None
 
 
+def _state0(ctx, J: int) -> np.ndarray:
+    """Fresh fused pane-entry state ``Z [J, k, R, C]`` (row layout: ``0 =
+    gate``, ``1 + u*t + ty = arow[u, ty]``, ``1 + nu*t + u = rrow[u]``)."""
+    k, nu = ctx.k, ctx.nu
+    t, C = len(ctx.pos_type_ids), ctx.layout.size
+    R = 1 + nu * t + nu
+    Z = np.zeros((J, k, R, C))
+    Z[:, :, 0, ctx.layout.GATE] = 1.0
+    if nu and t:
+        Z[:, :, 1 + np.arange(nu * t), ctx.a_cols.reshape(-1)] = 1.0
+    if nu:
+        Z[:, :, 1 + nu * t + np.arange(nu), ctx.rp_cols] = 1.0
+    return Z
+
+
 class _CtxState:
     """Stacked running state of every pending job sharing one component
-    context, fused into one array ``Z [J, k, R, C]`` with row layout
-    ``0 = gate``, ``1 + u*t + ty = arow[u, ty]``, ``1 + nu*t + u =
-    rrow[u]`` — one gather serves a whole bucket's ``W`` build."""
+    context, fused into one array ``Z [J, k, R, C]`` — one gather serves a
+    whole bucket's ``W`` build (see :func:`_state0` for the row layout)."""
 
-    def __init__(self, ctx, jobs: list[FoldJob]):
+    def __init__(self, ctx, jobs: list[FoldJob], Z: np.ndarray | None = None):
         self.ctx = ctx
         self.jobs = jobs
-        J, k, nu = len(jobs), ctx.k, ctx.nu
+        nu = ctx.nu
         t, C = len(ctx.pos_type_ids), ctx.layout.size
         self.nu, self.t, self.C = nu, t, C
-        self.R = R = 1 + nu * t + nu
-        Z = np.zeros((J, k, R, C))
-        Z[:, :, 0, ctx.layout.GATE] = 1.0
-        if nu and t:
-            Z[:, :, 1 + np.arange(nu * t), ctx.a_cols.reshape(-1)] = 1.0
-        if nu:
-            Z[:, :, 1 + nu * t + np.arange(nu), ctx.rp_cols] = 1.0
+        self.R = 1 + nu * t + nu
+        if Z is None:
+            Z = _state0(ctx, len(jobs))
         self.Z = Z
-        self.Z2 = Z.reshape(J * k, R, C)
-        self.Zf = Z.reshape(J * k * R, C)
+        self.Z2 = Z.reshape(len(jobs) * ctx.k, self.R, C)
+        self.Zf = Z.reshape(len(jobs) * ctx.k * self.R, C)
 
     def apply_neg(self, row: int, hits) -> None:
         nu, t = self.nu, self.t
@@ -290,6 +300,29 @@ class _Round:
 
 
 @dataclass
+class _ScanProgram:
+    """Device-resident operand set executing a whole *scannable* flush plan
+    as one ``jax.lax.scan`` launch (see :func:`repro.kernels.ops
+    .fold_rounds_scan` for the operand semantics).  Everything here but the
+    per-flush ``S`` block is structural, so it is built once per flush plan
+    and stays on device across flushes."""
+
+    Z0: object             # [J*k*R + 1, C] fresh state + scratch row
+    PTM: object            # [rounds, NMAX, t]
+    GQ: object             # [rounds, NMAX, R]
+    SIDX: object           # [rounds, NMAX, n_used]
+    SC: object             # [rounds, NMAX * n_used]
+    ER: object             # [rounds, NMAX * n_used]
+    nu: int
+    t: int
+    n_used: int
+    J: int
+    k: int
+    R: int
+    C: int
+
+
+@dataclass
 class _FlushPlan:
     """Cached merged fold plan of one (ctx, K-pane schedule combination).
 
@@ -297,11 +330,23 @@ class _FlushPlan:
     of the whole flush; rows of trivial graphlets are pre-summed at build
     time (their count coefficients are the plan-cached injection rows), the
     rest are rewritten each flush by ``s_fill`` — one stacked column sum per
-    distinct burst length across *all* rounds."""
+    distinct burst length across *all* rounds.
+
+    A *scannable* plan (every round: no negation steps, exactly one d == 0
+    bucket) additionally carries a compiled execution form: ``scan`` (device
+    backends — the whole flush as one ``lax.scan`` launch) or ``fast``
+    (numpy — the fused host round loop with one flush-wide ``S`` gather)."""
 
     rounds: list           # [_Round]
     s_flat: np.ndarray | None
     s_fill: list           # [(global ordinals, [(state row, step idx)])]
+    scan: _ScanProgram | None = None
+    fast: list | None = None      # [(merged bucket, S_all row offset)]
+    fast_cat: np.ndarray | None = None   # concatenated gof_g of all rounds
+    # fused form of ``s_fill``: (segment refs [(row, step, unit)], segment
+    # start offsets, flat ordinals) — one concatenate + one reduceat per
+    # flush instead of one stack + sum per distinct burst length
+    s_fill_cat: tuple | None = None
 
 
 class FoldExecutor:
@@ -377,28 +422,40 @@ class FoldExecutor:
             ctx_of[cid] = j.proc.ctx
 
         for cid, cjobs in by_ctx.items():
-            st = _CtxState(ctx_of[cid], cjobs)
+            ctx = ctx_of[cid]
             fp = self._plan(cid, cjobs)
             # flush-global dynamic S fills: one stacked column sum per
             # distinct burst length across every round of the flush —
             # bitwise equal per slice to the per-group ``coef.sum(axis=0)``
             S_flat = fp.s_flat
-            for ords, refs, u in fp.s_fill:
-                if u == 0:
-                    arrs = [cjobs[row].jobs[si][0].result
-                            for row, si in refs]
+            if fp.s_fill_cat is not None:
+                # one gather + one segmented column sum for every dynamic
+                # fill of the flush; each reduceat segment adds the same
+                # rows in the same order as the per-group ``sum(axis=1)``
+                refs, starts, ords = fp.s_fill_cat
+                jb = cjobs
+                cat = np.concatenate(
+                    [jb[row].jobs[si][0].result if u == 0
+                     else jb[row].jobs[si][1][u].result
+                     for row, si, u in refs])
+                S_flat[ords] = np.add.reduceat(cat, starts, axis=0)
+            if fp.scan is not None:
+                # device-resident warm path: the whole fold chain is one
+                # lax.scan launch and one host sync, independent of depth
+                st = self._run_scan(ctx, cjobs, fp, S_flat)
+            else:
+                st = _CtxState(ctx, cjobs)
+                if fp.fast is not None:
+                    self._run_fast(st, fp, S_flat)
                 else:
-                    arrs = [cjobs[row].jobs[si][1][u].result
-                            for row, si in refs]
-                S_flat[ords] = np.stack(arrs).sum(axis=1)
-            for rd in fp.rounds:
-                for row, hits in rd.negs:
-                    st.apply_neg(row, hits)
-                for mb in rd.buckets:
-                    if mb.d:
-                        self._fold_bucket_div(st, mb, cjobs)
-                    else:
-                        self._fold_bucket_fast(st, mb, S_flat)
+                    for rd in fp.rounds:
+                        for row, hits in rd.negs:
+                            st.apply_neg(row, hits)
+                        for mb in rd.buckets:
+                            if mb.d:
+                                self._fold_bucket_div(st, mb, cjobs)
+                            else:
+                                self._fold_bucket_fast(st, mb, S_flat)
             MJ = st.assemble()
             for row, j in enumerate(cjobs):
                 j.M = MJ[row].copy()
@@ -462,12 +519,99 @@ class FoldExecutor:
                     s_flat[go * n_used:(go + 1) * n_used] = row
             # group the dynamic fills by (burst length, unit): each becomes
             # one flush-wide stacked column sum
-            for _b, entries in s_dyn.items():
+            fill_refs: list = []
+            fill_ords: list = []
+            fill_lens: list = []
+            for b, entries in s_dyn.items():
                 ords = np.asarray([o for o, _ in entries], dtype=int)
                 refs = [r for _, r in entries]
                 for pos, u in enumerate(used):
                     s_fill.append((ords * n_used + pos, refs, u))
-        return _FlushPlan(rounds=rounds, s_flat=s_flat, s_fill=s_fill)
+                    fill_refs.extend((row, si, u) for row, si in refs)
+                    fill_ords.append(ords * n_used + pos)
+                    fill_lens.extend([b] * len(refs))
+        fp = _FlushPlan(rounds=rounds, s_flat=s_flat, s_fill=s_fill)
+        if s_fill:
+            starts = np.zeros(len(fill_lens), dtype=np.intp)
+            np.cumsum(fill_lens[:-1], out=starts[1:])
+            fp.s_fill_cat = (fill_refs, starts, np.concatenate(fill_ords))
+        if self._scannable(ctx, fp):
+            if self.backend != "np":
+                fp.scan = self._build_scan(ctx, len(cjobs), fp)
+            else:
+                self._build_fast(fp)
+        return fp
+
+    @staticmethod
+    def _scannable(ctx, fp: _FlushPlan) -> bool:
+        """True when every round is exactly one d == 0 bucket and no
+        negation steps — the shape :func:`ops.fold_rounds_scan` (and the
+        fused numpy round loop) compiles to a single uniform program."""
+        nu, t = ctx.nu, len(ctx.pos_type_ids)
+        if not fp.rounds or fp.s_flat is None or not nu or not t:
+            return False
+        for rd in fp.rounds:
+            if rd.negs or len(rd.buckets) != 1:
+                return False
+            mb = rd.buckets[0]
+            if mb.d or mb.B_local != 1 + nu:
+                return False
+        return True
+
+    def _build_scan(self, ctx, J: int, fp: _FlushPlan) -> _ScanProgram:
+        """Pad every round's gather/scatter operands to a common lane count
+        and park them on device.  Padded lanes read the scratch state row
+        and the zero ``S`` row and scatter back to the scratch row, so any
+        NaN/inf they produce (0 * inf from overflow-regime garbage) never
+        reaches a real state row."""
+        import jax
+
+        nu, t, C = ctx.nu, len(ctx.pos_type_ids), ctx.layout.size
+        k = ctx.k
+        R = 1 + nu * t + nu
+        n_used = len(fp.rounds[0].buckets[0].used)
+        scratch = J * k * R
+        n_s = fp.s_flat.shape[0]       # the appended zero S row's index
+        nr = len(fp.rounds)
+        nmax = max(len(rd.buckets[0].flat_gq) for rd in fp.rounds)
+        GQ = np.full((nr, nmax, R), scratch, dtype=np.int32)
+        PTM = np.zeros((nr, nmax, t))
+        SIDX = np.full((nr, nmax, n_used), n_s, dtype=np.int32)
+        SC = np.full((nr, nmax * n_used), scratch, dtype=np.int32)
+        ER = np.full((nr, nmax * n_used), scratch, dtype=np.int32)
+        ar = np.arange(R, dtype=np.int32)
+        for r, rd in enumerate(fp.rounds):
+            mb = rd.buckets[0]
+            nm = len(mb.flat_gq)
+            GQ[r, :nm] = mb.flat_gq[:, None].astype(np.int32) * R + ar
+            PTM[r, :nm] = mb.ptm
+            SIDX[r, :nm] = mb.gof_g.reshape(nm, n_used)
+            SC[r, :nm * n_used] = mb.flat_sc
+            if mb.flat_er is not None:
+                rows, em = mb.flat_er
+                if em is None:
+                    ER[r, :nm * n_used] = rows
+                else:
+                    ER[r, :nm * n_used][em] = rows
+        Z0 = np.concatenate([_state0(ctx, J).reshape(-1, C),
+                             np.zeros((1, C))])
+        dp = jax.device_put
+        return _ScanProgram(Z0=dp(Z0), PTM=dp(PTM), GQ=dp(GQ),
+                            SIDX=dp(SIDX), SC=dp(SC), ER=dp(ER),
+                            nu=nu, t=t, n_used=n_used, J=J, k=k, R=R, C=C)
+
+    @staticmethod
+    def _build_fast(fp: _FlushPlan) -> None:
+        """Numpy twin of the scan program: precompute each round's offset
+        into one flush-wide ``S`` gather so the hot loop runs without
+        per-round ``take`` calls or bucket dispatch."""
+        rounds, off = [], 0
+        for rd in fp.rounds:
+            mb = rd.buckets[0]
+            rounds.append((mb, off))
+            off += len(mb.gof_g)
+        fp.fast = rounds
+        fp.fast_cat = np.concatenate([mb.gof_g for mb, _ in rounds])
 
     def _merge_bucket(self, ctx, cjobs: list[FoldJob], parts: list,
                       s_rows: list, s_dyn: dict) -> _MergedBucket:
@@ -537,6 +681,64 @@ class FoldExecutor:
             flat_gq=jm * k + q, flat_sc=flat_sc, flat_er=flat_er,
             group_refs=group_refs,
             div_g=(np.concatenate(div_p, axis=0) if div_p else None))
+
+    # -- compiled execution forms for scannable plans --
+
+    def _run_scan(self, ctx, cjobs: list[FoldJob], fp: _FlushPlan,
+                  S_flat: np.ndarray) -> _CtxState:
+        """Run the whole flush as one device launch + one host sync.
+
+        Only the per-flush ``S`` block crosses to the device; every index
+        operand and the fresh state live there already.  Counts as a single
+        stacked launch however deep the fold chain is."""
+        sp = fp.scan
+        self.launches += 1
+        if self.obs is not None:
+            self.obs.count("fold_exec.scan_launches")
+            self.obs.observe("fold_exec.bucket_occupancy",
+                             max(len(rd.buckets[0].flat_gq)
+                                 for rd in fp.rounds), OCCUPANCY_BUCKETS)
+        S_pad = np.concatenate([S_flat, np.zeros((1, S_flat.shape[1]))])
+        Zf = ops.fold_rounds_scan(sp.Z0, S_pad, sp.PTM, sp.GQ, sp.SIDX,
+                                  sp.SC, sp.ER, nu=sp.nu, t=sp.t,
+                                  n_used=sp.n_used)
+        Z = np.asarray(Zf)[:-1].reshape(sp.J, sp.k, sp.R, sp.C)
+        return _CtxState(ctx, cjobs, Z=Z)
+
+    def _run_fast(self, st: _CtxState, fp: _FlushPlan,
+                  S_flat: np.ndarray) -> None:
+        """Fused host round loop for scannable plans: one flush-wide ``S``
+        gather, then per round the same three stacked ops as
+        :meth:`_fold_bucket_fast` (bitwise identical — each round's ``S``
+        slice holds the very rows the per-round ``take`` would copy)."""
+        nu, t, C = st.nu, st.t, st.C
+        Z2, Zf = st.Z2, st.Zf
+        obs = self.obs
+        nut = 1 + nu * t
+        S_all = S_flat.take(fp.fast_cat, axis=0)
+        for mb, off in fp.fast:
+            self.launches += 1
+            flat_gq = mb.flat_gq
+            nm = len(flat_gq)
+            if obs is not None:
+                obs.observe("fold_exec.bucket_occupancy", nm,
+                            OCCUPANCY_BUCKETS)
+            n_used = len(mb.used)
+            zm = Z2.take(flat_gq, axis=0)
+            W = mb.W_buf
+            if W is None:
+                W = mb.W_buf = np.empty((nm, mb.B_local, C))
+            W[:, 0] = zm[:, 0]
+            W[:, 1:1 + nu] = np.matmul(
+                mb.ptm[:, None, None, :],
+                zm[:, 1:nut].reshape(nm, nu, t, C))[:, :, 0, :]
+            S_m = S_all[off:off + nm * n_used].reshape(nm, n_used,
+                                                       mb.B_local)
+            upd = np.matmul(S_m, W).reshape(nm * n_used, C)
+            Zf[mb.flat_sc] += upd
+            if mb.flat_er is not None:
+                rows, em = mb.flat_er
+                Zf[rows] += upd if em is None else upd[em]
 
     # -- the two bucket kernels --
 

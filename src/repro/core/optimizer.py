@@ -22,12 +22,148 @@ event-level snapshots (Def. 9) if that query shares.
 
 from __future__ import annotations
 
+import math
+from collections import OrderedDict
+from fractions import Fraction
+
 import numpy as np
 
 from . import benefit as B
 
 __all__ = ["DynamicPolicy", "AlwaysShare", "NeverShare", "FlopPolicy",
            "divergence_patterns"]
+
+
+# --------------------------------------------------------------------------
+# exact decision memoization over the running event count
+# --------------------------------------------------------------------------
+#
+# Every quantity the v1/v2 benefit models compute is *affine* in ``n`` (the
+# running event count): ``shared = b*n*s_p + s_c*k*g*t`` and ``nonshared =
+# k*b*n`` never multiply ``n`` by itself.  The sharing decision is therefore
+# a deterministic function of the signs of finitely many affine comparisons,
+# i.e. piecewise-constant in ``n`` with exactly computable flip thresholds.
+# ``_Aff`` threads an affine number through the untouched cost code; every
+# comparison it takes records the exact integer interval of ``n`` on which
+# its outcome is stable, so one recorded decision replays bit-for-bit for
+# every ``n`` inside the interval — the warm-pane fast path is one dict hit
+# plus an interval check instead of the full classification + local search.
+
+
+class _IntervalRecorder:
+    """Integer interval of ``n`` on which every recorded comparison keeps
+    the outcome it had at ``n0`` (inclusive bounds; ±inf = unbounded)."""
+
+    __slots__ = ("n0", "lo", "hi")
+
+    def __init__(self, n0: int):
+        self.n0 = n0
+        self.lo = -math.inf
+        self.hi = math.inf
+
+    def constrain(self, da, dc, strict: bool, outcome: bool) -> None:
+        # predicate: da*n + dc < 0 (strict) / <= 0; held `outcome` at n0
+        r = (Fraction(-dc, da) if isinstance(da, int) and isinstance(dc, int)
+             else Fraction(-dc) / Fraction(da))
+        if outcome == strict:
+            # n strictly below/above the threshold
+            if (da > 0) == outcome:
+                self.hi = min(self.hi, math.ceil(r) - 1)
+            else:
+                self.lo = max(self.lo, math.floor(r) + 1)
+        else:
+            if (da > 0) == outcome:
+                self.hi = min(self.hi, math.floor(r))
+            else:
+                self.lo = max(self.lo, math.ceil(r))
+
+
+class _Aff:
+    """``a*n + c`` evaluated at the recorder's ``n0``; comparisons record
+    their exact stability interval.  Products of two n-dependent values are
+    rejected — the cost models are affine by construction."""
+
+    __slots__ = ("rec", "a", "c")
+
+    def __init__(self, rec, a, c):
+        self.rec = rec
+        self.a = a
+        self.c = c
+
+    def _coerce(self, o):
+        if isinstance(o, _Aff):
+            return o
+        if isinstance(o, (int, float)):
+            return _Aff(self.rec, 0, o)
+        return None
+
+    def __float__(self):
+        return float(self.a * self.rec.n0 + self.c)
+
+    def __add__(self, o):
+        o = self._coerce(o)
+        if o is None:
+            return NotImplemented
+        return _Aff(self.rec, self.a + o.a, self.c + o.c)
+
+    __radd__ = __add__
+
+    def __sub__(self, o):
+        o = self._coerce(o)
+        if o is None:
+            return NotImplemented
+        return _Aff(self.rec, self.a - o.a, self.c - o.c)
+
+    def __rsub__(self, o):
+        o = self._coerce(o)
+        if o is None:
+            return NotImplemented
+        return _Aff(self.rec, o.a - self.a, o.c - self.c)
+
+    def __neg__(self):
+        return _Aff(self.rec, -self.a, -self.c)
+
+    def __mul__(self, o):
+        if isinstance(o, _Aff):
+            if o.a == 0:
+                o = o.c
+            elif self.a == 0:
+                return _Aff(self.rec, o.a * self.c, o.c * self.c)
+            else:
+                raise TypeError("product of two n-dependent costs")
+        if not isinstance(o, (int, float)):
+            return NotImplemented
+        return _Aff(self.rec, self.a * o, self.c * o)
+
+    __rmul__ = __mul__
+
+    def _cmp(self, other, strict: bool, flip: bool):
+        o = self._coerce(other)
+        if o is None:
+            return NotImplemented
+        da, dc = self.a - o.a, self.c - o.c
+        if flip:
+            da, dc = -da, -dc
+        out = ((da * self.rec.n0 + dc < 0) if strict
+               else (da * self.rec.n0 + dc <= 0))
+        if da != 0 and math.isfinite(dc):
+            self.rec.constrain(da, dc, strict, out)
+        return out
+
+    def __lt__(self, o):
+        return self._cmp(o, True, False)
+
+    def __le__(self, o):
+        return self._cmp(o, False, False)
+
+    def __gt__(self, o):
+        return self._cmp(o, True, True)
+
+    def __ge__(self, o):
+        return self._cmp(o, False, True)
+
+
+_MEMO_CAP = 4096
 
 
 def _union_count(d_rows: dict[int, np.ndarray], S) -> int:
@@ -85,6 +221,12 @@ class _PolicyBase:
     # whose decision never evaluates the benefit model
     last_benefit = None
     last_patterns = None
+    # closed interval of the running event count ``n`` on which the most
+    # recent decision is replay-stable (``None`` when unknown — non-memoized
+    # models).  Lets the engine memoize whole-pane decision walks: a pane's
+    # decisions replay verbatim while ``n`` stays inside the intersection of
+    # its bursts' intervals (see ``engine._dyn_fast_groups``).
+    last_interval: tuple | None = None
 
     def decide(self, *, ctx, el, candidates, d_rows, b, n, stats) -> list[list[int]]:
         raise NotImplementedError
@@ -125,6 +267,10 @@ class DynamicPolicy(_PolicyBase):
     def __init__(self, model: str = "v1", local_search: bool = True):
         self.model = model
         self.local_search = local_search
+        # (patterns, candidates, b, t) -> [(n_lo, n_hi, groups, benefit,
+        # split)]: exact decision replay intervals over the running event
+        # count (see the _Aff instrumentation above)
+        self._memo: "OrderedDict[tuple, list]" = OrderedDict()
 
     def _costs(self, *, s_new: int, b: int, n: int, k: int, g: int, t: int):
         s_c = 1 + s_new          # graphlet snapshot x + event-level snapshots
@@ -144,7 +290,62 @@ class DynamicPolicy(_PolicyBase):
         count the classification / refinement reads is recovered from the
         coverage-pattern multiset, so this is bit-for-bit :meth:`decide` —
         the engine's plan-key fast path calls it straight off a vectorized
-        per-burst fingerprint (see ``engine._dyn_fast_groups``)."""
+        per-burst fingerprint (see ``engine._dyn_fast_groups``).
+
+        Decisions are memoized per (patterns, candidates, b, t) with the
+        exact interval of the running event count ``n`` on which the
+        recorded decision trajectory is stable (all cost comparisons keep
+        their sign — see ``_Aff``), so a warm stream replays each decision
+        from one dict hit while benefit flips at the recorded thresholds
+        still recompute and land in fresh intervals.
+
+        Only the v1 model memoizes: its costs are pure integer arithmetic,
+        so the affine replay is bit-for-bit.  v2's ``log2`` terms make the
+        instrumented arithmetic round differently near decision boundaries
+        — it takes the plain path."""
+        if self.model != "v1":
+            self.last_interval = None
+            return self._decide_impl(patterns=patterns,
+                                     candidates=candidates, b=b, n=n, t=t,
+                                     stats=stats)
+        n = int(n)
+        key = (patterns, tuple(candidates), b, t)
+        ent = self._memo.get(key)
+        if ent is not None:
+            self._memo.move_to_end(key)
+            for lo, hi, groups, benefit, split in ent:
+                if lo <= n <= hi:
+                    stats.decisions += 1
+                    if split:
+                        stats.split_bursts += 1
+                    self.last_interval = (lo, hi)
+                    self.last_patterns = patterns
+                    # the benefit value is itself affine in n: evaluate the
+                    # recorded coefficients at this pane's event count
+                    self.last_benefit = (None if benefit is None
+                                         else float(benefit[0] * n
+                                                    + benefit[1]))
+                    return [list(g) for g in groups]
+        rec = _IntervalRecorder(n)
+        split0 = stats.split_bursts
+        out = self._decide_impl(patterns=patterns, candidates=candidates,
+                                b=b, n=_Aff(rec, 1, 0), t=t, stats=stats)
+        lb = self.last_benefit
+        if isinstance(lb, _Aff):
+            benefit = (lb.a, lb.c)
+            self.last_benefit = float(lb)
+        else:
+            benefit = None if lb is None else (0, lb)
+        if ent is None:
+            ent = self._memo[key] = []
+            while len(self._memo) > _MEMO_CAP:
+                self._memo.popitem(last=False)
+        ent.append((rec.lo, rec.hi, tuple(map(tuple, out)),
+                    benefit, stats.split_bursts > split0))
+        self.last_interval = (rec.lo, rec.hi)
+        return out
+
+    def _decide_impl(self, *, patterns, candidates, b, n, t, stats):
         stats.decisions += 1
         self.last_patterns = patterns
         self.last_benefit = None

@@ -118,4 +118,7 @@ class PanePlanCache:
 
     @staticmethod
     def stat_delta(before: dict, stats) -> dict:
-        return {f: getattr(stats, f) - v for f, v in before.items()}
+        # zero deltas are dropped: apply_stats replays the dict on every
+        # cache hit, and most fields don't move on a typical pane
+        return {f: d for f, v in before.items()
+                if (d := getattr(stats, f) - v) != 0}

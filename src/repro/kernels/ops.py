@@ -19,8 +19,8 @@ from . import ref
 from .hamlet_propagate import masked_prefix_propagate_pallas
 
 __all__ = ["propagate", "propagate_batched", "propagate_dense",
-           "propagate_dense_batched", "fold_stacked", "device_get_all",
-           "PROPAGATE_BACKENDS", "DENSE_B_MAX"]
+           "propagate_dense_batched", "fold_stacked", "fold_rounds_scan",
+           "device_get_all", "PROPAGATE_BACKENDS", "DENSE_B_MAX"]
 
 # largest burst the dense closed form handles exactly (2^b weight range);
 # the engine's dense-eligibility test and the executor's fallback share it
@@ -134,10 +134,70 @@ def fold_stacked(u0, Ms, *, backend: str = "np"):
                               np.swapaxes(Ms[:, j], 1, 2))[:, 0]
         return U
     U = jnp.asarray(u0)
-    Ms = jnp.asarray(Ms)
-    for j in range(n):
-        U = jnp.matmul(U[:, None, :], jnp.swapaxes(Ms[:, j], 1, 2))[:, 0]
-    return U
+    if n == 0:
+        return U
+    # one compiled lax.scan over the window axis instead of n Python-level
+    # matmul dispatches — the whole chain is a single device program whose
+    # per-round body is the identical jnp matmul (bitwise equal to the
+    # eager per-round loop; see tests/test_fold_scan.py)
+    return _fold_stacked_scan(U, jnp.swapaxes(jnp.asarray(Ms), 0, 1))
+
+
+@jax.jit
+def _fold_stacked_scan(U, Ms_t):
+    """``u = u @ M.T`` chain as one scanned program; ``Ms_t [n, N, C, C]``."""
+
+    def step(u, M):
+        return jnp.matmul(u[:, None, :], jnp.swapaxes(M, 1, 2))[:, 0], None
+
+    u, _ = jax.lax.scan(step, U, Ms_t)
+    return u
+
+
+@functools.partial(jax.jit, static_argnames=("nu", "t", "n_used"))
+def fold_rounds_scan(Z0, S, PTM, GQ, SIDX, SC, ER, *, nu, t, n_used):
+    """Whole warm fold-flush as **one** device program (see fold_exec.py).
+
+    Executes every d == 0 fold round of a flush with a single
+    ``jax.lax.scan`` whose carry is the fused flat state ``Zf
+    [J*k*R + 1, C]`` (row ``J*k*R`` is a scratch row absorbing padded
+    lanes).  Per round the body runs the exact stacked-twin ops of
+    ``FoldExecutor._fold_bucket_fast``: one state gather, the ``W`` build
+    matmul, one ``S`` gather, the update matmul, and two scatter-adds
+    (arow targets + rrow/end targets).  All index operands are
+    precomputed per flush plan and device-resident:
+
+    * ``S    [G*n_used + 1, B_local]`` — per-group column-sum rows, last
+      row zeros (padded lanes);
+    * ``PTM  [rounds, NMAX, t]``       — pt_mask rows, padded zero;
+    * ``GQ   [rounds, NMAX, R]``       — flat state gather rows (padded →
+      scratch);
+    * ``SIDX [rounds, NMAX, n_used]``  — rows into ``S`` (padded → zeros
+      row);
+    * ``SC / ER [rounds, NMAX * n_used]`` — scatter rows (padded /
+      non-end → scratch).
+
+    Padded lanes read the scratch row and write back only to the scratch
+    row / zero ``S`` row, so real state rows never see padding artifacts
+    even in the inf/NaN overflow regime.  Within a round the real scatter
+    targets are query-disjoint by level construction, so the accumulation
+    is order-free.
+    """
+    C = Z0.shape[1]
+
+    def step(Zf, xs):
+        gq, sidx, sc, er, ptm = xs
+        zm = Zf[gq]                                       # [NMAX, R, C]
+        Wu = jnp.matmul(ptm[:, None, None, :],
+                        zm[:, 1:1 + nu * t].reshape(-1, nu, t, C))[:, :, 0, :]
+        W = jnp.concatenate([zm[:, 0:1], Wu], axis=1)     # [NMAX, 1+nu, C]
+        S_m = S[sidx]                                     # [NMAX, n_used, 1+nu]
+        upd = jnp.matmul(S_m, W).reshape(-1, C)
+        Zf = Zf.at[sc].add(upd)
+        return Zf.at[er].add(upd), None
+
+    Zf, _ = jax.lax.scan(step, Z0, (GQ, SIDX, SC, ER, PTM))
+    return Zf
 
 
 def propagate(base, mask, *, backend: str = "np", tile: int = 128,

@@ -17,6 +17,7 @@ The module ships the canonical edge layouts the engine uses:
 from __future__ import annotations
 
 from bisect import bisect_right
+from math import inf, isfinite
 
 LATENCY_MS_BUCKETS = (0.05, 0.1, 0.25, 0.5, 1.0, 2.5, 5.0, 10.0, 25.0,
                       50.0, 100.0, 250.0, 500.0, 1000.0)
@@ -67,10 +68,19 @@ class Gauge:
 
 
 class Histogram:
-    """Fixed-bucket histogram: ``len(edges) + 1`` counts, last is overflow."""
+    """Fixed-bucket histogram: ``len(edges) + 1`` counts, last is overflow.
+
+    Non-finite observations (NaN, ±inf) never enter the buckets or ``sum``
+    — they land in the ``invalid`` counter, so one poisoned sample cannot
+    turn ``mean`` (and every latency report downstream) into NaN forever.
+    ``max`` tracks the largest *finite* observation, which lets
+    :meth:`quantile` report a real value even when the quantile lands in
+    the open overflow bucket instead of silently capping at the last
+    finite edge (the classic under-reported-SLO-breach bug).
+    """
 
     kind = "histogram"
-    __slots__ = ("name", "edges", "counts", "count", "sum")
+    __slots__ = ("name", "edges", "counts", "count", "sum", "invalid", "max")
 
     def __init__(self, name: str, edges=LATENCY_MS_BUCKETS):
         edges = tuple(float(e) for e in edges)
@@ -82,17 +92,29 @@ class Histogram:
         self.counts = [0] * (len(edges) + 1)
         self.count = 0
         self.sum = 0.0
+        self.invalid = 0          # NaN / ±inf observations, kept out of sum
+        self.max = None           # largest finite observation, or None
 
     def observe(self, v) -> None:
+        if not isfinite(v):
+            self.invalid += 1
+            return
         self.counts[bisect_right(self.edges, v)] += 1
         self.count += 1
         self.sum += v
+        if self.max is None or v > self.max:
+            self.max = v
 
     def observe_n(self, v, n: int) -> None:
         """Record ``n`` observations of the same value in one call."""
+        if not isfinite(v):
+            self.invalid += n
+            return
         self.counts[bisect_right(self.edges, v)] += n
         self.count += n
         self.sum += v * n
+        if self.max is None or v > self.max:
+            self.max = v
 
     def merge(self, other: "Histogram") -> None:
         if other.edges != self.edges:
@@ -104,18 +126,30 @@ class Histogram:
             self.counts[i] += c
         self.count += other.count
         self.sum += other.sum
+        self.invalid += other.invalid
+        if other.max is not None and (self.max is None
+                                      or other.max > self.max):
+            self.max = other.max
 
     def quantile(self, q: float) -> float:
-        """Upper bucket edge containing quantile ``q`` (0..1)."""
+        """Upper bucket edge containing quantile ``q`` (0..1).
+
+        ``q == 0`` reports the first *populated* bucket's edge (not a
+        populated-looking edge from empty leading buckets); a quantile in
+        the overflow bucket reports the tracked finite ``max`` rather
+        than capping at the last edge.
+        """
         if self.count == 0:
             return 0.0
         target = q * self.count
         acc = 0
         for i, c in enumerate(self.counts):
             acc += c
-            if acc >= target:
-                return self.edges[min(i, len(self.edges) - 1)]
-        return self.edges[-1]
+            if acc >= target and (c > 0 or target > 0):
+                if i >= len(self.edges):
+                    return self.max if self.max is not None else inf
+                return self.edges[i]
+        return self.max if self.max is not None else self.edges[-1]
 
     @property
     def mean(self) -> float:
@@ -123,6 +157,7 @@ class Histogram:
 
     def collect(self):
         return {"count": self.count, "sum": self.sum, "mean": self.mean,
+                "invalid": self.invalid, "max": self.max,
                 "edges": list(self.edges), "counts": list(self.counts)}
 
 

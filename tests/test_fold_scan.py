@@ -1,0 +1,210 @@
+"""Scanned-fold differentials: the one-launch device flush vs the np oracle.
+
+The jax ``FoldExecutor`` compiles every warm flush into a single
+``jax.lax.scan`` program (``repro.kernels.ops.fold_rounds_scan``).  These
+tests pin that path against the sequential per-graphlet replay
+(``fold_exec=False`` on the np backend — the differential oracle):
+
+* bitwise equality across the four named workload streams x micro batch
+  K in {1, 4, 16};
+* bitwise equality across fold-chain depths >= 3, including the overflow
+  regime where trend counts saturate to ``inf`` (the np path guards with
+  ``errstate(over="ignore")``; XLA f64 produces the identical ``inf``
+  saturation, so no divergence is tolerated);
+* the launch-count contract: a warm flush is exactly **one** stacked
+  launch however deep the fold chain is;
+* the kernel-level twins: ``fold_stacked``'s scanned jax path vs its np
+  path, and vs an eager per-round jnp loop, bitwise on finite and
+  overflowed operands.
+
+On CPU XLA with x64 enabled (tests/conftest.py) every comparison here is
+*exact*: the scan body's matmuls see the same f64 operands in the same
+contraction order as the numpy oracle.  If a future accelerator backend
+reorders contractions, the named-workload sweeps are the tests that must
+be relaxed to documented-ulp tolerances — keep the launch-count and
+eager-vs-scan assertions exact regardless.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.engine import (HamletRuntime, PaneMicroBatcher, RunStats,
+                               vals_equal)
+from repro.core.events import EventBatch, StreamSchema
+from repro.core.fold_exec import FoldExecutor
+from repro.core.pattern import EventType, Kleene, Seq
+from repro.core.query import Query, Workload, agg_sum, count_star
+from repro.kernels import ops
+
+from test_fold_exec import KS, _named_case
+
+jnp = pytest.importorskip("jax.numpy")
+import jax  # noqa: E402
+
+
+def _jax_fold_rt(wl, K):
+    """Runtime whose execute phase stays on the np backend (identical
+    fold inputs to the oracle) while the FoldExecutor runs the scanned
+    jax path — the fold flush is the only thing under test."""
+    rt = HamletRuntime(wl, micro_batch=K, plan_cache=True, fold_exec=True)
+    rt.fold_exec = FoldExecutor(backend="jax")
+    return rt
+
+
+def _assert_bitwise(a, b, tag=""):
+    assert a.keys() == b.keys(), tag
+    for k in a:
+        assert vals_equal(a[k], b[k]), (tag, k)
+
+
+# ------------------------------------------------- named workload sweeps
+
+
+def _sweep(name):
+    wl, stream, t_end = _named_case(name)
+    want = HamletRuntime(wl, fold_exec=False, plan_cache=False).run(
+        stream, t_end)
+    for K in KS:
+        rt = _jax_fold_rt(wl, K)
+        got = rt.run(stream, t_end)
+        _assert_bitwise(got, want, (name, K))
+        # the scanned execution form was actually built and exercised
+        assert any(fp.scan is not None
+                   for fp in rt.fold_exec._plans.values()), (name, K)
+
+
+def test_scan_bitwise_ridesharing():
+    _sweep("ridesharing")
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("name", ["stock", "smarthome", "taxi"])
+def test_scan_bitwise_named(name):
+    _sweep(name)
+
+
+# ------------------------------------- fold-chain depth + overflow regime
+
+SCHEMA = StreamSchema(types=("A", "B"), attrs=("v",))
+A, B = EventType("A"), EventType("B")
+
+
+def _wl():
+    return Workload(SCHEMA, [
+        Query("q1", Seq(A, Kleene(B)), aggs=(count_star(), agg_sum("B", "v")),
+              within=40, slide=20),
+        Query("q2", Kleene(B), within=40, slide=20),
+    ])
+
+
+def _chain_batch(n_bursts: int, burst_len: int = 1):
+    """``n_bursts`` alternating A / B-run bursts in one pane; the fold
+    chain is one level per burst, so depth grows with ``n_bursts``.
+    Timestamps saturate at tick 19 so the whole chain lands in a single
+    20-tick pane — the depth under test is the per-pane chain depth."""
+    evs = [0]
+    for _ in range(n_bursts):
+        evs.extend([1] * burst_len)
+        evs.append(0)
+    types = np.array(evs, dtype=np.int32)
+    time = np.minimum(np.arange(1, len(types) + 1), 19)
+    return EventBatch(SCHEMA, types, time, np.ones((len(types), 1)))
+
+
+@pytest.mark.parametrize("depth", [3, 8, 24])
+def test_scan_bitwise_across_depths(depth):
+    wl = _wl()
+    batch = _chain_batch(depth)
+    want = HamletRuntime(wl, fold_exec=False, plan_cache=False).run(batch, 40)
+    for K in KS:
+        got = _jax_fold_rt(wl, K).run(batch, 40)
+        _assert_bitwise(got, want, (depth, K))
+
+
+def test_scan_bitwise_overflow_regime():
+    # a 1100-event Kleene burst holds ~2^1099 trends: the counts saturate
+    # past f64 range on the np oracle (errstate-guarded), surfacing as
+    # inf/NaN aggregates, and the scanned device fold must produce the
+    # *same* saturation (vals_equal treats NaN == NaN)
+    wl = _wl()
+    batch = _chain_batch(2, burst_len=1100)
+    want = HamletRuntime(wl, fold_exec=False, plan_cache=False).run(batch, 40)
+    assert any(not np.isfinite(v) for out in want.values()
+               for v in out.values()), "overflow regime not reached"
+    got = _jax_fold_rt(wl, 4).run(batch, 40)
+    _assert_bitwise(got, want, "overflow")
+
+
+# ------------------------------------------------- launch-count contract
+
+
+def _warm_flush_launches(n_bursts: int) -> tuple[int, int]:
+    rt = _jax_fold_rt(_wl(), 4)
+    proc = rt.make_processor(0)
+    batch = _chain_batch(n_bursts)
+    stats = RunStats()
+
+    def flush():
+        mb = PaneMicroBatcher(rt.executor, k=4, fold_exec=rt.fold_exec)
+        pends = [mb.submit(proc, batch, stats) for _ in range(4)]
+        mb.drain()
+        return [p.finalize() for p in pends]
+
+    first = flush()                       # cold: builds the scan program
+    l0 = rt.fold_exec.launches
+    second = flush()                      # warm: the cached program
+    for a, b in zip(first, second):
+        assert np.array_equal(a, b)
+    rounds = max(len(fp.rounds) for fp in rt.fold_exec._plans.values())
+    return rt.fold_exec.launches - l0, rounds
+
+
+def test_scan_one_launch_per_flush_any_depth():
+    (l_shallow, r_shallow), (l_deep, r_deep) = (
+        _warm_flush_launches(8), _warm_flush_launches(24))
+    assert r_deep > r_shallow >= 3        # the depths really differ
+    assert l_shallow == l_deep == 1       # one device program per flush
+
+
+# ------------------------------------------------------- kernel twins
+
+
+def _eager_fold(U, Ms):
+    U = jnp.asarray(U)
+    for j in range(np.shape(Ms)[1]):
+        U = jnp.matmul(U[:, None, :],
+                       jnp.swapaxes(jnp.asarray(Ms[:, j]), 1, 2))[:, 0]
+    return U
+
+
+@pytest.mark.parametrize("overflow", [False, True])
+def test_fold_stacked_scan_matches_np_and_eager(overflow):
+    """Documented IEEE divergence: on *general dense* operands the XLA dot
+    underlying ``fold_stacked``'s jax path contracts in a different order
+    than np.matmul (and the jitted scan fuses differently again than the
+    eager per-round loop), so the three twins agree only to a few ulp —
+    unlike the engine-level scanned flush above, whose row-vector matmul
+    shapes reproduce the oracle bitwise.  Pin the divergence to the ulp
+    scale and the overflow regime to an identical non-finite pattern."""
+    rng = np.random.default_rng(7)
+    N, n, C = 5, 6, 4
+    u0 = rng.standard_normal((N, C))
+    Ms = rng.standard_normal((N, n, C, C))
+    if overflow:
+        Ms *= 1e160                        # chains overflow f64 mid-fold
+    with np.errstate(over="ignore", invalid="ignore"):
+        want = ops.fold_stacked(u0, Ms, backend="np")
+    got = np.asarray(ops.fold_stacked(u0, Ms, backend="jax"))
+    eager = np.asarray(_eager_fold(u0, Ms))
+    if overflow:
+        assert not np.isfinite(want).all()
+        # saturation must land on the same lanes with the same signs
+        np.testing.assert_array_equal(np.isfinite(got), np.isfinite(want))
+        fin = np.isfinite(want)
+        np.testing.assert_allclose(got[fin], want[fin], rtol=1e-12)
+        np.testing.assert_array_equal(got[~fin & ~np.isnan(want)],
+                                      want[~fin & ~np.isnan(want)])
+        np.testing.assert_array_equal(np.isnan(got), np.isnan(want))
+    else:
+        np.testing.assert_allclose(got, eager, rtol=1e-12)
+        np.testing.assert_allclose(got, want, rtol=1e-12)

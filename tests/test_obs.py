@@ -354,3 +354,45 @@ def test_audit_export_jsonl(tmp_path):
     assert len(rows) == n == len(obs.audit.entries())
     assert all({"seq", "pane", "decided", "shared", "flipped"} <= r.keys()
                for r in rows)
+
+
+def test_histogram_nonfinite_lands_in_invalid_not_buckets():
+    # regression: NaN used to bisect into the overflow bucket and poison
+    # ``sum``/``mean`` into NaN forever; ±inf likewise
+    h = Histogram("lat", LATENCY_MS_BUCKETS)
+    h.observe(1.0)
+    for bad in (float("nan"), float("inf"), float("-inf")):
+        h.observe(bad)
+    h.observe_n(float("nan"), 5)
+    assert h.invalid == 8
+    assert h.count == 1 and h.sum == 1.0 and h.mean == 1.0
+    assert sum(h.counts) == 1
+    c = h.collect()
+    assert c["invalid"] == 8 and np.isfinite(c["sum"])
+    # invalid counts survive merges
+    other = Histogram("lat", LATENCY_MS_BUCKETS)
+    other.observe(float("inf"))
+    h.merge(other)
+    assert h.invalid == 9 and h.sum == 1.0
+
+
+def test_histogram_quantile_overflow_reports_tracked_max():
+    # regression: a quantile in the open overflow bucket used to cap at
+    # the last finite edge, silently under-reporting SLO breaches
+    h = Histogram("lat", (1.0, 2.0, 4.0))
+    h.observe(0.5)
+    for v in (100.0, 250.0, 9000.0):
+        h.observe(v)                       # all land past the last edge
+    assert h.max == 9000.0
+    assert h.quantile(0.99) == 9000.0      # tracked max, not edge 4.0
+    assert h.quantile(1.0) == 9000.0
+    assert h.quantile(0.1) == 1.0          # still bucket-edge semantics
+
+
+def test_histogram_quantile_zero_skips_empty_leading_buckets():
+    # regression: quantile(0.0) used to report the first edge even when
+    # every leading bucket was empty
+    h = Histogram("lat", (1.0, 2.0, 4.0, 8.0))
+    h.observe(3.0)                         # only the (2, 4] bucket fills
+    assert h.quantile(0.0) == 4.0
+    assert Histogram("lat", (1.0, 2.0)).quantile(0.0) == 0.0  # empty: 0

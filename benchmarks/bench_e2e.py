@@ -349,6 +349,59 @@ def _fold_depth_launches(n_bursts: int) -> tuple[int, int]:
     return rt.fold_exec.launches - l0, rounds
 
 
+def _shard_cache_hit_rates() -> tuple[float, float]:
+    """Warm per-shard plan-cache hit rates: 1-shard vs min over 2 shards.
+
+    Feeds the same multi-tenant stream twice through a
+    ``ShardedHamletService`` (second pass time-shifted, so pane *shapes*
+    repeat while the pane clock advances) and measures the second-pass hit
+    rate per shard.  Deterministic — no timing involved.  Splitting the
+    tenants over two shards must keep each shard's cache warm: unstable
+    routing (groups bouncing between shards) or a cache cleared across
+    chunks would zero the warm rate.  The single-shard runtime sees every
+    group through one LRU, so its warm rate can legitimately sit *below*
+    the per-shard ones (working set beyond capacity thrashes); the gate
+    therefore holds 2-shard warmth to an absolute floor as well as to the
+    1-shard baseline."""
+    from repro.core.events import EventBatch
+    from repro.streams.generator import TenantStreamConfig, tenant_stream
+
+    from .fig_shard_scale import _service, _workload
+
+    wl = _workload(True)
+    stream = tenant_stream(TenantStreamConfig(
+        schema=RIDESHARING_SCHEMA, n_tenants=4, groups_per_tenant=2,
+        base_events_per_minute=1500, minutes=2, seed=42))
+    t_hi = int(stream.time.max()) + 1
+    t_hi = -(-t_hi // 5) * 5
+    shifted = EventBatch(schema=stream.schema, type_id=stream.type_id,
+                         time=stream.time + t_hi, attrs=stream.attrs,
+                         group=stream.group)
+    warm = {}
+    for n, tps in ((1, 4), (2, 2)):
+        svc = _service(wl, n, tps)
+        for t0 in range(0, t_hi, svc.pane):
+            svc.ingest(stream.time_slice(t0, t0 + svc.pane))
+        pre = [w.summary()["plan_cache"] for w in svc.workers]
+        for t0 in range(t_hi, 2 * t_hi, svc.pane):
+            svc.ingest(shifted.time_slice(t0, t0 + svc.pane))
+        svc.close()
+        rates = []
+        for w, p in zip(svc.workers, pre):
+            s = w.summary()["plan_cache"]
+            dh = s["hits"] - p["hits"]
+            dn = dh + s["misses"] - p["misses"]
+            rates.append(dh / dn if dn else 0.0)
+        warm[n] = min(rates)
+    return warm[1], warm[2]
+
+
+# a 2-shard split must keep each shard's plan cache warm on replayed pane
+# shapes: the floor catches warmth destruction (unstable routing, cleared
+# caches) even when single-shard thrash makes the baseline comparison easy
+SHARD_WARM_FLOOR = 0.5
+
+
 def check(rtol: float = 0.25, obs_tol: float = 0.03) -> int:
     """CI perf-smoke: re-measure the smoke workload, compare the warm
     speedup ratio against the committed ``BENCH_e2e.json``, and gate the
@@ -447,6 +500,16 @@ def check(rtol: float = 0.25, obs_tol: float = 0.03) -> int:
     if ratio > 1.0 + obs_tol:
         print("FAIL: a disabled observability facade costs more than "
               f"{obs_tol:.0%} warm pane throughput")
+        return 1
+    # shard-cache gate: splitting tenants across shards must not lose plan-
+    # cache warmth — each shard's warm hit rate on replayed pane shapes
+    # holds an absolute floor and never regresses below the 1-shard rate
+    one, two = _shard_cache_hit_rates()
+    print(f"perf-smoke [shard-cache]: warm hit rate 1-shard {one:.3f}, "
+          f"2-shard min {two:.3f} (floor {max(SHARD_WARM_FLOOR, one):.3f})")
+    if two < SHARD_WARM_FLOOR or two < one:
+        print("FAIL: per-shard plan-cache warm hit rate regressed vs the "
+              "single-shard runtime — sharding is losing plan-cache warmth")
         return 1
     print("OK")
     return 0

@@ -1,0 +1,384 @@
+"""Sharded-service weak-scaling study: ``BENCH_shard_scale.json``.
+
+Scales the multi-tenant overload workload with the shard count (weak
+scaling: ``tenants = shards x tenants_per_shard``, constant per-tenant
+rate) through ``ShardedHamletService`` and records, per shard count:
+
+* **aggregate throughput** — admitted events over the modeled makespan.
+  Shards share no mutable state (each owns its runtime, plan cache, micro-
+  batcher and PID loop), so a fleet of real workers would overlap their
+  drive cycles perfectly; the single-process harness therefore models
+  ``makespan = router_busy + max(shard_busy)`` — the serial router stage
+  plus the slowest shard — which *charges* the router bottleneck instead
+  of hiding it.  Per-shard busy seconds are measured around every worker
+  call (offer/heartbeat/drive/results).
+* **flash-crowd isolation** — a flash crowd aimed at one tenant (one
+  shard) at the 4-shard point, against a no-flash baseline: the hot
+  shard's p99 pane-processing latency degrades, the other shards' p99
+  must stay within the SLO and within a small factor of their baseline.
+* **aligned sealing under a slow shard** — one shard throttled to one
+  pane per drive cycle: the aligned epoch must keep advancing ahead of
+  the laggard's processed frontier (the aligned-epoch protocol's whole
+  point; a global-min frontier would pin it to the slow shard).
+
+Tenant groups are pinned round-robin onto shards through the placement
+table's override path (the rebalance mechanism) so the scaling numbers
+measure the dataplane, not consistent-hash balance luck; the differential
+contract (N-shard == 1-shard results) is asserted inside the run at the
+smoke scale and separately covered by ``tests/test_shardsvc.py``.
+
+``--smoke`` is the CI fast-lane entry: a small 2-shard run asserting the
+correctness invariants (differential match, alignment advance, SLO
+isolation shape) without wall-clock floors.  ``--check`` validates the
+committed JSON's scaling floors: >=1.6x aggregate throughput at 2 shards,
+>=2.5x at 4, isolation and alignment flags true.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import platform
+import time
+
+import numpy as np
+
+from repro.core.events import EventBatch
+from repro.overload.config import OverloadConfig
+from repro.shardsvc import ShardedHamletService, ShardServiceConfig
+from repro.streams.generator import (RIDESHARING_SCHEMA, TenantStreamConfig,
+                                     tenant_stream)
+
+from .common import kleene_workload
+
+BENCH_PATH = os.path.join(os.path.dirname(__file__), os.pardir,
+                          "BENCH_shard_scale.json")
+
+SHARD_POINTS = (1, 2, 4)
+SPEEDUP_FLOORS = {2: 1.6, 4: 2.5}
+GROUPS_PER_TENANT = 2
+TENANTS_PER_SHARD = 4
+SLO_MS = 50.0
+ISOLATION_RATIO_CEIL = 2.0     # non-flash p99 vs no-flash baseline p99
+
+
+def _workload(quick: bool):
+    # slide=5 -> pane=5: enough panes per run for p99 pane latency and for
+    # the throttled-shard scenario to accumulate a real backlog.  Query
+    # count is fixed across modes (full mode scales duration and replica
+    # count, not per-pane weight) so the SLO means the same thing in both.
+    del quick
+    return kleene_workload(RIDESHARING_SCHEMA, 4,
+                           kleene_type="Travel",
+                           head_types=["Request", "Pickup", "Dropoff"],
+                           within=30, slide=5)
+
+
+def _base_stream(quick: bool, tps: int = TENANTS_PER_SHARD,
+                 flash: bool = False):
+    """One shard's worth of tenants (the replicated weak-scaling unit)."""
+    minutes = 2 if quick else 6
+    return tenant_stream(TenantStreamConfig(
+        schema=RIDESHARING_SCHEMA, n_tenants=tps,
+        groups_per_tenant=GROUPS_PER_TENANT,
+        base_events_per_minute=3000,
+        minutes=minutes, ramp_to=1.3,
+        flash_tenant=0 if flash else None, flash=(minutes * 20, 30, 6.0),
+        type_weights=(1, 1, 6, 1, 1, 1), seed=42))
+
+
+def _replicated(base, n_replicas: int, tps: int = TENANTS_PER_SHARD,
+                flash_base=None):
+    """Clone the base tenant set onto ``n_replicas`` shards (group ids
+    offset per replica).  Kleene cost is superlinear in burst size, so
+    independently seeded tenants would give each shard a different amount
+    of *work* for the same event count; replication makes per-shard work
+    identical by construction and the scaling numbers measure
+    orchestration, not seed luck.  ``flash_base`` (when given) replaces
+    replica 0 — the flash crowd lands on exactly one shard."""
+    span = tps * GROUPS_PER_TENANT
+    parts = []
+    for r in range(n_replicas):
+        src = flash_base if (r == 0 and flash_base is not None) else base
+        parts.append(EventBatch(schema=src.schema, type_id=src.type_id,
+                                time=src.time, attrs=src.attrs,
+                                group=src.group + r * span))
+    return EventBatch.merge(parts)
+
+
+def _service(wl, n_shards: int, tps: int = TENANTS_PER_SHARD, **cfg_kw):
+    cfg = ShardServiceConfig(
+        n_shards=n_shards, groups_per_tenant=GROUPS_PER_TENANT,
+        admission="none", align_every_panes=1, max_lag_epochs=1,
+        overload=OverloadConfig(shed_policy="none", micro_batch=8,
+                                slo_ms=SLO_MS),
+        **cfg_kw)
+    svc = ShardedHamletService(wl, cfg)
+    # pin each replica block onto its shard via the override path: the
+    # scaling numbers then measure the dataplane, not hash balance luck
+    for t in range(n_shards * tps):
+        for g in range(t * GROUPS_PER_TENANT, (t + 1) * GROUPS_PER_TENANT):
+            svc.placement.override(g, t // tps)
+    return svc
+
+
+def _drive(svc, stream) -> dict:
+    t_hi = int(stream.time.max()) + 1
+    w0 = time.perf_counter()
+    for t0 in range(0, t_hi, svc.pane):
+        svc.ingest(stream.time_slice(t0, t0 + svc.pane))
+    svc.close()
+    res = svc.results()
+    wall = time.perf_counter() - w0
+    busy = [w.busy_s for w in svc.workers]
+    makespan = svc.router_busy_s + max(busy)
+    events = sum(w.rt.metrics.summary()["admitted"] for w in svc.workers)
+    return {
+        "events": events,
+        "windows": len(res),
+        "wall_s": round(wall, 4),
+        "router_busy_s": round(svc.router_busy_s, 4),
+        "shard_busy_s": [round(b, 4) for b in busy],
+        "makespan_s": round(makespan, 4),
+        "events_per_s": round(events / makespan) if makespan > 0 else 0,
+        "balance": round(max(busy) / (sum(busy) / len(busy)), 3)
+        if sum(busy) > 0 else 1.0,
+        "p99_proc_ms": [round(w.rt.metrics.percentile(99, "proc_ms"), 3)
+                        for w in svc.workers],
+        "results": res,
+    }
+
+
+def weak_scaling(quick: bool, reps: int = 3) -> dict:
+    wl = _workload(quick)
+    base = _base_stream(quick)
+    out = {}
+    for n in SHARD_POINTS:
+        stream = _replicated(base, n)
+        runs = [_drive(_service(wl, n), stream) for _ in range(reps)]
+        for r in runs:
+            r.pop("results")
+        # per-shard work is deterministic (identical replicas), so the
+        # element-wise min over reps is the cleanest estimate of each
+        # shard's true cost — it filters scheduler/GC noise from
+        # interleaving every shard in one process
+        busy = [min(r["shard_busy_s"][s] for r in runs) for s in range(n)]
+        router = min(r["router_busy_s"] for r in runs)
+        makespan = router + max(busy)
+        m = dict(min(runs, key=lambda r: r["makespan_s"]))
+        m.update({
+            "reps": reps,
+            "router_busy_s": round(router, 4),
+            "shard_busy_s": [round(b, 4) for b in busy],
+            "makespan_s": round(makespan, 4),
+            "events_per_s": round(m["events"] / makespan)
+            if makespan > 0 else 0,
+            "balance": round(max(busy) / (sum(busy) / len(busy)), 3)
+            if sum(busy) > 0 else 1.0,
+        })
+        out[str(n)] = m
+    base = out["1"]["events_per_s"]
+    for n in SHARD_POINTS:
+        out[str(n)]["speedup"] = round(
+            out[str(n)]["events_per_s"] / base, 2) if base else 0.0
+    return out
+
+
+def flash_isolation(quick: bool, tps: int = TENANTS_PER_SHARD) -> dict:
+    """Flash crowd on replica 0's lead tenant (-> shard 0 under block
+    pinning) at 4 shards; the other shards' p99 must hold against the
+    no-flash baseline."""
+    wl = _workload(quick)
+    n = 4
+    calm = _base_stream(quick, tps)
+    hot = _base_stream(quick, tps, flash=True)
+    base = _drive(_service(wl, n, tps), _replicated(calm, n, tps))
+    flash = _drive(_service(wl, n, tps),
+                   _replicated(calm, n, tps, flash_base=hot))
+    base.pop("results")
+    flash.pop("results")
+    hot = 0
+    cold = [s for s in range(n) if s != hot]
+    cold_p99 = max(flash["p99_proc_ms"][s] for s in cold)
+    cold_base = max(max(base["p99_proc_ms"][s] for s in cold), 1e-3)
+    return {
+        "hot_shard": hot,
+        "slo_ms": SLO_MS,
+        "baseline_p99_ms": base["p99_proc_ms"],
+        "flash_p99_ms": flash["p99_proc_ms"],
+        "hot_p99_ms": flash["p99_proc_ms"][hot],
+        "cold_p99_ms": round(cold_p99, 3),
+        "cold_p99_vs_baseline": round(cold_p99 / cold_base, 3),
+        "cold_within_slo": bool(cold_p99 <= SLO_MS),
+        "isolated": bool(cold_p99 <= SLO_MS
+                         and cold_p99 / cold_base <= ISOLATION_RATIO_CEIL),
+    }
+
+
+def slow_shard_alignment(quick: bool, tps: int = TENANTS_PER_SHARD) -> dict:
+    """Throttle shard 0 to one pane per drive; aligned sealing must keep
+    advancing ahead of the laggard's processed frontier."""
+    wl = _workload(quick)
+    n = 4
+    stream = _replicated(_base_stream(quick, tps), n, tps)
+    svc = _service(wl, n, tps)
+    svc.workers[0].throttle = 1
+    t_hi = int(stream.time.max()) + 1
+    max_lead = 0
+    was_laggard = False
+
+    def sample():
+        nonlocal max_lead, was_laggard
+        st = svc.aligner.status()
+        max_lead = max(max_lead, st["aligned_time"] - svc.workers[0].t_now)
+        was_laggard = was_laggard or 0 in st["laggards"]
+
+    # multi-pane chunks: each ingest exposes several steppable panes, so
+    # healthy shards step them all while the throttled shard steps one —
+    # the backlog (and the aligned frontier's lead) grows per chunk
+    chunk = 6 * svc.pane
+    for t0 in range(0, t_hi, chunk):
+        svc.ingest(stream.time_slice(t0, t0 + chunk))
+        sample()
+    # drain with the throttle still on, sampling each drive cycle
+    for _ in range(1000):
+        if svc.workers[0].t_now + svc.pane > t_hi:
+            break
+        svc._drive()
+        sample()
+    svc.close()
+    final = svc.aligner.status()
+    return {
+        "throttled_shard": 0,
+        "max_aligned_lead_ticks": int(max_lead),
+        "laggard_excluded": bool(was_laggard),
+        "aligned_advanced": bool(max_lead > 0),
+        "final_epochs": final["epochs"],
+        "final_laggards": final["laggards"],
+    }
+
+
+def smoke() -> int:
+    """CI fast lane: correctness invariants at a small 2-shard scale."""
+    wl = _workload(quick=True)
+    tps = 2
+    stream = _replicated(_base_stream(True, tps), 2, tps)
+    m1 = _drive(_service(wl, 1, tps * 2), stream)
+    m2 = _drive(_service(wl, 2, tps), stream)
+    r1, r2 = m1.pop("results"), m2.pop("results")
+    if set(r1) != set(r2) or any(r1[k] != r2[k] for k in r1):
+        print("FAIL: 2-shard results differ from 1-shard run")
+        return 1
+    print(f"smoke: differential OK over {len(r1)} windows "
+          f"(1-shard {m1['events_per_s']} ev/s, "
+          f"2-shard {m2['events_per_s']} ev/s)")
+    align = slow_shard_alignment(quick=True, tps=2)
+    print(f"smoke: alignment {align}")
+    if not (align["aligned_advanced"] and align["laggard_excluded"]):
+        print("FAIL: aligned sealing did not advance past the slow shard")
+        return 1
+    iso = flash_isolation(quick=True, tps=2)
+    print(f"smoke: isolation {iso}")
+    if not iso["cold_within_slo"]:
+        print("FAIL: flash crowd on one shard pushed other shards' p99 "
+              "past the SLO")
+        return 1
+    print("OK")
+    return 0
+
+
+def check() -> int:
+    """Validate the committed artifact's acceptance floors."""
+    with open(BENCH_PATH) as f:
+        payload = json.load(f)
+    ws = payload["weak_scaling"]
+    rc = 0
+    for n, floor in SPEEDUP_FLOORS.items():
+        got = ws[str(n)]["speedup"]
+        print(f"shard_scale [{n} shards]: speedup {got:.2f}x "
+              f"(floor {floor:.2f}x)")
+        if got < floor:
+            print(f"FAIL: committed weak-scaling speedup at {n} shards "
+                  f"below the {floor:.1f}x floor")
+            rc = 1
+    iso = payload["flash_isolation"]
+    print(f"shard_scale [isolation]: hot p99 {iso['hot_p99_ms']:.1f} ms, "
+          f"cold p99 {iso['cold_p99_ms']:.1f} ms (slo {iso['slo_ms']} ms)")
+    if not iso["isolated"]:
+        print("FAIL: committed artifact records a flash crowd leaking "
+              "across shards")
+        rc = 1
+    al = payload["slow_shard"]
+    print(f"shard_scale [alignment]: max aligned lead "
+          f"{al['max_aligned_lead_ticks']} ticks, "
+          f"laggard_excluded={al['laggard_excluded']}")
+    if not (al["aligned_advanced"] and al["laggard_excluded"]):
+        print("FAIL: committed artifact shows aligned sealing stalling on "
+              "the slow shard")
+        rc = 1
+    if rc == 0:
+        print("OK")
+    return rc
+
+
+def main(quick: bool = True) -> list[dict]:
+    ws = weak_scaling(quick)
+    iso = flash_isolation(quick)
+    al = slow_shard_alignment(quick)
+    payload = {
+        "meta": {
+            "quick": quick,
+            "groups_per_tenant": GROUPS_PER_TENANT,
+            "tenants_per_shard": TENANTS_PER_SHARD,
+            "load_model": "replicated problem: same tenant block cloned "
+                          "per shard (group ids offset)",
+            "makespan_model": "router_busy + max(shard_busy) "
+                              "(shards share no mutable state)",
+            "python": platform.python_version(),
+            "numpy": np.__version__,
+        },
+        "weak_scaling": ws,
+        "flash_isolation": iso,
+        "slow_shard": al,
+    }
+    with open(BENCH_PATH, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+    rows = []
+    for n in SHARD_POINTS:
+        m = ws[str(n)]
+        rows.append({
+            "shards": n,
+            "speedup": m["speedup"],
+            "events_per_s": m["events_per_s"],
+            "events": m["events"],
+            "makespan_s": m["makespan_s"],
+            "balance": m["balance"],
+        })
+    rows.append({"shards": "isolation",
+                 "hot_p99_ms": iso["hot_p99_ms"],
+                 "cold_p99_ms": iso["cold_p99_ms"],
+                 "isolated": iso["isolated"], "slo_ms": iso["slo_ms"]})
+    rows.append({"shards": "slow_shard",
+                 "max_aligned_lead_ticks": al["max_aligned_lead_ticks"],
+                 "laggard_excluded": al["laggard_excluded"],
+                 "aligned_advanced": al["aligned_advanced"],
+                 "final_laggards": al["final_laggards"]})
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI fast lane: 2-shard correctness invariants")
+    ap.add_argument("--check", action="store_true",
+                    help="validate the committed JSON's scaling floors")
+    args = ap.parse_args()
+    if args.smoke:
+        raise SystemExit(smoke())
+    if args.check:
+        raise SystemExit(check())
+    for row in main(quick=not args.full):
+        print(row)

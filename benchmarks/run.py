@@ -19,7 +19,7 @@ def main() -> None:
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None,
                     help="fig9|fig11|fig12|overload|batched|disorder|"
-                         "bench_e2e|kernel|roofline")
+                         "shard_scale|bench_e2e|kernel|roofline")
     args = ap.parse_args()
     quick = not args.full
 
@@ -54,6 +54,11 @@ def main() -> None:
         from . import fig_disorder
 
         sections.append(("fig_disorder", fig_disorder.main(quick=quick)))
+    if args.only in (None, "shard_scale"):
+        from . import fig_shard_scale
+
+        sections.append(("fig_shard_scale",
+                         fig_shard_scale.main(quick=quick)))
     if args.only in (None, "bench_e2e"):
         from . import bench_e2e
 

@@ -114,6 +114,7 @@ from __future__ import annotations
 
 from dataclasses import dataclass, field, replace
 from time import perf_counter
+from typing import ClassVar
 
 import numpy as np
 
@@ -311,9 +312,33 @@ class RunStats:
     plan_cache_hits: int = 0
     plan_cache_misses: int = 0
 
+    # Fields whose totals are invariant under group-disjoint sharding of the
+    # stream: a fleet of runtimes processing a partition of the groups
+    # produces the same sums as one runtime processing everything.  Wall
+    # timers (meaningful only as totals) and plan-cache traffic (each
+    # instance has its own cache, so hit/miss splits shift with placement)
+    # are excluded — and so are the sharing/snapshot counters: the
+    # share-or-split decision operates on the co-resident pane batch, so
+    # which groups live together changes the sharing opportunities taken
+    # (never the results).
+    COUNT_FIELDS: ClassVar[tuple[str, ...]] = (
+        "events", "bursts", "decisions", "panes", "windows_emitted")
+
     def merge(self, o: "RunStats") -> None:
         for f in self.__dataclass_fields__:
             setattr(self, f, getattr(self, f) + getattr(o, f))
+
+    @classmethod
+    def merged(cls, parts) -> "RunStats":
+        """Fold many instances (e.g. one per shard) into a fleet total."""
+        out = cls()
+        for p in parts:
+            out.merge(p)
+        return out
+
+    def counts(self) -> dict[str, int]:
+        """The sharding-invariant count fields (see ``COUNT_FIELDS``)."""
+        return {f: getattr(self, f) for f in self.COUNT_FIELDS}
 
     def phase_split(self) -> dict[str, float]:
         """Fractions of measured engine time per phase (sums to ~1)."""

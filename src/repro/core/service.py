@@ -39,6 +39,19 @@ History retention is widened from ``max(within)`` to ``max(within) +
 horizon`` to make that replay exact.  (The pane-granular speculative path —
 emit optimistically, revise from stored pane matrices — lives in
 ``repro.eventtime.revision``.)
+
+This wrapper is single-instance: one runtime, one plan cache, one epoch
+clock.  The multi-tenant tier above it lives in ``repro.shardsvc`` — a
+router partitions tenants (contiguous group ranges) across N shard workers
+via a deterministic consistent-hash placement table, admission control is
+hoisted to the router (with every error accountant merged into one fleet
+certificate), and fleet-level finality is negotiated by the aligned-epoch
+watermark protocol, which excludes lagging shards instead of waiting on
+them.  The sharded service's contract is differential: under
+``none``/``global_fixed`` admission an N-shard run is a permutation-stable
+bitwise match of the 1-shard run on the same stream (``tests/
+test_shardsvc.py``), so everything documented here about single-instance
+semantics carries over shard-by-shard.
 """
 
 from __future__ import annotations

@@ -12,12 +12,16 @@ runtime and relaxes that:
   revision: panes run optimistically on arrival, late events re-plan only
   their pane and re-fold affected windows from stored transfer matrices,
   emitting retract/amend records;
+* :mod:`frontier` — per-shard frontier export for the sharded service tier
+  (``repro.shardsvc``): a router-fed watermark policy plus the frontier
+  snapshot shards report to the cross-shard alignment coordinator;
 * hopelessly late events (behind the lateness horizon) are routed into the
   overload subsystem's error accountant, keeping the shedding bounds sound
   under disorder.
 """
 
 from .config import EventTimeConfig  # noqa: F401
+from .frontier import FrontierSnapshot, RoutedFrontier  # noqa: F401
 from .reorder import ReorderBuffer, ReorderResult, SealedPane  # noqa: F401
 from .revision import (EmissionRecord, EventTimeMetrics,  # noqa: F401
                        EventTimeRuntime)

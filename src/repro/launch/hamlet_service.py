@@ -16,6 +16,18 @@ controller:
     PYTHONPATH=src python -m repro.launch.hamlet_service --overload \
         --offered-x 2 --shed-policy benefit_weighted --recall
 
+``--shards N --tenants M`` runs the sharded multi-tenant service tier
+(``repro.shardsvc``): M tenants' overload streams compose into one stream,
+a consistent-hash router places tenant groups on N shard workers (each its
+own runtime + plan cache + PID loop), admission happens at the router, and
+per-shard frontiers negotiate fleet progress through the aligned-epoch
+coordinator.  ``--flash-tenant`` aims a flash crowd at one tenant,
+``--rebalance`` moves that tenant's hottest group to the least-busy shard
+mid-stream:
+
+    PYTHONPATH=src python -m repro.launch.hamlet_service --shards 4 \
+        --tenants 8 --minutes 2 --flash-tenant 0 --rebalance
+
 ``--trace out.jsonl`` attaches the observability layer (``repro.obs``):
 pane-lifecycle spans are exported as Chrome-trace JSONL (convert with
 ``python -m repro.obs.trace out.jsonl out.json`` and load in Perfetto),
@@ -157,6 +169,63 @@ def run_overload(args) -> None:
               f"over {int(den)} windows")
 
 
+def run_sharded(args) -> None:
+    from ..overload import OverloadConfig
+    from ..shardsvc import ShardedHamletService, ShardServiceConfig
+    from ..streams.generator import TenantStreamConfig, tenant_stream
+
+    wl = ridesharing_workload(args.queries)
+    t_end = args.minutes * 60
+    stream = tenant_stream(TenantStreamConfig(
+        schema=RIDESHARING_SCHEMA, n_tenants=args.tenants,
+        groups_per_tenant=args.groups_per_tenant,
+        base_events_per_minute=args.events_per_minute,
+        minutes=args.minutes, rate_skew=args.rate_skew,
+        flash_tenant=args.flash_tenant,
+        flash=(t_end // 3, 30, 4.0),
+        type_weights=(1, 1, 6, 1, 1, 1)))
+    cfg = ShardServiceConfig(
+        n_shards=args.shards, groups_per_tenant=args.groups_per_tenant,
+        admission=args.admission,
+        overload=OverloadConfig(shed_policy=args.shed_policy,
+                                fixed_shed=args.fixed_shed,
+                                micro_batch=4))
+    svc = ShardedHamletService(wl, cfg, policy=POLICIES[args.policy](),
+                               backend=args.backend)
+    t0 = time.time()
+    moved_at = None
+    for c0 in range(0, t_end, svc.pane):
+        svc.ingest(stream.time_slice(c0, c0 + svc.pane))
+        if args.rebalance and moved_at is None and c0 >= t_end // 2:
+            hot = args.flash_tenant or 0
+            g = hot * args.groups_per_tenant
+            busy = [w.busy_s for w in svc.workers]
+            target = int(min(range(args.shards), key=busy.__getitem__))
+            moved_at = svc.plan_rebalance(g, target)
+            print(f"rebalance: group {g} -> shard {target} "
+                  f"at boundary {moved_at}")
+    svc.close()
+    res = svc.results()
+    dt = time.time() - t0
+    col = svc.collect()
+    st = svc.stats()
+    print(f"shards={args.shards} tenants={args.tenants} "
+          f"events={len(stream)} windows={st.windows_emitted} "
+          f"results={len(res)} wall={dt:.3f}s")
+    print(f"router: {col['router']['admission']} busy={svc.router_busy_s:.3f}s")
+    print(f"alignment: {col['router']['alignment']}")
+    for s in col["shards"]:
+        ov = s["overload"]
+        print(f"  shard {s['shard']}: busy={s['busy_s']:.3f}s "
+              f"panes={ov['panes']} admitted={ov['admitted']} "
+              f"p99_proc={ov['p99_proc_ms']:.2f} ms "
+              f"cache_hit={s['plan_cache']['hit_rate']:.2f}")
+    for name, rep in sorted(svc.error_report().items()):
+        print(f"  {name}: shed kleene={rep.shed_kleene} "
+              f"critical={rep.shed_critical} negative={rep.shed_negative} "
+              f"subset_guarantee={rep.subset_guarantee}")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--minutes", type=int, default=2)
@@ -167,6 +236,23 @@ def main():
     ap.add_argument("--backend", default="np")
     ap.add_argument("--overload", action="store_true",
                     help="bounded-latency runtime on an overload scenario")
+    ap.add_argument("--shards", type=int, default=0,
+                    help="run the sharded multi-tenant service with N shards")
+    ap.add_argument("--tenants", type=int, default=4,
+                    help="tenant count for the sharded service")
+    ap.add_argument("--groups-per-tenant", type=int, default=2)
+    ap.add_argument("--rate-skew", type=float, default=0.0,
+                    help="Zipf exponent of per-tenant rates (0 = uniform)")
+    ap.add_argument("--flash-tenant", type=int, default=None,
+                    help="aim a flash crowd at this tenant")
+    ap.add_argument("--rebalance", action="store_true",
+                    help="move the hot tenant's lead group to the "
+                         "least-busy shard mid-stream")
+    ap.add_argument("--admission", default="global_fixed",
+                    choices=["none", "global_fixed", "per_shard"],
+                    help="router admission mode for the sharded service")
+    ap.add_argument("--fixed-shed", type=float, default=None,
+                    help="fixed router shed ratio (global_fixed admission)")
     ap.add_argument("--offered-x", type=float, default=2.0,
                     help="offered load as a multiple of calibrated capacity")
     ap.add_argument("--slo-ms", type=float, default=None,
@@ -182,6 +268,9 @@ def main():
                     help="per-pane track sampling: trace every Nth pane")
     args = ap.parse_args()
 
+    if args.shards > 0:
+        run_sharded(args)
+        return
     if args.overload:
         run_overload(args)
         return

@@ -127,6 +127,19 @@ class Observability:
         if self.audit is not None:
             self.audit.record(**kw)
 
+    # ---------------------------------------------------------------- merge
+
+    def merge_from(self, other: "Observability") -> None:
+        """Fold another instance's metric series into this one.
+
+        Cross-instance merge for fleets (one ``Observability`` per shard):
+        counters and histogram buckets sum, gauges take the other's last
+        write, matching histogram names must share bucket layouts.  Traces
+        and audit logs are deliberately not merged — they are per-instance
+        diagnostic streams, and interleaving them would destroy the
+        per-shard timelines."""
+        self.registry.merge(other.registry)
+
     # --------------------------------------------------------------- export
 
     def export_trace(self, path) -> int:

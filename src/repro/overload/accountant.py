@@ -40,7 +40,8 @@ import numpy as np
 from ..core.events import EventBatch, pane_size_for
 from ..core.query import Workload
 
-__all__ = ["WindowBound", "QueryErrorReport", "ErrorAccountant"]
+__all__ = ["WindowBound", "QueryErrorReport", "ErrorAccountant",
+           "merge_error_reports"]
 
 _KLE, _CRIT, _NEG, _WIT = 0, 1, 2, 3
 
@@ -71,6 +72,34 @@ class QueryErrorReport:
     shed_negative: int
     cells_affected: int      # (group, pane) buckets with any relevant shed
     subset_guarantee: bool   # emitted results are lower bounds on the truth
+
+
+def merge_error_reports(reports) -> dict[str, "QueryErrorReport"]:
+    """Fleet-level certificate from per-instance ``report()`` dicts.
+
+    Shed-class counts sum; the subset guarantee is the conjunction (one
+    instance shedding a negation event of q withdraws the global lower
+    bound).  ``cells_affected`` also sums — exact when the instances
+    partition the group space (the sharded service: groups are disjoint per
+    shard, router cells cover events no shard ever saw), an upper bound on
+    distinct cells otherwise.  For exact per-window ``3^s`` bounds merge the
+    accountants themselves (:meth:`ErrorAccountant.merged`)."""
+    out: dict[str, QueryErrorReport] = {}
+    for rep in reports:
+        for name, r in rep.items():
+            prev = out.get(name)
+            if prev is None:
+                out[name] = r
+            else:
+                out[name] = QueryErrorReport(
+                    query=name,
+                    shed_kleene=prev.shed_kleene + r.shed_kleene,
+                    shed_critical=prev.shed_critical + r.shed_critical,
+                    shed_negative=prev.shed_negative + r.shed_negative,
+                    cells_affected=prev.cells_affected + r.cells_affected,
+                    subset_guarantee=prev.subset_guarantee
+                    and r.subset_guarantee)
+    return out
 
 
 class ErrorAccountant:
@@ -159,6 +188,34 @@ class ErrorAccountant:
                                                  [0, 0, 0, 1])
                     cell[ci] += c
                     cell[_WIT] &= int(witnessed)
+
+    @classmethod
+    def merged(cls, accountants) -> "ErrorAccountant":
+        """Cell-exact union of several accountants over the same workload.
+
+        The sharded service runs one accountant per shard plus one at the
+        router (admission-time shedding); the global certificate is their
+        union: per-cell counts sum, the witness bit ANDs, taints union.
+        ``window_bound`` / ``report`` on the result are then exactly what a
+        single accountant observing every shed event would have produced —
+        one global subset guarantee and one ``3^s`` bound per window."""
+        accountants = list(accountants)
+        if not accountants:
+            raise ValueError("need at least one accountant")
+        first = accountants[0]
+        out = cls(first.workload, pane=first.pane)
+        for acc in accountants:
+            if acc.pane != out.pane:
+                raise ValueError("accountants disagree on pane bucketing")
+            out.total_shed += acc.total_shed
+            out.late_events += acc.late_events
+            out._tainted |= acc._tainted
+            for key, cell in acc._shed.items():
+                dst = out._shed.setdefault(key, [0, 0, 0, 1])
+                for ci in (_KLE, _CRIT, _NEG):
+                    dst[ci] += cell[ci]
+                dst[_WIT] &= cell[_WIT]
+        return out
 
     # -- queries --
 

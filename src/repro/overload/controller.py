@@ -53,6 +53,26 @@ class LatencyController:
                    kr=getattr(cfg, "kr", 0.0), max_shed=cfg.max_shed,
                    fixed=cfg.fixed_shed)
 
+    def state(self) -> dict:
+        """Control-loop state export for a supervising controller.
+
+        The sharded service's router reads this per shard to actuate
+        admission *upstream* of the ingress queues: ``shed_ratio`` is the
+        actuator value, ``integrator``/``last_error`` expose how much of it
+        is steady-state trim vs transient, ``saturated`` flags a shard whose
+        controller is pinned at ``max_shed`` (shedding alone can no longer
+        meet the SLO there — a rebalance candidate)."""
+        return {
+            "shed_ratio": self.shed_ratio,
+            "integrator": self._i,
+            "last_error": self._prev_e,
+            "updates": self.updates,
+            "slo_ms": self.slo_ms,
+            "fixed": self.fixed,
+            "saturated": self.fixed is None
+            and self.shed_ratio >= self.max_shed,
+        }
+
     def update(self, latency_ms: float,
                revision_load: float = 0.0) -> float:
         """Feed one latency observation (plus the optional revision-load

@@ -234,6 +234,12 @@ class OverloadRuntime:
         """Offer arrivals; honours ingress backpressure.  Returns accepted."""
         return self.queue.offer(batch)
 
+    @property
+    def t_now(self) -> int:
+        """Pane-clock frontier: panes ``[0, t_now)`` have been admitted and
+        shed (execution may still be deferred in the micro-batch backlog)."""
+        return self._t
+
     # -- pane loop --
 
     def step_pane(self) -> None:

@@ -1,0 +1,107 @@
+"""Cross-shard watermark alignment: the aligned-epoch protocol.
+
+Each shard seals and processes panes against its **own** frontier (a
+:class:`~repro.eventtime.frontier.RoutedFrontier` — local bounded-skew
+estimate advanced by router promises), so no shard ever waits on another to
+seal.  What the fleet still needs is a *joint* notion of progress: which
+prefix of event time is final **everywhere**, so that merged results,
+global error certificates and rebalance boundaries can be published
+against it.
+
+The naive answer — the global minimum over shard frontiers — re-couples
+the fleet: one slow shard pins the aligned frontier for everyone, which is
+exactly the failure mode sharding was meant to remove.  The aligned-epoch
+protocol instead works on coarse epochs (``align_every`` ticks, a pane
+multiple) and excludes *laggards*:
+
+* every shard reports a :class:`FrontierSnapshot` after each drive cycle
+  (watermark / sealed frontier / processed frontier);
+* a shard is **lagging** when its processed epoch trails the fleet's
+  maximum by more than ``max_lag_epochs``;
+* the **aligned epoch** is the minimum processed epoch over the
+  non-lagging shards — it keeps advancing with the healthy majority while
+  a slowed shard catches up.
+
+Consumers must treat laggards honestly: ``aligned_results`` in the service
+marks windows owned by lagging shards as *pending* rather than final.
+Nothing is lost — a laggard's own sealing, retract/amend accounting and
+results are untouched; it is only excluded from the fleet-final prefix
+until it rejoins (hysteresis: a laggard rejoins once it is back within
+``max_lag_epochs``).
+"""
+
+from __future__ import annotations
+
+from ..eventtime.frontier import FrontierSnapshot
+
+__all__ = ["WatermarkAligner"]
+
+
+class WatermarkAligner:
+    def __init__(self, n_shards: int, align_every: int,
+                 max_lag_epochs: int = 2):
+        if align_every <= 0:
+            raise ValueError("align_every must be positive")
+        if max_lag_epochs < 0:
+            raise ValueError("max_lag_epochs must be non-negative")
+        self.n_shards = int(n_shards)
+        self.align_every = int(align_every)
+        self.max_lag_epochs = int(max_lag_epochs)
+        self._snaps: dict[int, FrontierSnapshot] = {}
+        self._aligned_epoch = 0        # monotone published frontier
+        self.rounds = 0
+
+    # ------------------------------------------------------------- updates
+
+    def update(self, snap: FrontierSnapshot) -> None:
+        if not (0 <= snap.shard < self.n_shards):
+            raise ValueError(f"shard {snap.shard} out of range")
+        self._snaps[snap.shard] = snap
+
+    def align(self) -> int:
+        """Recompute and publish the aligned epoch (monotone)."""
+        self.rounds += 1
+        epochs = self._epochs()
+        lag = self.laggards()
+        live = [e for s, e in epochs.items() if s not in lag]
+        if live:
+            self._aligned_epoch = max(self._aligned_epoch, min(live))
+        return self._aligned_epoch
+
+    # ------------------------------------------------------------- queries
+
+    def _epochs(self) -> dict[int, int]:
+        return {s: self._snaps[s].epoch(self.align_every)
+                if s in self._snaps else 0 for s in range(self.n_shards)}
+
+    def laggards(self) -> set[int]:
+        """Shards whose processed epoch trails the fleet max by more than
+        ``max_lag_epochs`` (excluded from alignment until they catch up)."""
+        epochs = self._epochs()
+        top = max(epochs.values(), default=0)
+        return {s for s, e in epochs.items()
+                if top - e > self.max_lag_epochs}
+
+    @property
+    def aligned_epoch(self) -> int:
+        return self._aligned_epoch
+
+    @property
+    def aligned_time(self) -> int:
+        """Event time through which every non-lagging shard has processed."""
+        return self._aligned_epoch * self.align_every
+
+    def status(self) -> dict:
+        epochs = self._epochs()
+        lag = self.laggards()
+        return {
+            "aligned_epoch": self._aligned_epoch,
+            "aligned_time": self.aligned_time,
+            "epochs": epochs,
+            "laggards": sorted(lag),
+            "watermarks": {s: snap.watermark
+                           for s, snap in self._snaps.items()},
+            "backlogs": {s: snap.backlog()
+                         for s, snap in self._snaps.items()},
+            "rounds": self.rounds,
+        }

@@ -20,6 +20,7 @@ __all__ = [
     "StreamConfig", "bursty_stream", "ridesharing_stream", "stock_stream",
     "smarthome_stream", "nyc_taxi_stream",
     "OverloadStreamConfig", "overload_stream",
+    "TenantStreamConfig", "tenant_stream",
     "DisorderConfig", "DisorderedStream", "disorder_arrival_order",
     "apply_disorder", "disordered_stream", "NAMED_STREAMS",
     "RIDESHARING_SCHEMA", "STOCK_SCHEMA", "SMARTHOME_SCHEMA", "TAXI_SCHEMA",
@@ -176,6 +177,94 @@ def nyc_taxi_stream(events_per_minute: int = 200, minutes: int = 10,
         schema=TAXI_SCHEMA, events_per_minute=events_per_minute,
         minutes=minutes, n_groups=n_groups, burstiness=burstiness,
         type_weights=(1, 5, 1, 1), seed=seed))
+
+
+# --------------------------------------------------------------------------
+# multi-tenant composition (sharded-service workloads)
+# --------------------------------------------------------------------------
+
+
+@dataclass
+class TenantStreamConfig:
+    """Multi-tenant composition of per-tenant overload streams.
+
+    Tenant ``t`` owns the contiguous group range
+    ``[t * groups_per_tenant, (t+1) * groups_per_tenant)`` — the same
+    tenant/group convention the sharded service's placement table uses —
+    and emits its own :func:`overload_stream` (Poisson per-tick counts,
+    linear ramp, Markov-bursty types) with an independent rng.
+
+    base_events_per_minute   per-tenant base rate before skew
+    rate_skew                Zipf-style tenant rate skew exponent: tenant t
+                             gets weight ``(t+1)**-rate_skew``, normalized
+                             so the *total* offered load is preserved; 0 =
+                             uniform tenants
+    flash_tenant / flash     a flash crowd ``(start_tick, duration_ticks,
+                             multiplier)`` applied to exactly one tenant's
+                             rate — the hot-tenant scenario the router's
+                             rebalance and SLO-isolation paths are tested
+                             against; the other tenants' streams are
+                             bit-for-bit unaffected (independent rngs)
+    ramp_to                  per-tenant linear rate ramp (shared shape)
+    """
+
+    schema: StreamSchema
+    n_tenants: int = 4
+    groups_per_tenant: int = 2
+    base_events_per_minute: int = 300
+    minutes: int = 10
+    rate_skew: float = 0.0
+    flash_tenant: int | None = None
+    flash: tuple[int, int, float] = (0, 60, 4.0)
+    ramp_to: float = 1.0
+    burstiness: float = 0.85
+    type_weights: tuple[float, ...] | None = None
+    seed: int = 0
+    ticks_per_minute: int = 60
+
+    def __post_init__(self) -> None:
+        if self.n_tenants < 1:
+            raise ValueError("n_tenants must be >= 1")
+        if self.groups_per_tenant < 1:
+            raise ValueError("groups_per_tenant must be >= 1")
+        if self.rate_skew < 0:
+            raise ValueError("rate_skew must be >= 0")
+        if self.flash_tenant is not None \
+                and not (0 <= self.flash_tenant < self.n_tenants):
+            raise ValueError("flash_tenant out of range")
+
+
+def tenant_stream(cfg: TenantStreamConfig) -> EventBatch:
+    """Compose per-tenant overload streams into one time-sorted batch.
+
+    Group keys are tenant-offset; ties on time keep tenant order (stable
+    merge), so the composed stream is deterministic given ``seed``.
+    """
+    w = np.array([(t + 1.0) ** -cfg.rate_skew
+                  for t in range(cfg.n_tenants)])
+    w *= cfg.n_tenants / w.sum()
+    parts: list[EventBatch] = []
+    for t in range(cfg.n_tenants):
+        sub = overload_stream(OverloadStreamConfig(
+            schema=cfg.schema,
+            base_events_per_minute=max(
+                1, int(round(cfg.base_events_per_minute * w[t]))),
+            minutes=cfg.minutes,
+            ramp_to=cfg.ramp_to,
+            flash_crowds=(cfg.flash,) if t == cfg.flash_tenant else (),
+            n_groups=cfg.groups_per_tenant,
+            burstiness=cfg.burstiness,
+            type_weights=cfg.type_weights,
+            seed=cfg.seed + 1009 * t,
+            ticks_per_minute=cfg.ticks_per_minute))
+        if len(sub):
+            parts.append(EventBatch(
+                sub.schema, sub.type_id, sub.time, sub.attrs,
+                sub.group + t * cfg.groups_per_tenant))
+    if not parts:
+        return EventBatch(cfg.schema, np.array([], np.int32),
+                          np.array([], np.int64), None)
+    return EventBatch.merge(parts)
 
 
 # --------------------------------------------------------------------------

@@ -34,6 +34,19 @@ class PaddedShards:
     def capacity(self) -> int:
         return self.type_id.shape[1]
 
+    @property
+    def counts(self) -> np.ndarray:
+        """Valid events per shard, shape [n_shards]."""
+        return self.valid.sum(axis=1)
+
+    def occupancy(self) -> float:
+        """Fraction of the dense [s, cap] slab holding real events — the
+        padding waste a skewed group distribution causes (1.0 = perfectly
+        balanced, -> 1/n_shards when one shard holds everything)."""
+        if self.valid.size == 0:
+            return 0.0
+        return float(self.valid.mean())
+
 
 def shard_by_group(batch: EventBatch, n_shards: int,
                    capacity: int | None = None) -> PaddedShards:

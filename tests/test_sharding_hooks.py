@@ -1,0 +1,121 @@
+"""Golden/edge coverage for the two low-level sharding hooks the service
+and executor layers build on: ``pane_bucket_shards`` (bucket batch-axis
+slicing) and ``shard_by_group`` / ``PaddedShards`` (dense mesh partitioning
+with occupancy accounting)."""
+
+import numpy as np
+import pytest
+
+from repro.core.events import EventBatch
+from repro.distributed.sharding import pane_bucket_shards
+from repro.streams.partition import shard_by_group
+from repro.streams.generator import RIDESHARING_SCHEMA, ridesharing_stream
+
+# ------------------------------------------------------ pane_bucket_shards
+
+
+def test_pane_bucket_shards_golden():
+    assert pane_bucket_shards(8, 2) == [slice(0, 4), slice(4, 8)]
+    assert pane_bucket_shards(10, 4) == [slice(0, 2), slice(2, 5),
+                                         slice(5, 8), slice(8, 10)]
+    assert pane_bucket_shards(7, 3) == [slice(0, 2), slice(2, 5),
+                                        slice(5, 7)]
+
+
+def test_pane_bucket_shards_single_shard_is_identity():
+    assert pane_bucket_shards(9, 1) == [slice(0, 9)]
+
+
+def test_pane_bucket_shards_more_shards_than_jobs():
+    # empty shards are elided: nb < n_shards yields nb singleton slices
+    assert pane_bucket_shards(3, 8) == [slice(0, 1), slice(1, 2),
+                                        slice(2, 3)]
+
+
+def test_pane_bucket_shards_empty_and_degenerate():
+    assert pane_bucket_shards(0, 4) == []
+    assert pane_bucket_shards(-2, 4) == []
+    assert pane_bucket_shards(5, 0) == [slice(0, 5)]   # clamps to >= 1
+
+
+@pytest.mark.parametrize("nb,n_shards", [(1, 1), (5, 2), (17, 4), (64, 16),
+                                         (33, 7), (100, 3)])
+def test_pane_bucket_shards_cover_and_balance(nb, n_shards):
+    slices = pane_bucket_shards(nb, n_shards)
+    # disjoint contiguous cover of [0, nb)
+    assert slices[0].start == 0 and slices[-1].stop == nb
+    for a, b in zip(slices, slices[1:]):
+        assert a.stop == b.start
+    sizes = [s.stop - s.start for s in slices]
+    assert all(sz > 0 for sz in sizes)
+    assert sum(sizes) == nb
+    assert max(sizes) - min(sizes) <= 1          # balanced to within one
+    assert len(slices) == min(n_shards, nb)
+
+
+# ------------------------------------------------- shard_by_group / padding
+
+
+def _batch(groups, times=None):
+    n = len(groups)
+    g = np.asarray(groups, dtype=np.int64)
+    t = np.arange(n, dtype=np.int64) if times is None \
+        else np.asarray(times, dtype=np.int64)
+    return EventBatch(RIDESHARING_SCHEMA,
+                      np.zeros(n, dtype=np.int32), t,
+                      np.zeros((n, len(RIDESHARING_SCHEMA.attrs)),
+                               dtype=np.float32), g)
+
+
+def test_shard_by_group_partitions_events():
+    batch = _batch([0, 1, 2, 3, 0, 1, 2, 0])
+    ps = shard_by_group(batch, 2)
+    assert ps.n_shards == 2
+    # group g lands on shard g % 2, nothing lost, nothing invented
+    assert ps.counts.tolist() == [5, 3]
+    assert int(ps.counts.sum()) == len(batch)
+    for s in range(2):
+        assert np.all(ps.group[s][ps.valid[s]] % 2 == s)
+    # padding rows are masked out
+    assert not ps.valid[1, 3:].any()
+
+
+def test_padded_shards_occupancy_accounting():
+    # perfectly balanced: full slab
+    even = shard_by_group(_batch([0, 1, 0, 1]), 2)
+    assert even.occupancy() == 1.0
+    assert even.capacity == 2
+    # maximally skewed: one shard holds everything -> 1/n_shards
+    skew = shard_by_group(_batch([0, 0, 0, 0]), 2)
+    assert skew.counts.tolist() == [4, 0]
+    assert skew.occupancy() == pytest.approx(0.5)
+    assert skew.capacity == 4
+    # occupancy == mean validity == events / (shards * capacity)
+    mixed = shard_by_group(_batch([0, 0, 0, 1, 1, 2]), 3)
+    assert mixed.occupancy() == pytest.approx(
+        int(mixed.counts.sum()) / (mixed.n_shards * mixed.capacity))
+
+
+def test_shard_by_group_empty_batch():
+    ps = shard_by_group(_batch([]), 3)
+    assert ps.n_shards == 3
+    assert ps.counts.tolist() == [0, 0, 0]
+    assert ps.occupancy() == 0.0
+    assert ps.capacity == 1          # dense slab keeps a non-zero shape
+
+
+def test_shard_by_group_explicit_capacity_truncates():
+    ps = shard_by_group(_batch([0, 0, 0, 1]), 2, capacity=2)
+    assert ps.capacity == 2
+    assert ps.counts.tolist() == [2, 1]
+
+
+def test_shard_by_group_single_shard_roundtrip():
+    stream = ridesharing_stream(events_per_minute=120, minutes=1,
+                                n_groups=4)
+    ps = shard_by_group(stream, 1)
+    assert ps.n_shards == 1
+    assert int(ps.counts[0]) == len(stream)
+    assert ps.occupancy() == 1.0
+    assert np.array_equal(ps.time[0][ps.valid[0]], stream.time)
+    assert np.array_equal(ps.group[0][ps.valid[0]], stream.group)

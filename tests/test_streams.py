@@ -123,3 +123,83 @@ def test_overload_stream_ramp_and_flash():
 def test_pane_size():
     assert pane_size_for([(10, 5), (15, 5)]) == 5
     assert pane_size_for([(30, 1), (20, 5)]) == 1
+
+
+# ------------------------------------------------------------ tenant_stream
+
+
+def _tenant_cfg(**kw):
+    from repro.streams.generator import TenantStreamConfig
+    base = dict(schema=RIDESHARING_SCHEMA, n_tenants=3, groups_per_tenant=2,
+                base_events_per_minute=200, minutes=2, seed=7)
+    base.update(kw)
+    return TenantStreamConfig(**base)
+
+
+def test_tenant_stream_schema_and_group_ranges():
+    from repro.streams.generator import tenant_stream
+    cfg = _tenant_cfg()
+    b = tenant_stream(cfg)
+    assert b.schema is RIDESHARING_SCHEMA
+    assert (np.diff(b.time) >= 0).all()
+    # tenant t owns exactly the contiguous range [2t, 2t+2)
+    tenants = b.group // cfg.groups_per_tenant
+    assert set(np.unique(tenants)) == set(range(cfg.n_tenants))
+    assert set(np.unique(b.group)) <= set(
+        range(cfg.n_tenants * cfg.groups_per_tenant))
+    # every tenant contributes its own per-tenant stream
+    for t in range(cfg.n_tenants):
+        assert int(np.sum(tenants == t)) > 0
+
+
+def test_tenant_stream_deterministic():
+    from repro.streams.generator import tenant_stream
+    a = tenant_stream(_tenant_cfg())
+    b = tenant_stream(_tenant_cfg())
+    assert np.array_equal(a.time, b.time)
+    assert np.array_equal(a.type_id, b.type_id)
+    assert np.array_equal(a.group, b.group)
+    c = tenant_stream(_tenant_cfg(seed=8))
+    assert not (len(c) == len(a) and np.array_equal(a.time, c.time)
+                and np.array_equal(a.group, c.group))
+
+
+def test_tenant_stream_rate_skew():
+    from repro.streams.generator import tenant_stream
+    flat = tenant_stream(_tenant_cfg(n_tenants=4, minutes=4))
+    skew = tenant_stream(_tenant_cfg(n_tenants=4, minutes=4, rate_skew=1.5))
+    def per_tenant(b):
+        t = b.group // 2
+        return np.array([int(np.sum(t == i)) for i in range(4)])
+    f, s = per_tenant(flat), per_tenant(skew)
+    # skewed: tenant 0 dominates, monotone-ish tail; total load preserved
+    assert s[0] > 2 * s[-1]
+    assert s[0] > f[0]
+    assert abs(int(s.sum()) - int(f.sum())) / int(f.sum()) < 0.25
+
+
+def test_tenant_stream_flash_isolated_to_one_tenant():
+    from repro.streams.generator import tenant_stream
+    calm = _tenant_cfg(minutes=3)
+    hot = _tenant_cfg(minutes=3, flash_tenant=1, flash=(60, 30, 5.0))
+    b0, b1 = tenant_stream(calm), tenant_stream(hot)
+    def tenant_slice(b, t):
+        m = (b.group // 2) == t
+        return b.time[m], b.type_id[m], b.group[m]
+    # the flash tenant gains events; every other tenant is bit-identical
+    assert len(tenant_slice(b1, 1)[0]) > len(tenant_slice(b0, 1)[0])
+    for t in (0, 2):
+        for x, y in zip(tenant_slice(b0, t), tenant_slice(b1, t)):
+            assert np.array_equal(x, y)
+
+
+def test_tenant_stream_validation():
+    import pytest
+    with pytest.raises(ValueError):
+        _tenant_cfg(n_tenants=0)
+    with pytest.raises(ValueError):
+        _tenant_cfg(groups_per_tenant=0)
+    with pytest.raises(ValueError):
+        _tenant_cfg(rate_skew=-0.5)
+    with pytest.raises(ValueError):
+        _tenant_cfg(flash_tenant=3)

@@ -52,6 +52,9 @@ from .common import kleene_workload
 
 BENCH_PATH = os.path.join(os.path.dirname(__file__), os.pardir,
                           "BENCH_e2e.json")
+SERVING_PATH = os.path.join(os.path.dirname(__file__), os.pardir,
+                            "BENCH_serving.json")
+SERVING_PARITY_FLOOR = 0.9     # async warm throughput vs sync epoch run
 
 WORKLOAD_SHAPE = {
     "ridesharing": dict(kleene_type="Travel",
@@ -510,6 +513,24 @@ def check(rtol: float = 0.25, obs_tol: float = 0.03) -> int:
     if two < SHARD_WARM_FLOOR or two < one:
         print("FAIL: per-shard plan-cache warm hit rate regressed vs the "
               "single-shard runtime — sharding is losing plan-cache warmth")
+        return 1
+    # serving-parity gate: the committed serving artifact must show the
+    # async session front-end holding warm throughput within 10% of the
+    # sync epoch run on the same merged stream, with bitwise-equal results
+    # (the continuous-batching flush path is a wrapper, not a second engine)
+    with open(SERVING_PATH) as f:
+        serving = json.load(f)["throughput_parity"]
+    ratio = serving["async_vs_sync"]
+    print(f"perf-smoke [serving]: async warm throughput {ratio:.3f}x sync "
+          f"(floor {SERVING_PARITY_FLOOR:.2f}x), "
+          f"bitwise_equal={serving['bitwise_equal']}")
+    if not serving["bitwise_equal"]:
+        print("FAIL: committed BENCH_serving.json records async results "
+              "diverging from the sync run")
+        return 1
+    if ratio < SERVING_PARITY_FLOOR:
+        print("FAIL: committed async serving throughput is more than 10% "
+              "below the sync epoch run")
         return 1
     print("OK")
     return 0

@@ -1,0 +1,403 @@
+"""Serving-tier benchmark: ``BENCH_serving.json``.
+
+Measures the asynchronous session front-end against the epoch-synchronous
+batch path it wraps, on the same replicated-problem workload the shard
+scaling study uses:
+
+* **session latency** — >= 32 concurrent trickle sessions on real threads
+  with a background pump: per-session delivery-latency p50/p99 (pane
+  sealed by the scheduler watermark -> record in the session inbox),
+  plus the cross-session spread.
+* **throughput parity** — warm events/s of the serving path (32 sessions
+  trickling round-robin, inline pump — the continuous-batching flush
+  path) vs the sync ``OverloadRuntime.run`` on the merged stream, with a
+  bitwise determinism check of the drained results.  ``bench_e2e
+  --check`` gates the committed ratio at async >= 0.9x sync.
+* **measured shard scaling** — the 2-/4-shard replicated problem driven
+  serially vs on the thread-pool drive (``ShardServiceConfig.parallel``):
+  *measured wall clock*, no modeled makespans.  The honest caveat is
+  recorded with the numbers: Python threads only overlap the drive's
+  GIL-released stretches, so the measured speedup is bounded by
+  ``min(shards, cpus)`` *and* by the workload's GIL residency — on the
+  1-core CI container it is ~1.0x by construction.  The >= 1.5x
+  acceptance floor at 4 shards is therefore gated on ``cpus >= 4`` (the
+  artifact records ``cpus`` so ``--check`` applies the right rule).
+* **pipelined flush** — ``OverloadConfig.pipeline_flush`` off vs on:
+  wall clock of the depth-1 host/flush overlap on one runtime.
+
+``--smoke`` is the CI fast-lane entry (small scale, asserts determinism
+and delivery plumbing, no wall-clock floors); ``--check`` validates the
+committed artifact.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import platform
+import threading
+import time
+
+import numpy as np
+
+from repro.core.events import EventBatch
+from repro.overload.config import OverloadConfig
+from repro.overload.runtime import OverloadRuntime
+from repro.serve import ServingFrontend
+
+from .fig_shard_scale import (GROUPS_PER_TENANT, TENANTS_PER_SHARD,
+                              _base_stream, _workload, measured_scaling)
+
+BENCH_PATH = os.path.join(os.path.dirname(__file__), os.pardir,
+                          "BENCH_serving.json")
+
+N_SESSIONS = 32
+MICRO_BATCH = 8
+SHARD_POINTS = (2, 4)
+MEASURED_SPEEDUP_FLOOR = 1.5        # applies when cpus >= shard count
+PARITY_FLOOR = 0.9                  # async warm throughput vs sync
+
+
+def _cpus() -> int:
+    try:
+        return len(os.sched_getaffinity(0))
+    except AttributeError:
+        return os.cpu_count() or 1
+
+
+def _overload_cfg() -> OverloadConfig:
+    return OverloadConfig(shed_policy="none", micro_batch=MICRO_BATCH)
+
+
+def _session_parts(stream, n_sessions: int):
+    """Tenant-aligned session split: session i serves tenant
+    ``i % n_tenants`` (several sessions can share a tenant — they then
+    subscribe to, and each receive, that tenant's deliveries).
+
+    The split stamps the original stream position as the producer ``seq``
+    (the front-end's replayed-trace regime), so the serving merge resolves
+    equal-timestamp events in the same order the sync run sees them and
+    results stay bitwise comparable."""
+    if stream.seq is None:
+        stream = EventBatch(
+            schema=stream.schema, type_id=stream.type_id, time=stream.time,
+            attrs=stream.attrs, group=stream.group,
+            seq=np.arange(len(stream), dtype=np.int64))
+    n_tenants = int(stream.group.max()) // GROUPS_PER_TENANT + 1
+    parts = []
+    for i in range(n_sessions):
+        t = i % n_tenants
+        lo, hi = t * GROUPS_PER_TENANT, (t + 1) * GROUPS_PER_TENANT
+        mask = (stream.group >= lo) & (stream.group < hi)
+        idx = np.flatnonzero(mask)
+        parts.append((t, stream.select(idx[i // n_tenants::max(
+            1, n_sessions // n_tenants)])))
+    return parts
+
+
+OFFERED_RATE = 15_000      # paced events/s across all sessions, < capacity
+
+
+def session_latency(quick: bool, n_sessions: int = N_SESSIONS,
+                    rate: int = OFFERED_RATE,
+                    micro_batch: int = MICRO_BATCH) -> dict:
+    """Threaded trickle sessions + background pump; wall-clock delivery
+    latency per session.
+
+    Sessions pace their submissions to a fixed total offered rate below
+    engine capacity (deadline pacing per chunk).  Unpaced threads would
+    replay the whole trace in one burst and the "latency" would just
+    measure backlog drain — pacing makes the percentiles reflect steady
+    service latency.  ``micro_batch`` is the dominant term: a window is
+    delivered by the K-pane fused flush that finalizes it, so K > 1
+    buys throughput with delivery delay (the caller reports both K = 1
+    and the throughput-tuned K)."""
+    wl = _workload(quick)
+    base = _base_stream(quick)
+    fe = ServingFrontend(
+        wl, backend="overload",
+        overload=OverloadConfig(shed_policy="none", micro_batch=micro_batch),
+        groups_per_tenant=GROUPS_PER_TENANT)
+    parts = _session_parts(base, n_sessions)
+    handles = [fe.open_session(tenant=t) for t, _ in parts]
+    fe.start(interval_s=0.001)
+    chunk = fe.pane          # pane-granular pacing: smooth watermark advance
+    duration_s = len(base) / rate
+
+    def trickle(h, part):
+        t_hi = int(part.time.max()) + 1 if len(part) else 0
+        steps = range(0, t_hi, chunk)
+        period = duration_s / max(1, len(steps))
+        for k, t0 in enumerate(steps):
+            lag = w0 + (k + 1) * period - time.perf_counter()
+            if lag > 0:
+                time.sleep(lag)
+            h.submit(part.time_slice(t0, t0 + chunk))
+            h.advance_to(min(t0 + chunk, t_hi))
+        h.close()
+
+    w0 = time.perf_counter()
+    threads = [threading.Thread(target=trickle, args=(h, p))
+               for h, (_, p) in zip(handles, parts)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    fe.drain()
+    wall = time.perf_counter() - w0
+    summ = fe.summary()
+    per = [s["p99_ms"] for s in summ["sessions"].values() if "p99_ms" in s]
+    return {
+        "sessions": n_sessions,
+        "offered_rate_events_per_s": rate,
+        "micro_batch": micro_batch,
+        "events": summ["submitted"],
+        "deliveries": summ["deliveries"],
+        "wall_s": round(wall, 4),
+        "p50_ms": summ["latency_ms"]["p50"],
+        "p90_ms": summ["latency_ms"]["p90"],
+        "p99_ms": summ["latency_ms"]["p99"],
+        "per_session_p99_ms": {
+            "min": round(min(per), 3) if per else 0.0,
+            "median": round(float(np.median(per)), 3) if per else 0.0,
+            "max": round(max(per), 3) if per else 0.0,
+        },
+        "tenants": len(summ["tenants"]),
+    }
+
+
+def _sync_run(wl, stream) -> tuple[float, dict]:
+    rt = OverloadRuntime(wl, _overload_cfg())
+    w0 = time.perf_counter()
+    res = rt.run(stream)
+    return time.perf_counter() - w0, res
+
+
+def _async_run(wl, stream, n_sessions: int) -> tuple[float, dict]:
+    fe = ServingFrontend(wl, backend="overload", overload=_overload_cfg(),
+                         groups_per_tenant=GROUPS_PER_TENANT)
+    parts = _session_parts(stream, n_sessions)
+    handles = [fe.open_session(tenant=t) for t, _ in parts]
+    cursors = [0] * n_sessions
+    chunk = 2 * fe.pane
+    w0 = time.perf_counter()
+    live = True
+    while live:                         # round-robin trickle, inline pump
+        live = False
+        for h, (_, part), i in zip(handles, parts, range(n_sessions)):
+            c0 = cursors[i]
+            if c0 >= len(part):
+                continue
+            t0 = int(part.time[c0])
+            hi = int(np.searchsorted(part.time, t0 + chunk, side="left"))
+            h.submit(part.select(np.arange(c0, hi)))
+            h.advance_to(t0 + chunk)
+            cursors[i] = hi
+            live = True
+        fe.pump()
+    for h in handles:
+        h.close()
+    res = fe.drain()
+    return time.perf_counter() - w0, res
+
+
+def throughput_parity(quick: bool, reps: int = 5,
+                      n_sessions: int = N_SESSIONS) -> dict:
+    """Warm sync epoch run vs the async serving path on the same stream.
+
+    Shared-runner wall clocks scatter ~+-20% between epochs, and that
+    noise is machine-wide, not path-specific — so each rep measures the
+    two paths back-to-back (a slow epoch slows both) and the committed
+    ratio is the best *paired* ratio, not a ratio of independently
+    minimized walls."""
+    from repro.core.engine import vals_equal
+    wl = _workload(quick)
+    stream = _base_stream(quick)
+    _sync_run(wl, stream)               # process warmup
+    best = None
+    for _ in range(reps):
+        sync_wall, sync_res = _sync_run(wl, stream)
+        async_wall, async_res = _async_run(wl, stream, n_sessions)
+        pair = (sync_wall / async_wall if async_wall else 0.0,
+                sync_wall, async_wall)
+        if best is None or pair[0] > best[0]:
+            best = pair
+    ratio, sync_wall, async_wall = best
+    bitwise = (set(sync_res) == set(async_res)
+               and all(vals_equal(async_res[k], sync_res[k])
+                       for k in sync_res))
+    n = len(stream)
+    return {
+        "events": n,
+        "sessions": n_sessions,
+        "reps": reps,
+        "sync_wall_s": round(sync_wall, 4),
+        "async_wall_s": round(async_wall, 4),
+        "sync_events_per_s": round(n / sync_wall) if sync_wall else 0,
+        "async_events_per_s": round(n / async_wall) if async_wall else 0,
+        "async_vs_sync": round(ratio, 3),
+        "bitwise_equal": bool(bitwise),
+    }
+
+
+def shards_measured(quick: bool, reps: int = 3) -> dict:
+    """Measured wall clock of the replicated problem, serial vs thread-pool
+    drive — no modeled makespans.  Single implementation lives in
+    ``fig_shard_scale.measured_scaling`` so this artifact and
+    ``BENCH_shard_scale.json`` cannot drift."""
+    return measured_scaling(quick, reps=reps)
+
+
+def pipeline_overlap(quick: bool, reps: int = 3) -> dict:
+    wl = _workload(quick)
+    stream = _base_stream(quick)
+    walls = {}
+    for pipelined in (False, True):
+        best = None
+        for _ in range(reps):
+            rt = OverloadRuntime(wl, OverloadConfig(
+                shed_policy="none", micro_batch=MICRO_BATCH,
+                pipeline_flush=pipelined))
+            w0 = time.perf_counter()
+            rt.run(stream)
+            w = time.perf_counter() - w0
+            rt.shutdown()
+            best = w if best is None else min(best, w)
+        walls[pipelined] = best
+    return {
+        "inline_wall_s": round(walls[False], 4),
+        "pipelined_wall_s": round(walls[True], 4),
+        "overlap_gain": round(walls[False] / walls[True], 3)
+        if walls[True] else 0.0,
+        "cpus": _cpus(),
+    }
+
+
+def smoke() -> int:
+    """CI fast lane: plumbing + determinism at a small scale."""
+    before = {t for t in threading.enumerate()}
+    par = throughput_parity(quick=True, reps=1, n_sessions=8)
+    print(f"smoke: parity {par['async_vs_sync']}x "
+          f"(sync {par['sync_events_per_s']} ev/s, "
+          f"async {par['async_events_per_s']} ev/s), "
+          f"bitwise_equal={par['bitwise_equal']}")
+    if not par["bitwise_equal"]:
+        print("FAIL: async serving results diverge from the sync run")
+        return 1
+    lat = session_latency(quick=True, n_sessions=8, micro_batch=1)
+    print(f"smoke: latency p50 {lat['p50_ms']} ms p99 {lat['p99_ms']} ms "
+          f"over {lat['deliveries']} deliveries")
+    if lat["deliveries"] <= 0:
+        print("FAIL: no deliveries reached the session inboxes")
+        return 1
+    sh = shards_measured(quick=True, reps=1)
+    for n in SHARD_POINTS:
+        print(f"smoke: {n}-shard measured {sh[str(n)]['measured_speedup']}x "
+              f"(serial {sh[str(n)]['serial_wall_s']}s, "
+              f"parallel {sh[str(n)]['parallel_wall_s']}s, "
+              f"cpus {sh['cpus']})")
+    leaked = [t for t in threading.enumerate()
+              if t not in before and t.is_alive()]
+    if leaked:
+        print(f"FAIL: leaked threads {leaked}")
+        return 1
+    print("OK")
+    return 0
+
+
+def check() -> int:
+    """Validate the committed artifact."""
+    with open(BENCH_PATH) as f:
+        payload = json.load(f)
+    rc = 0
+    for tuning, lat in payload["session_latency"].items():
+        print(f"serving [latency/{tuning}]: {lat['sessions']} sessions, "
+              f"K={lat['micro_batch']}, "
+              f"p50 {lat['p50_ms']} ms, p99 {lat['p99_ms']} ms")
+        if lat["sessions"] < 32:
+            print("FAIL: committed latency study covers < 32 sessions")
+            rc = 1
+        if not (0 < lat["p50_ms"] <= lat["p99_ms"]):
+            print("FAIL: committed latency percentiles are not sane")
+            rc = 1
+    par = payload["throughput_parity"]
+    print(f"serving [parity]: async {par['async_vs_sync']}x sync "
+          f"(floor {PARITY_FLOOR}x), bitwise_equal={par['bitwise_equal']}")
+    if not par["bitwise_equal"]:
+        print("FAIL: committed artifact records non-deterministic serving")
+        rc = 1
+    if par["async_vs_sync"] < PARITY_FLOOR:
+        print("FAIL: committed async throughput below "
+              f"{PARITY_FLOOR}x of sync")
+        rc = 1
+    sh = payload["shards_measured"]
+    cpus = sh["cpus"]
+    for n in SHARD_POINTS:
+        m = sh[str(n)]
+        gated = cpus >= n
+        print(f"serving [{n} shards]: measured {m['measured_speedup']}x "
+              f"wall (cpus {cpus}, floor "
+              f"{MEASURED_SPEEDUP_FLOOR if gated else 'n/a on this host'})")
+        if gated and n == 4 and m["measured_speedup"] < \
+                MEASURED_SPEEDUP_FLOOR:
+            print(f"FAIL: measured 4-shard speedup below "
+                  f"{MEASURED_SPEEDUP_FLOOR}x with {cpus} cpus")
+            rc = 1
+        if not gated and m["measured_speedup"] < 0.7:
+            print(f"FAIL: parallel drive is pathologically slower than "
+                  f"serial even accounting for {cpus} cpu(s)")
+            rc = 1
+    if rc == 0:
+        print("OK")
+    return rc
+
+
+def main(quick: bool = True) -> dict:
+    lat = {"latency_tuned": session_latency(quick, micro_batch=1),
+           "throughput_tuned": session_latency(quick)}
+    par = throughput_parity(quick)
+    sh = shards_measured(quick)
+    pipe = pipeline_overlap(quick)
+    payload = {
+        "meta": {
+            "quick": quick,
+            "cpus": _cpus(),
+            "groups_per_tenant": GROUPS_PER_TENANT,
+            "tenants_per_shard": TENANTS_PER_SHARD,
+            "micro_batch": MICRO_BATCH,
+            "load_model": "replicated problem (same tenant block cloned "
+                          "per shard, group ids offset) — the "
+                          "fig_shard_scale workload",
+            "measurement": "all wall clock; no modeled makespans in this "
+                           "artifact",
+            "python": platform.python_version(),
+            "numpy": np.__version__,
+        },
+        "session_latency": lat,
+        "throughput_parity": par,
+        "shards_measured": sh,
+        "pipeline": pipe,
+    }
+    with open(BENCH_PATH, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return payload
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI fast lane: determinism + delivery plumbing")
+    ap.add_argument("--check", action="store_true",
+                    help="validate the committed BENCH_serving.json")
+    args = ap.parse_args()
+    if args.smoke:
+        raise SystemExit(smoke())
+    if args.check:
+        raise SystemExit(check())
+    payload = main(quick=not args.full)
+    for k in ("session_latency", "throughput_parity", "shards_measured",
+              "pipeline"):
+        print(k, json.dumps(payload[k], sort_keys=True))

@@ -185,6 +185,47 @@ def weak_scaling(quick: bool, reps: int = 3) -> dict:
     return out
 
 
+def _cpus() -> int:
+    try:
+        return len(os.sched_getaffinity(0))
+    except AttributeError:
+        return os.cpu_count() or 1
+
+
+def measured_scaling(quick: bool, reps: int = 3) -> dict:
+    """*Measured* wall clock of the replicated problem: the serial drive
+    vs the thread-pool drive (``ShardServiceConfig.parallel``).
+
+    This deliberately sits next to the modeled ``weak_scaling`` numbers:
+    the model (router_busy + max shard_busy) states what independent
+    shards cost on sufficient cores; the measurement states what this
+    host actually delivers.  Python threads only overlap the drive's
+    GIL-released stretches, so measured speedup is bounded by
+    ``min(shards, cpus)`` and by GIL residency — on a 1-core host it is
+    ~1.0x by construction, which is why the artifact records ``cpus``
+    and consumers gate on it."""
+    wl = _workload(quick)
+    base = _base_stream(quick)
+    out = {"cpus": _cpus()}
+    for n in SHARD_POINTS:
+        if n == 1:
+            continue
+        stream = _replicated(base, n)
+        walls = {}
+        for parallel in (False, True):
+            walls[parallel] = min(
+                _drive(_service(wl, n, parallel=parallel), stream)["wall_s"]
+                for _ in range(reps))
+        out[str(n)] = {
+            "serial_wall_s": round(walls[False], 4),
+            "parallel_wall_s": round(walls[True], 4),
+            "measured_speedup": round(walls[False] / walls[True], 3)
+            if walls[True] else 0.0,
+            "ideal_bound": min(n, _cpus()),
+        }
+    return out
+
+
 def flash_isolation(quick: bool, tps: int = TENANTS_PER_SHARD) -> dict:
     """Flash crowd on replica 0's lead tenant (-> shard 0 under block
     pinning) at 4 shards; the other shards' p99 must hold against the
@@ -296,12 +337,27 @@ def check() -> int:
     rc = 0
     for n, floor in SPEEDUP_FLOORS.items():
         got = ws[str(n)]["speedup"]
-        print(f"shard_scale [{n} shards]: speedup {got:.2f}x "
+        print(f"shard_scale [{n} shards]: modeled speedup {got:.2f}x "
               f"(floor {floor:.2f}x)")
         if got < floor:
             print(f"FAIL: committed weak-scaling speedup at {n} shards "
                   f"below the {floor:.1f}x floor")
             rc = 1
+    ms = payload.get("measured_scaling")
+    if ms:
+        cpus = ms["cpus"]
+        for n in SHARD_POINTS:
+            if str(n) not in ms:
+                continue
+            m = ms[str(n)]
+            gated = cpus >= n
+            print(f"shard_scale [{n} shards]: measured {m['measured_speedup']}x"
+                  f" wall (cpus {cpus}"
+                  f"{', ungated on this host' if not gated else ''})")
+            if gated and m["measured_speedup"] < SPEEDUP_FLOORS.get(n, 0):
+                print(f"FAIL: measured speedup at {n} shards below the "
+                      f"modeled floor with {cpus} cpus available")
+                rc = 1
     iso = payload["flash_isolation"]
     print(f"shard_scale [isolation]: hot p99 {iso['hot_p99_ms']:.1f} ms, "
           f"cold p99 {iso['cold_p99_ms']:.1f} ms (slo {iso['slo_ms']} ms)")
@@ -324,21 +380,27 @@ def check() -> int:
 
 def main(quick: bool = True) -> list[dict]:
     ws = weak_scaling(quick)
+    ms = measured_scaling(quick)
     iso = flash_isolation(quick)
     al = slow_shard_alignment(quick)
     payload = {
         "meta": {
             "quick": quick,
+            "cpus": _cpus(),
             "groups_per_tenant": GROUPS_PER_TENANT,
             "tenants_per_shard": TENANTS_PER_SHARD,
             "load_model": "replicated problem: same tenant block cloned "
                           "per shard (group ids offset)",
-            "makespan_model": "router_busy + max(shard_busy) "
-                              "(shards share no mutable state)",
+            "makespan_model": "weak_scaling speedups are MODELED: "
+                              "router_busy + max(shard_busy) (shards share "
+                              "no mutable state); measured_scaling records "
+                              "actual serial-vs-parallel wall clock, "
+                              "bounded by min(shards, cpus)",
             "python": platform.python_version(),
             "numpy": np.__version__,
         },
         "weak_scaling": ws,
+        "measured_scaling": ms,
         "flash_isolation": iso,
         "slow_shard": al,
     }

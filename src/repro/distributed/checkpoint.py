@@ -73,7 +73,11 @@ def save_checkpoint(directory: str, step: int, tree, *, blocking=True,
     if blocking:
         write()
         return None
-    t = threading.Thread(target=write, daemon=True)
+    # non-daemon: an async save must be joined (CheckpointManager.wait /
+    # close), never abandoned to interpreter teardown mid-write — the
+    # COMMITTED-marker protocol makes a torn write unreadable, but the
+    # join guarantees the final checkpoint of a run actually lands
+    t = threading.Thread(target=write, name="ckpt-write")
     t.start()
     return t
 
@@ -138,6 +142,17 @@ class CheckpointManager:
         if self._pending is not None:
             self._pending.join()
             self._pending = None
+
+    def close(self):
+        """Join any in-flight async save (idempotent); use at run end or
+        via the context-manager form."""
+        self.wait()
+
+    def __enter__(self) -> "CheckpointManager":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
 
     def _gc(self):
         steps = sorted(

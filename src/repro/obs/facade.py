@@ -149,13 +149,15 @@ class Observability:
         return self.tracer.phase_totals()
 
     def collect(self, stats=None, overload=None, eventtime=None,
-                runtime=None) -> dict:
+                runtime=None, serving=None) -> dict:
         """One unified read-side view over every stat silo.
 
         ``stats`` is a ``RunStats``, ``overload`` an ``OverloadMetrics``,
         ``eventtime`` an ``EventTimeMetrics``, ``runtime`` a
         ``HamletRuntime`` (for executor / fold-executor counters, which
-        are also mirrored into registry gauges here).
+        are also mirrored into registry gauges here), ``serving`` a
+        :class:`~repro.serve.frontend.ServingFrontend` (per-session /
+        per-tenant delivery-latency percentiles land under ``"serving"``).
         """
         out = {"metrics": self.registry.collect(),
                "trace": {"events": len(self.tracer),
@@ -170,6 +172,9 @@ class Observability:
             out["engine"] = eng
         if overload is not None:
             out["overload"] = overload.summary()
+        if serving is not None:
+            out["serving"] = (serving if isinstance(serving, dict)
+                              else serving.summary())
         if eventtime is not None:
             out["eventtime"] = eventtime.summary()
         if runtime is not None:

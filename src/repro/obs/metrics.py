@@ -21,6 +21,20 @@ from math import inf, isfinite
 
 LATENCY_MS_BUCKETS = (0.05, 0.1, 0.25, 0.5, 1.0, 2.5, 5.0, 10.0, 25.0,
                       50.0, 100.0, 250.0, 500.0, 1000.0)
+
+
+def serve_latency_series(kind: str, key) -> str:
+    """Canonical name of a keyed serving-latency histogram series.
+
+    ``kind`` is ``"session"`` or ``"tenant"``; the serving front-end keeps
+    one ``LATENCY_MS_BUCKETS`` histogram per key under this name (delivery
+    latency: pane sealed by the scheduler watermark -> record in inbox).
+    """
+    if kind not in ("session", "tenant"):
+        raise ValueError(f"unknown serving latency kind {kind!r}")
+    return f"serve.latency_ms.{kind}.{key}"
+
+
 OCCUPANCY_BUCKETS = (1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0, 128.0, 256.0,
                      512.0, 1024.0)
 LAG_BUCKETS = (0.0, 1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0, 128.0, 256.0)

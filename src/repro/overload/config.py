@@ -62,6 +62,19 @@ class OverloadConfig:
     tick_seconds       maps stream ticks to wall seconds; when set, latency is
                        end-to-end (queueing backlog included), not just the
                        pane processing time
+    pipeline_flush     run each micro-batch flush (plan -> execute ->
+                       finalize -> fold) on a dedicated single worker thread
+                       instead of inline: while flush N executes, the caller
+                       thread keeps polling, admitting and shedding the
+                       panes of flush N+1 (the host-side half of the
+                       pipeline).  Flushes stay strictly FIFO on the one
+                       worker, so results are identical to inline execution
+                       whenever shed decisions are (``none``/``fixed_shed``
+                       — with the live PID loop the controller observes a
+                       flush one step later, the same class of trade as
+                       ``micro_batch``).  Call ``shutdown()`` (or
+                       ``results()``, which drains) before discarding the
+                       runtime.
     """
 
     slo_ms: float = 50.0
@@ -83,6 +96,7 @@ class OverloadConfig:
     benefit_model: str = "v1"
     seed: int = 0
     tick_seconds: float | None = None
+    pipeline_flush: bool = False
 
     def __post_init__(self) -> None:
         if self.shed_policy not in ("none", "drop_tail", "random",

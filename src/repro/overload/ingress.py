@@ -19,9 +19,18 @@ boundary, so their pane has already been handed out) are counted in
 ``straddled_late`` and still delivered on the next poll; the consumer decides
 whether to revise them in (the event-time layer) or charge them to the
 shedding accountant (the plain pane loop).
+
+The queue is safe under **concurrent producers**: every state transition
+(offer, poll, the backpressure flips) happens under one internal lock, so
+any number of session threads may ``offer`` while a single consumer polls.
+The consumer side stays single-threaded by contract (the pane loop owns the
+poll frontier); concurrent *pollers* would race the frontier semantics, not
+the data structure.
 """
 
 from __future__ import annotations
+
+import threading
 
 import numpy as np
 
@@ -48,57 +57,64 @@ class IngressQueue:
         self._tail_time = -(1 << 62)    # max buffered timestamp
         self._polled_until = -(1 << 62)  # last poll_until boundary
         self._disordered = False
+        self._lock = threading.Lock()
 
     def __len__(self) -> int:
-        return self._n
+        with self._lock:
+            return self._n
 
     def offer(self, batch: EventBatch) -> int:
         """Enqueue as much of ``batch`` as admission allows; returns accepted
-        event count and updates the backpressure state."""
+        event count and updates the backpressure state.  Safe to call from
+        any number of producer threads concurrently."""
         n = len(batch)
         if n == 0:
             return 0
-        if not self.accepting:
-            self.rejected += n
-            return 0
-        space = self.capacity - self._n
-        take = min(n, space)
-        if take < n:
-            self.dropped += n - take
-        if take > 0:
-            b = batch if take == n else batch.select(np.arange(take))
-            # straddle guard: an offer reaching behind the buffered tail or
-            # the poll frontier breaks the global-order assumption — flag it
-            # instead of letting searchsorted split a non-sorted buffer
-            if int(b.time[0]) < self._tail_time:
-                self._disordered = True
-            self.straddled_late += int(np.sum(b.time < self._polled_until))
-            self._tail_time = max(self._tail_time, int(b.time[-1]))
-            self._batches.append(b)
-            self._n += take
-        if self._n >= self.high:
-            self.accepting = False
-        return take
+        with self._lock:
+            if not self.accepting:
+                self.rejected += n
+                return 0
+            space = self.capacity - self._n
+            take = min(n, space)
+            if take < n:
+                self.dropped += n - take
+            if take > 0:
+                b = batch if take == n else batch.select(np.arange(take))
+                # straddle guard: an offer reaching behind the buffered tail
+                # or the poll frontier breaks the global-order assumption —
+                # flag it instead of letting searchsorted split a non-sorted
+                # buffer
+                if int(b.time[0]) < self._tail_time:
+                    self._disordered = True
+                self.straddled_late += int(np.sum(b.time
+                                                  < self._polled_until))
+                self._tail_time = max(self._tail_time, int(b.time[-1]))
+                self._batches.append(b)
+                self._n += take
+            if self._n >= self.high:
+                self.accepting = False
+            return take
 
     def poll_until(self, t_exclusive: int) -> EventBatch:
         """Dequeue every buffered event with ``time < t_exclusive``."""
-        self._polled_until = max(self._polled_until, int(t_exclusive))
-        if self._n == 0:
-            return self._empty()
-        if self._disordered:
-            merged = EventBatch.merge(self._batches)
-            self._disordered = False
-        else:
-            merged = (self._batches[0] if len(self._batches) == 1
-                      else EventBatch.concat(self._batches))
-        hi = int(np.searchsorted(merged.time, t_exclusive, side="left"))
-        out = merged.select(np.arange(hi))
-        rest = merged.select(np.arange(hi, len(merged)))
-        self._batches = [rest] if len(rest) else []
-        self._n = len(rest)
-        if self._n <= self.low:
-            self.accepting = True
-        return out
+        with self._lock:
+            self._polled_until = max(self._polled_until, int(t_exclusive))
+            if self._n == 0:
+                return self._empty()
+            if self._disordered:
+                merged = EventBatch.merge(self._batches)
+                self._disordered = False
+            else:
+                merged = (self._batches[0] if len(self._batches) == 1
+                          else EventBatch.concat(self._batches))
+            hi = int(np.searchsorted(merged.time, t_exclusive, side="left"))
+            out = merged.select(np.arange(hi))
+            rest = merged.select(np.arange(hi, len(merged)))
+            self._batches = [rest] if len(rest) else []
+            self._n = len(rest)
+            if self._n <= self.low:
+                self.accepting = True
+            return out
 
     def _empty(self) -> EventBatch:
         return EventBatch(self.schema, np.array([], np.int32),

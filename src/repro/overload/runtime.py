@@ -38,6 +38,7 @@ from __future__ import annotations
 
 import math
 import time
+from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field
 
 import numpy as np
@@ -227,6 +228,12 @@ class OverloadRuntime:
         self._done_s = 0.0   # completion time on the simulated timeline
         # admitted panes awaiting fused execution (micro_batch > 1)
         self._backlog: list[tuple[int, int, int, int, EventBatch]] = []
+        # pipelined flush: one worker thread runs flushes FIFO while the
+        # caller polls/admits/sheds the next micro-batch (depth-1 pipeline)
+        self._flush_pool = (ThreadPoolExecutor(
+            max_workers=1, thread_name_prefix="flush")
+            if config.pipeline_flush else None)
+        self._flush_fut = None
 
     # -- producer side --
 
@@ -285,13 +292,39 @@ class OverloadRuntime:
             self._drain_backlog()
 
     def flush_panes(self) -> None:
-        """Execute any panes still deferred in the processing backlog."""
+        """Execute any panes still deferred in the processing backlog (and,
+        in pipelined mode, wait for the in-flight flush to land)."""
         self._drain_backlog()
+        self._await_flush()
+
+    def shutdown(self) -> None:
+        """Drain everything and stop the pipelined flush worker (no-op when
+        ``pipeline_flush`` is off)."""
+        self.flush_panes()
+        if self._flush_pool is not None:
+            self._flush_pool.shutdown(wait=True)
+            self._flush_pool = None
+
+    def _await_flush(self) -> None:
+        if self._flush_fut is not None:
+            fut, self._flush_fut = self._flush_fut, None
+            fut.result()
 
     def _drain_backlog(self) -> None:
         backlog, self._backlog = self._backlog, []
         if not backlog:
             return
+        if self._flush_pool is not None:
+            # depth-1 pipeline: wait for flush N-1, then hand flush N to the
+            # worker and return — the caller overlaps its host-side staging
+            # (poll, admission, shedding) with this flush's execution
+            self._await_flush()
+            self._flush_fut = self._flush_pool.submit(self._flush_one,
+                                                      backlog)
+            return
+        self._flush_one(backlog)
+
+    def _flush_one(self, backlog: list) -> None:
         c0 = self._clock()
         if len(backlog) == 1:
             t0, _n, _keep, _late, kept = backlog[0]

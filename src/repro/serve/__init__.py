@@ -1,4 +1,17 @@
-"""Batched serving engine: request queue, gang-scheduled batched prefill +
-masked decode with per-request lengths and EOS early exit."""
+"""Serving layer.
+
+Two independent subsystems live here:
+
+* the Hamlet **session front-end** — concurrent client sessions trickling
+  event streams into one shared engine through a continuous-batching
+  scheduler (:class:`ServingFrontend`, :class:`SessionHandle`,
+  :class:`ContinuousBatcher`);
+* the batched **token serving engine** for the learned components
+  (:class:`ServeEngine`, :class:`Request`): request queue, gang-scheduled
+  batched prefill + masked decode with per-request lengths.
+"""
 
 from .engine import ServeEngine, Request  # noqa: F401
+from .frontend import ServingFrontend  # noqa: F401
+from .scheduler import ContinuousBatcher, SessionAdmission  # noqa: F401
+from .session import Delivery, SessionHandle  # noqa: F401

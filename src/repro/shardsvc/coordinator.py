@@ -28,9 +28,24 @@ Nothing is lost — a laggard's own sealing, retract/amend accounting and
 results are untouched; it is only excluded from the fleet-final prefix
 until it rejoins (hysteresis: a laggard rejoins once it is back within
 ``max_lag_epochs``).
+
+Two call protocols feed the aligner:
+
+* **serial** — the driver calls ``update`` per shard then ``align`` once,
+  all on one thread (the epoch-synchronous service loop);
+* **rendezvous** — under the thread-pool drive path every shard worker
+  thread calls ``arrive(snapshot)`` at the end of its drive cycle.  The
+  call blocks until all ``n_shards`` workers of the cycle have arrived;
+  the last arrival computes the alignment *once* (so the published epoch
+  is a function of a consistent set of frontiers, exactly as in the serial
+  protocol) and releases the others.  This is a real concurrent barrier:
+  the aligned epoch a cycle publishes is identical to what the serial
+  protocol would publish for the same frontiers.
 """
 
 from __future__ import annotations
+
+import threading
 
 from ..eventtime.frontier import FrontierSnapshot
 
@@ -50,6 +65,10 @@ class WatermarkAligner:
         self._snaps: dict[int, FrontierSnapshot] = {}
         self._aligned_epoch = 0        # monotone published frontier
         self.rounds = 0
+        # rendezvous state (thread-pool drive path)
+        self._cond = threading.Condition()
+        self._arrived = 0
+        self._generation = 0
 
     # ------------------------------------------------------------- updates
 
@@ -67,6 +86,31 @@ class WatermarkAligner:
         if live:
             self._aligned_epoch = max(self._aligned_epoch, min(live))
         return self._aligned_epoch
+
+    def arrive(self, snap: FrontierSnapshot,
+               timeout: float | None = 60.0) -> int:
+        """Concurrent rendezvous: record ``snap`` and block until all
+        ``n_shards`` workers of this drive cycle have arrived.  The last
+        arrival runs :meth:`align` exactly once over the complete frontier
+        set and wakes the rest; every caller returns the cycle's aligned
+        epoch.  ``timeout`` bounds the wait so a crashed worker surfaces as
+        an error instead of a hang."""
+        with self._cond:
+            self.update(snap)
+            self._arrived += 1
+            if self._arrived >= self.n_shards:
+                self._arrived = 0
+                self._generation += 1
+                epoch = self.align()
+                self._cond.notify_all()
+                return epoch
+            gen = self._generation
+            while gen == self._generation:
+                if not self._cond.wait(timeout):
+                    raise RuntimeError(
+                        f"alignment rendezvous timed out: "
+                        f"{self._arrived}/{self.n_shards} arrived")
+            return self._aligned_epoch
 
     # ------------------------------------------------------------- queries
 

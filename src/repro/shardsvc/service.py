@@ -54,6 +54,7 @@ ratios then depend on per-shard latency, which depends on placement.
 from __future__ import annotations
 
 import time
+from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field, replace
 
 import numpy as np
@@ -98,6 +99,15 @@ class ShardServiceConfig:
     obs                give every shard a registry-only Observability and
                        expose the merged + per-shard tracks in ``collect()``
     ring_replicas      consistent-hash ring points per shard
+    parallel           drive shard workers on a thread pool: each drive
+                       cycle dispatches (offer, heartbeat, drive) per worker
+                       concurrently and the workers meet at the aligner's
+                       rendezvous barrier.  Results are bitwise identical to
+                       the serial drive (workers share no mutable state; the
+                       aligner sees the same frontier set per cycle) and the
+                       cycle cost becomes measured wall clock — ``max`` over
+                       workers where the hardware has cores to overlap them,
+                       instead of their sum
     """
 
     n_shards: int = 2
@@ -111,6 +121,7 @@ class ShardServiceConfig:
     overload: OverloadConfig = field(default_factory=OverloadConfig)
     obs: bool = False
     ring_replicas: int = 64
+    parallel: bool = False
 
     def __post_init__(self) -> None:
         if self.n_shards < 1:
@@ -311,6 +322,11 @@ class ShardedHamletService:
         self._closed = False
         self.chunks = 0
         self.router_busy_s = 0.0
+        self.drive_cycles = 0
+        self.drive_wall_s = 0.0     # measured wall clock across drive cycles
+        self._pool = (ThreadPoolExecutor(
+            max_workers=cfg.n_shards, thread_name_prefix="shard")
+            if cfg.parallel and cfg.n_shards > 1 else None)
         self._clock = clock
 
     def _shard_overload_cfg(self) -> OverloadConfig:
@@ -321,6 +337,15 @@ class ShardedHamletService:
         return replace(cfg, shed_policy="none", fixed_shed=None)
 
     # -------------------------------------------------------------- write
+
+    def promise(self, t: int) -> None:
+        """External order promise: no future arrival has ``time <= t``.
+
+        The serving scheduler seals panes against the session watermark
+        before forwarding, which is a stronger guarantee than the router's
+        own max-seen heuristic — honouring it lets shards seal panes the
+        routed chunks alone would leave open."""
+        self._max_seen = max(self._max_seen, int(t))
 
     def ingest(self, chunk: EventBatch) -> None:
         """Route one arrival chunk and run a drive cycle."""
@@ -338,12 +363,16 @@ class ShardedHamletService:
                 sub, self.workers[s].rt.controller.state())
                 for s, sub in enumerate(subs)]
         self.router_busy_s += self._clock() - c0
+        hb = self._max_seen - self.cfg.skew if self.cfg.eventtime else None
+        if self._pool is not None:
+            # offers ride the worker tasks: ingest + drive overlap per shard
+            self._drive(subs, hb)
+            return
         for w, sub in zip(self.workers, subs):
             w.offer(sub, self._max_seen)
-        if self.cfg.eventtime:
-            wm = self._max_seen - self.cfg.skew - 1
+        if hb is not None:
             for w in self.workers:
-                w.heartbeat(wm + 1)
+                w.heartbeat(hb)
         self._drive()
 
     def _route(self, chunk: EventBatch) -> list[EventBatch]:
@@ -361,16 +390,52 @@ class ShardedHamletService:
         return [chunk.select(np.nonzero(shard_of == s)[0])
                 for s in range(self.cfg.n_shards)]
 
-    def _drive(self) -> None:
+    def _drive(self, subs: list[EventBatch] | None = None,
+               hb: int | None = None) -> None:
+        """One drive cycle.  Serial mode: drive every worker in turn, then
+        feed the aligner.  Parallel mode (``cfg.parallel``): dispatch one
+        task per worker onto the thread pool — (offer, heartbeat, drive) —
+        and let the workers meet at the aligner's concurrent rendezvous;
+        the cycle's wall clock is *measured*, not modeled.  Rebalance
+        commits stay on the caller thread, strictly between cycles."""
         self._maybe_commit_moves()
+        self.drive_cycles += 1
+        c0 = self._clock()
+        if self._pool is not None:
+            safe = self._max_seen
+            futs = [self._pool.submit(
+                self._worker_cycle, w,
+                subs[s] if subs is not None else None, safe, hb)
+                for s, w in enumerate(self.workers)]
+            for f in futs:
+                f.result()
+            self.drive_wall_s += self._clock() - c0
+            self._maybe_commit_moves()
+            return
         for w in self.workers:
             w.drive()
+        self.drive_wall_s += self._clock() - c0
         self._maybe_commit_moves()
         c0 = self._clock()
         for w in self.workers:
             self.aligner.update(w.frontier())
         self.aligner.align()
         self.router_busy_s += self._clock() - c0
+
+    def _worker_cycle(self, w: ShardWorker, sub: EventBatch | None,
+                      safe_end: int, hb: int | None) -> None:
+        """Per-worker task of one parallel drive cycle.  The ``finally``
+        guarantees the rendezvous completes even when a worker errors —
+        the exception still surfaces through the future, but no sibling
+        deadlocks at the barrier."""
+        try:
+            if sub is not None:
+                w.offer(sub, safe_end)
+            if hb is not None:
+                w.heartbeat(hb)
+            w.drive()
+        finally:
+            self.aligner.arrive(w.frontier())
 
     def close(self) -> None:
         """Seal the stream: flush reorder buffers, drive every shard to the
@@ -392,6 +457,11 @@ class ShardedHamletService:
                     "close() stalled; a rebalance barrier cannot be "
                     f"reached (moves={self._moves})")
         self._drive()
+        for w in self.workers:
+            w.rt.shutdown()       # joins per-shard pipelined flush workers
+        if self._pool is not None:
+            self._pool.shutdown(wait=True)
+            self._pool = None
 
     # ---------------------------------------------------------- rebalance
 
@@ -531,6 +601,9 @@ class ShardedHamletService:
                 "alignment": self.aligner.status(),
                 "busy_s": self.router_busy_s,
                 "chunks": self.chunks,
+                "parallel": self.cfg.parallel,
+                "drive_cycles": self.drive_cycles,
+                "drive_wall_s": round(self.drive_wall_s, 4),
             },
             "shards": [w.summary() for w in self.workers],
             "stats": {k: v for k, v in vars(self.stats()).items()},

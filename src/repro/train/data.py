@@ -10,6 +10,7 @@ from __future__ import annotations
 
 import queue
 import threading
+import time as _time
 
 import numpy as np
 
@@ -49,6 +50,9 @@ class PrefetchIterator:
         self._next_produce = start_step
         self._stop = False
         self.stall_fallbacks = 0
+        # daemon=True is a last-resort backstop for callers that drop the
+        # iterator without close(); the supported lifecycle is close()
+        # (or a with-block), which joins the thread deterministically
         self._t = threading.Thread(target=self._producer, daemon=True)
         self._t.start()
 
@@ -56,7 +60,7 @@ class PrefetchIterator:
         while not self._stop:
             b = self.source.batch_for_step(self._next_produce)
             try:
-                self._q.put((self._next_produce, b), timeout=1.0)
+                self._q.put((self._next_produce, b), timeout=0.1)
                 self._next_produce += 1
             except queue.Full:
                 continue
@@ -78,5 +82,28 @@ class PrefetchIterator:
         self.step += 1
         return b
 
-    def close(self):
+    def close(self, timeout_s: float = 5.0):
+        """Stop and join the producer thread (idempotent).
+
+        The producer may be blocked in a bounded ``put``; draining the
+        queue while joining guarantees it observes ``_stop`` within one
+        put timeout instead of leaking past interpreter teardown.
+        """
         self._stop = True
+        t = self._t
+        if t is None or not t.is_alive():
+            return
+        deadline = _time.monotonic() + timeout_s
+        while t.is_alive() and _time.monotonic() < deadline:
+            try:                                   # unblock a full put
+                self._q.get_nowait()
+            except queue.Empty:
+                pass
+            t.join(timeout=0.05)
+        t.join(timeout=max(0.0, deadline - _time.monotonic()))
+
+    def __enter__(self) -> "PrefetchIterator":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

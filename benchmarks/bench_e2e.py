@@ -55,6 +55,7 @@ BENCH_PATH = os.path.join(os.path.dirname(__file__), os.pardir,
 SERVING_PATH = os.path.join(os.path.dirname(__file__), os.pardir,
                             "BENCH_serving.json")
 SERVING_PARITY_FLOOR = 0.9     # async warm throughput vs sync epoch run
+TRANSPORT_OVERHEAD_CEIL = 0.20  # p50 added over the wire at K=1
 
 WORKLOAD_SHAPE = {
     "ridesharing": dict(kleene_type="Travel",
@@ -519,7 +520,8 @@ def check(rtol: float = 0.25, obs_tol: float = 0.03) -> int:
     # sync epoch run on the same merged stream, with bitwise-equal results
     # (the continuous-batching flush path is a wrapper, not a second engine)
     with open(SERVING_PATH) as f:
-        serving = json.load(f)["throughput_parity"]
+        serving_all = json.load(f)
+    serving = serving_all["throughput_parity"]
     ratio = serving["async_vs_sync"]
     print(f"perf-smoke [serving]: async warm throughput {ratio:.3f}x sync "
           f"(floor {SERVING_PARITY_FLOOR:.2f}x), "
@@ -532,6 +534,27 @@ def check(rtol: float = 0.25, obs_tol: float = 0.03) -> int:
         print("FAIL: committed async serving throughput is more than 10% "
               "below the sync epoch run")
         return 1
+    # transport gate: the wire must be a transparent wrapper too — bitwise
+    # parity with the in-process session path and a bounded p50 latency
+    # tax at the latency-tuned point (K=1)
+    tr = serving_all.get("transport")
+    if tr is None:
+        print("FAIL: committed BENCH_serving.json has no transport section")
+        return 1
+    for tuning, t in tr.items():
+        print(f"perf-smoke [transport/{tuning}]: added p50 "
+              f"{t['p50_added_ms']} ms ({t['p50_overhead_frac']:+.1%}), "
+              f"bitwise_equal={t['bitwise_equal']}")
+        if not t["bitwise_equal"]:
+            print("FAIL: committed transport results diverge from the "
+                  "in-process session path")
+            return 1
+        if t["micro_batch"] == 1 and t["p50_overhead_frac"] >= \
+                TRANSPORT_OVERHEAD_CEIL:
+            print("FAIL: committed transport adds >= "
+                  f"{TRANSPORT_OVERHEAD_CEIL:.0%} p50 delivery latency "
+                  "over in-process at K=1")
+            return 1
     print("OK")
     return 0
 

@@ -39,6 +39,20 @@ histograms in the summary:
     PYTHONPATH=src python -m repro.launch.hamlet_service --serve \
         --sessions 16 --tenants 4 --minutes 2
 
+``--listen HOST:PORT`` puts the same front-end on a real socket
+(``repro.serve.transport``: zero-copy chunk frames, credit-based
+backpressure) and waits for ``--sessions`` clients; ``--connect
+HOST:PORT --session-index i`` runs one paced client session from another
+process, so the paced-session study crosses real process boundaries:
+
+    PYTHONPATH=src python -m repro.launch.hamlet_service \
+        --listen 127.0.0.1:7431 --sessions 2 --tenants 2 &
+    for i in 0 1; do
+        PYTHONPATH=src python -m repro.launch.hamlet_service \
+            --connect 127.0.0.1:7431 --sessions 2 --session-index $i \
+            --tenants 2 &
+    done
+
 ``--trace out.jsonl`` attaches the observability layer (``repro.obs``):
 pane-lifecycle spans are exported as Chrome-trace JSONL (convert with
 ``python -m repro.obs.trace out.jsonl out.json`` and load in Perfetto),
@@ -237,21 +251,14 @@ def run_sharded(args) -> None:
               f"subset_guarantee={rep.subset_guarantee}")
 
 
-def run_serving(args) -> None:
-    """Asynchronous serving demo: ``--sessions`` concurrent trickle clients
-    on real threads, merged by the continuous-batching scheduler into the
-    shared K-pane flush path, results routed back per session."""
-    import threading
-
+def _serving_stream(args):
+    """The tenant stream every serving mode shares — deterministic, so a
+    ``--connect`` client in another process rebuilds the identical split."""
     import numpy as np
 
     from ..core.events import EventBatch
-    from ..overload import OverloadConfig
-    from ..serve import ServingFrontend
     from ..streams.generator import TenantStreamConfig, tenant_stream
 
-    wl = ridesharing_workload(args.queries)
-    t_end = args.minutes * 60
     stream = tenant_stream(TenantStreamConfig(
         schema=RIDESHARING_SCHEMA, n_tenants=args.tenants,
         groups_per_tenant=args.groups_per_tenant,
@@ -265,6 +272,37 @@ def run_serving(args) -> None:
                             time=stream.time, attrs=stream.attrs,
                             group=stream.group,
                             seq=np.arange(len(stream), dtype=np.int64))
+    return stream
+
+
+def _session_part(stream, i, n_sessions, tenants, groups_per_tenant):
+    """Session ``i``'s (tenant, stream slice): sessions round-robin over
+    tenants, each tenant's events stride-split across its sessions."""
+    import numpy as np
+
+    t = i % tenants
+    lo, hi = t * groups_per_tenant, (t + 1) * groups_per_tenant
+    idx = np.flatnonzero((stream.group >= lo) & (stream.group < hi))
+    stride = max(1, n_sessions // tenants)
+    return t, stream.select(idx[i // tenants::stride])
+
+
+def _parse_hostport(s: str) -> tuple[str, int]:
+    host, _, port = s.rpartition(":")
+    return host or "127.0.0.1", int(port)
+
+
+def run_serving(args) -> None:
+    """Asynchronous serving demo: ``--sessions`` concurrent trickle clients
+    on real threads, merged by the continuous-batching scheduler into the
+    shared K-pane flush path, results routed back per session."""
+    import threading
+
+    from ..overload import OverloadConfig
+    from ..serve import ServingFrontend
+
+    wl = ridesharing_workload(args.queries)
+    stream = _serving_stream(args)
     obs = _make_obs(args)
     fe = ServingFrontend(
         wl, backend="overload",
@@ -273,11 +311,9 @@ def run_serving(args) -> None:
     n_sessions = max(1, args.sessions)
     parts, handles = [], []
     for i in range(n_sessions):
-        t = i % args.tenants
-        lo, hi = t * args.groups_per_tenant, (t + 1) * args.groups_per_tenant
-        idx = np.flatnonzero((stream.group >= lo) & (stream.group < hi))
-        stride = max(1, n_sessions // args.tenants)
-        parts.append(stream.select(idx[i // args.tenants::stride]))
+        t, part = _session_part(stream, i, n_sessions, args.tenants,
+                                args.groups_per_tenant)
+        parts.append(part)
         handles.append(fe.open_session(tenant=t))
     fe.start(interval_s=0.001)
 
@@ -318,6 +354,90 @@ def run_serving(args) -> None:
               f"p99={s.get('p99_ms', 0.0):.1f} ms")
 
 
+def run_listen(args) -> None:
+    """Wire-transport server: the serving front-end behind a real socket
+    (``repro.serve.transport``), zero-copy chunk ingest + credit-based
+    backpressure.  Waits for ``--sessions`` clients to connect and close,
+    then drains and reports:
+
+        PYTHONPATH=src python -m repro.launch.hamlet_service \\
+            --listen 127.0.0.1:7431 --sessions 8 --tenants 4
+    """
+    from ..overload import OverloadConfig
+    from ..serve import ServingFrontend, ServingServer
+
+    host, port = _parse_hostport(args.listen)
+    wl = ridesharing_workload(args.queries)
+    obs = _make_obs(args)
+    fe = ServingFrontend(
+        wl, backend="overload",
+        overload=OverloadConfig(shed_policy=args.shed_policy, micro_batch=4),
+        groups_per_tenant=args.groups_per_tenant, obs=obs)
+    srv = ServingServer(fe, host, port, credit_window=args.credit_window)
+    host, port = srv.start()
+    n = max(1, args.sessions)
+    print(f"listening on {host}:{port}; waiting for {n} session(s) "
+          f"(connect with --connect {host}:{port} --session-index i)")
+    t0 = time.time()
+    try:
+        while True:
+            sess = fe.summary()["sessions"]
+            if len(sess) >= n and all(s["closed"] for s in sess.values()):
+                break
+            time.sleep(0.05)
+        res = srv.drain()
+    finally:
+        srv.stop()
+    dt = time.time() - t0
+    summ, wire = fe.summary(), srv.summary()
+    lat = summ["latency_ms"]
+    print(f"serve: sessions={len(summ['sessions'])} "
+          f"events={summ['submitted']} windows={len(res)} wall={dt:.3f}s")
+    print(f"wire: frames_in={wire['frames_in']} "
+          f"bytes_in={wire['bytes_in']} bytes_out={wire['bytes_out']} "
+          f"disconnects={wire['disconnects']}")
+    cr = wire["credit"]
+    print(f"credit: window={cr['window']} granted={cr['granted']} "
+          f"withheld={cr['withheld']} "
+          f"staging_hwm={summ['staging']['hwm']}")
+    print(f"latency p50={lat['p50']:.1f} ms p99={lat['p99']:.1f} ms "
+          f"deliveries={summ['deliveries']}")
+
+
+def run_connect(args) -> None:
+    """Wire-transport client: one session over a real socket, pacing its
+    deterministic split of the tenant stream pane-by-pane:
+
+        PYTHONPATH=src python -m repro.launch.hamlet_service \\
+            --connect 127.0.0.1:7431 --sessions 8 --session-index 3 \\
+            --tenants 4
+    """
+    from ..serve import ServingClient
+
+    host, port = _parse_hostport(args.connect)
+    stream = _serving_stream(args)
+    n = max(1, args.sessions)
+    i = args.session_index % n
+    tenant, part = _session_part(stream, i, n, args.tenants,
+                                 args.groups_per_tenant)
+    c = ServingClient(host, port, tenant=tenant)
+    t0 = time.time()
+    hi = int(part.time.max()) + 1 if len(part) else 0
+    pane = c.pane or 10
+    for c0 in range(0, hi, pane):
+        c.submit(part.time_slice(c0, c0 + pane))
+        c.advance_to(min(c0 + pane, hi))
+        time.sleep(args.pace_s)
+    c.close()
+    got = list(c.deliveries())
+    dt = time.time() - t0
+    c.shutdown()
+    res = c.results or {}
+    print(f"session {c.sid}: tenant={tenant} submitted={len(part)} "
+          f"deliveries={len(got)} windows={len(res)} wall={dt:.3f}s "
+          f"blocked={c.blocked_s * 1e3:.1f} ms")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--minutes", type=int, default=2)
@@ -332,7 +452,20 @@ def main():
                     help="async serving front-end: concurrent trickle "
                          "sessions merged into shared micro-batched flushes")
     ap.add_argument("--sessions", type=int, default=8,
-                    help="concurrent client sessions for --serve")
+                    help="concurrent client sessions for --serve; expected "
+                         "session count for --listen/--connect")
+    ap.add_argument("--listen", default=None, metavar="HOST:PORT",
+                    help="serve the front-end on a real socket and wait "
+                         "for --sessions clients")
+    ap.add_argument("--connect", default=None, metavar="HOST:PORT",
+                    help="run one socket client session against --listen")
+    ap.add_argument("--session-index", type=int, default=0,
+                    help="which deterministic session split this "
+                         "--connect client drives")
+    ap.add_argument("--credit-window", type=int, default=2048,
+                    help="per-session event credit window for --listen")
+    ap.add_argument("--pace-s", type=float, default=0.001,
+                    help="--connect inter-chunk pacing sleep")
     ap.add_argument("--shards", type=int, default=0,
                     help="run the sharded multi-tenant service with N shards")
     ap.add_argument("--tenants", type=int, default=4,
@@ -365,6 +498,12 @@ def main():
                     help="per-pane track sampling: trace every Nth pane")
     args = ap.parse_args()
 
+    if args.listen:
+        run_listen(args)
+        return
+    if args.connect:
+        run_connect(args)
+        return
     if args.serve:
         run_serving(args)
         return

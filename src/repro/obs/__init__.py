@@ -14,13 +14,13 @@ default — zero cost when absent) through the pane pipeline:
 from .audit import SharingAuditLog, SharingDecision
 from .facade import PHASES, Observability
 from .metrics import (DEPTH_BUCKETS, LAG_BUCKETS, LATENCY_MS_BUCKETS,
-                      OCCUPANCY_BUCKETS, Counter, Gauge, Histogram,
-                      MetricsRegistry)
+                      OCCUPANCY_BUCKETS, SERVE_LATENCY_MS_BUCKETS, Counter,
+                      Gauge, Histogram, MetricsRegistry)
 from .trace import NULL_SPAN, Tracer, jsonl_to_chrome
 
 __all__ = [
     "Observability", "PHASES", "Tracer", "NULL_SPAN", "jsonl_to_chrome",
     "MetricsRegistry", "Counter", "Gauge", "Histogram",
-    "LATENCY_MS_BUCKETS", "OCCUPANCY_BUCKETS", "LAG_BUCKETS",
-    "DEPTH_BUCKETS", "SharingAuditLog", "SharingDecision",
+    "LATENCY_MS_BUCKETS", "SERVE_LATENCY_MS_BUCKETS", "OCCUPANCY_BUCKETS",
+    "LAG_BUCKETS", "DEPTH_BUCKETS", "SharingAuditLog", "SharingDecision",
 ]

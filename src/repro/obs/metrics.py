@@ -9,6 +9,9 @@ edges are stable across merges by construction.
 The module ships the canonical edge layouts the engine uses:
 
 * ``LATENCY_MS_BUCKETS`` — phase / pane latency in milliseconds.
+* ``SERVE_LATENCY_MS_BUCKETS`` — serving delivery / blocked-time latency
+  (finer sub-100ms edges so paced-session quantiles do not snap to the
+  coarse engine-phase edges).
 * ``OCCUPANCY_BUCKETS``  — bucket occupancy and launches-per-flush.
 * ``LAG_BUCKETS``        — watermark lag in stream ticks.
 * ``DEPTH_BUCKETS``      — revision-storm depth (panes per storm).
@@ -22,17 +25,41 @@ from math import inf, isfinite
 LATENCY_MS_BUCKETS = (0.05, 0.1, 0.25, 0.5, 1.0, 2.5, 5.0, 10.0, 25.0,
                       50.0, 100.0, 250.0, 500.0, 1000.0)
 
+# Serving delivery latency needs finer resolution than the engine-phase
+# layout: a paced session study operates in the 10–500 ms regime, and with
+# the coarse edges above every quantile snaps to 25.0/50.0/500.0 ms exactly
+# (the committed BENCH_serving.json artifact showed p50 == 25.0 because the
+# histogram had no edge between 25 and 50).  These edges keep sub-100 ms
+# resolution at ~±15% per bucket.  Every serving-latency series must use
+# this layout — histogram merges raise on a layout mismatch, so mixing the
+# coarse layout in is caught loudly instead of silently resampled.
+SERVE_LATENCY_MS_BUCKETS = (
+    0.05, 0.1, 0.25, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 5.0, 6.5, 8.0, 10.0,
+    12.5, 15.0, 20.0, 25.0, 30.0, 35.0, 40.0, 50.0, 60.0, 70.0, 85.0,
+    100.0, 125.0, 150.0, 200.0, 250.0, 300.0, 400.0, 500.0, 700.0,
+    1000.0, 1500.0, 2000.0)
+
 
 def serve_latency_series(kind: str, key) -> str:
     """Canonical name of a keyed serving-latency histogram series.
 
     ``kind`` is ``"session"`` or ``"tenant"``; the serving front-end keeps
-    one ``LATENCY_MS_BUCKETS`` histogram per key under this name (delivery
-    latency: pane sealed by the scheduler watermark -> record in inbox).
+    one ``SERVE_LATENCY_MS_BUCKETS`` histogram per key under this name
+    (delivery latency: pane sealed by the scheduler watermark -> record in
+    inbox).
     """
     if kind not in ("session", "tenant"):
         raise ValueError(f"unknown serving latency kind {kind!r}")
     return f"serve.latency_ms.{kind}.{key}"
+
+
+def serve_blocked_series(sid) -> str:
+    """Canonical name of the per-session credit-blocked-time histogram.
+
+    The transport's credit gate observes, per session, how long the
+    session sat at zero credits before the next grant (the producer-side
+    backpressure stall); layout is ``SERVE_LATENCY_MS_BUCKETS``."""
+    return f"serve.blocked_ms.session.{sid}"
 
 
 OCCUPANCY_BUCKETS = (1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0, 128.0, 256.0,

@@ -63,6 +63,14 @@ class IngressQueue:
         with self._lock:
             return self._n
 
+    def headroom(self) -> int:
+        """Events admissible before the high watermark flips ``accepting``
+        off — the budget a credit-granting transport may hand to producers
+        without ever tripping queue-side backpressure (0 when already
+        at/above the high watermark)."""
+        with self._lock:
+            return max(0, self.high - self._n)
+
     def offer(self, batch: EventBatch) -> int:
         """Enqueue as much of ``batch`` as admission allows; returns accepted
         event count and updates the backpressure state.  Safe to call from

@@ -9,9 +9,16 @@ Two independent subsystems live here:
 * the batched **token serving engine** for the learned components
   (:class:`ServeEngine`, :class:`Request`): request queue, gang-scheduled
   batched prefill + masked decode with per-request lengths.
+
+The front-end additionally speaks a real wire protocol
+(:mod:`repro.serve.transport`): :class:`ServingServer` puts it on an
+asyncio socket with zero-copy chunk ingest and credit-based per-session
+flow control; :class:`ServingClient` is the synchronous producer/consumer
+counterpart.
 """
 
 from .engine import ServeEngine, Request  # noqa: F401
 from .frontend import ServingFrontend  # noqa: F401
 from .scheduler import ContinuousBatcher, SessionAdmission  # noqa: F401
 from .session import Delivery, SessionHandle  # noqa: F401
+from .transport import CreditGate, ServingClient, ServingServer  # noqa: F401

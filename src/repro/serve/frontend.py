@@ -59,7 +59,8 @@ import numpy as np
 
 from ..core.engine import vals_equal
 from ..core.events import EventBatch
-from ..obs.metrics import LATENCY_MS_BUCKETS, Histogram, serve_latency_series
+from ..obs.metrics import (SERVE_LATENCY_MS_BUCKETS, Histogram,
+                           serve_latency_series)
 from .scheduler import _SEQ_SPAN, ContinuousBatcher, SessionAdmission
 from .session import Delivery, SessionHandle, _SessionState
 
@@ -146,7 +147,7 @@ class _ShardedBackend:
         return None
 
     def pending_flush(self):
-        return any(len(w.rt._backlog) for w in self.svc.workers)
+        return any(w.pending_flush() for w in self.svc.workers)
 
     def results(self):
         return self.svc.results()
@@ -289,13 +290,15 @@ class ServingFrontend:
         self._dirty = False                  # panes stepped since last diff
 
         # observability (histograms live here; mirrored into obs when set)
-        self._lat_all = Histogram("serve.latency_ms.all", LATENCY_MS_BUCKETS)
+        self._lat_all = Histogram("serve.latency_ms.all",
+                                  SERVE_LATENCY_MS_BUCKETS)
         self._lat_session: dict[int, Histogram] = {}
         self._lat_tenant: dict[int, Histogram] = {}
         self.deliveries = 0
         self.submitted = 0
         self.pump_cycles = 0
         self.pump_wall_s = 0.0
+        self.staging_hwm = 0          # high-water of staged-not-yet-sealed
 
         self._pump_thread: threading.Thread | None = None
         self._stop = threading.Event()
@@ -355,8 +358,13 @@ class ServingFrontend:
             self._batcher.stage(sid, batch)
             st.submitted += n
             self.submitted += n
+            staged = len(self._batcher)
+            if staged > self.staging_hwm:
+                self.staging_hwm = staged
         if self.obs is not None:
             self.obs.count("serve.submitted", n)
+            self.obs.set_gauge("serve.staging_events", staged)
+            self.obs.set_gauge("serve.staging_hwm", self.staging_hwm)
             if shed:
                 self.obs.count("serve.session_shed", shed)
         return n
@@ -377,6 +385,19 @@ class ServingFrontend:
     def sessions(self) -> list[SessionHandle]:
         with self._lock:
             return list(self._sessions.values())
+
+    def staged_events(self) -> int:
+        """Events staged but not yet sealed (the transport's credit gate
+        reads this as the serving-side occupancy signal)."""
+        with self._lock:
+            return len(self._batcher)
+
+    def sealed_to(self) -> int:
+        """Boundary below which every staged event has been sealed (credit
+        accounting: a producer's in-flight batch is 'consumed' once the
+        seal boundary passes its max timestamp)."""
+        with self._lock:
+            return self._batcher.sealed_to
 
     # ---------------------------------------------------------------- pump
 
@@ -527,19 +548,19 @@ class ServingFrontend:
             if t_h is None:
                 t_h = self._lat_tenant[tenant] = Histogram(
                     serve_latency_series("tenant", tenant),
-                    LATENCY_MS_BUCKETS)
+                    SERVE_LATENCY_MS_BUCKETS)
             t_h.observe(d.latency_ms)
             for h in targets:
                 s_h = self._lat_session.get(h.id)
                 if s_h is None:
                     s_h = self._lat_session[h.id] = Histogram(
                         serve_latency_series("session", h.id),
-                        LATENCY_MS_BUCKETS)
+                        SERVE_LATENCY_MS_BUCKETS)
                 s_h.observe(d.latency_ms)
             if self.obs is not None:
                 self.obs.count("serve.deliveries", len(targets))
                 self.obs.observe("serve.latency_ms", d.latency_ms,
-                                 edges=LATENCY_MS_BUCKETS)
+                                 edges=SERVE_LATENCY_MS_BUCKETS)
 
     # ------------------------------------------------------------- results
 
@@ -574,6 +595,8 @@ class ServingFrontend:
             "deliveries": self.deliveries,
             "sealed_events": self._batcher.sealed_events,
             "sealed_to": self._batcher.sealed_to,
+            "staging": {"staged": len(self._batcher),
+                        "hwm": self.staging_hwm},
             "session_shed": (self._admission.shed_total
                              if self._admission else 0),
             "pump_cycles": self.pump_cycles,

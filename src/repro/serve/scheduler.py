@@ -101,8 +101,13 @@ class ContinuousBatcher:
         """Event time below which every open session's promise holds."""
         if self._frontiers:
             return min(self._frontiers.values()) - self.skew
-        # no open sessions: everything staged is final
-        return self._max_staged + 1
+        # No open sessions: HOLD, don't finalize.  close() only ends the
+        # submit side — a session opening a moment later (a wire client
+        # connecting after an earlier client already closed) must not find
+        # its whole stream pre-sealed into straggler territory.  The
+        # explicit drain() is the only "no more sessions ever" signal, and
+        # it seals by its own computed boundary, not through here.
+        return self.sealed_to
 
     def seal(self, upto: int | None = None) -> tuple[EventBatch | None, int]:
         """Merge and hand out every staged event below the pane-aligned

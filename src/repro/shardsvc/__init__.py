@@ -12,7 +12,10 @@ three things group-independence does not give for free:
 * :mod:`coordinator` — aligned-epoch watermark alignment: fleet-final
   progress that excludes laggards instead of waiting on them;
 * :mod:`service` — the composed ``ShardedHamletService`` (router, shard
-  workers, rebalance barriers, merged read side).
+  workers, rebalance barriers, merged read side);
+* :mod:`procdrive` — ``parallel="process"``: each shard worker pinned in
+  a long-lived spawn process (chunks via shared memory, rendezvous over
+  the command pipe) so shard drive cycles overlap past the GIL.
 
 Differential contract (tested): with ``none``/``global_fixed`` admission
 the N-shard service's results are a permutation-stable bitwise match of
@@ -22,5 +25,6 @@ the 1-shard service on the same stream.
 from .admission import ADMISSION_MODES, GlobalAdmissionController  # noqa: F401
 from .coordinator import WatermarkAligner  # noqa: F401
 from .placement import PlacementTable, ring_hash  # noqa: F401
+from .procdrive import ProcShardWorker  # noqa: F401
 from .service import (ShardedHamletService, ShardServiceConfig,  # noqa: F401
                       ShardWorker)

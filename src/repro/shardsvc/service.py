@@ -99,15 +99,27 @@ class ShardServiceConfig:
     obs                give every shard a registry-only Observability and
                        expose the merged + per-shard tracks in ``collect()``
     ring_replicas      consistent-hash ring points per shard
-    parallel           drive shard workers on a thread pool: each drive
-                       cycle dispatches (offer, heartbeat, drive) per worker
-                       concurrently and the workers meet at the aligner's
-                       rendezvous barrier.  Results are bitwise identical to
-                       the serial drive (workers share no mutable state; the
-                       aligner sees the same frontier set per cycle) and the
-                       cycle cost becomes measured wall clock — ``max`` over
-                       workers where the hardware has cores to overlap them,
-                       instead of their sum
+    parallel           how drive cycles overlap across shard workers:
+
+                       * ``False`` — serial: drive every worker in turn
+                         on the caller thread (the differential baseline);
+                       * ``True`` / ``"thread"`` — thread pool: each cycle
+                         dispatches (offer, heartbeat, drive) per worker
+                         concurrently and the workers meet at the
+                         aligner's rendezvous barrier.  Measured wall
+                         clock, but numpy pane work still serializes on
+                         the GIL;
+                       * ``"process"`` — long-lived worker processes
+                         (:mod:`repro.shardsvc.procdrive`): engine state
+                         pinned per process, chunks shipped via shared
+                         memory, rendezvous over the command pipe — the
+                         mode that can actually exceed 1.0x measured
+                         speedup on multi-core hosts.  Rebalance is not
+                         supported in this mode.
+
+                       All modes are bitwise identical to the serial drive
+                       (workers share no mutable state; the aligner sees
+                       the same frontier sequence per cycle).
     """
 
     n_shards: int = 2
@@ -121,7 +133,7 @@ class ShardServiceConfig:
     overload: OverloadConfig = field(default_factory=OverloadConfig)
     obs: bool = False
     ring_replicas: int = 64
-    parallel: bool = False
+    parallel: bool | str = False
 
     def __post_init__(self) -> None:
         if self.n_shards < 1:
@@ -132,6 +144,19 @@ class ShardServiceConfig:
             raise ValueError("skew must be non-negative")
         if self.align_every_panes < 1:
             raise ValueError("align_every_panes must be >= 1")
+        if self.parallel not in (False, True, "thread", "process"):
+            raise ValueError(
+                f"parallel must be False, True, 'thread' or 'process', "
+                f"got {self.parallel!r}")
+
+    @property
+    def drive_mode(self) -> str:
+        """Normalized drive mode: ``serial`` | ``thread`` | ``process``."""
+        if self.parallel is False:
+            return "serial"
+        if self.parallel is True:
+            return "thread"
+        return self.parallel
 
 
 @dataclass
@@ -269,6 +294,28 @@ class ShardWorker:
         self.busy_s += self._clock() - c0
         return out
 
+    # The read-side accessors below exist so the service never reaches
+    # through ``w.rt`` directly: a process-mode proxy can then forward the
+    # same calls over its command pipe instead of exposing live state.
+
+    def stats(self) -> RunStats:
+        return self.rt.stats
+
+    def accountant(self):
+        return self.rt.accountant
+
+    def controller_state(self):
+        return self.rt.controller.state()
+
+    def pending_flush(self) -> bool:
+        return len(self.rt._backlog) > 0
+
+    def obs_registry(self):
+        return self.obs.registry if self.obs is not None else None
+
+    def shutdown(self) -> None:
+        self.rt.shutdown()       # joins per-shard pipelined flush workers
+
     def summary(self) -> dict:
         return {
             "shard": self.shard_id,
@@ -301,14 +348,28 @@ class ShardedHamletService:
                                         cfg.groups_per_tenant,
                                         replicas=cfg.ring_replicas)
         shard_cfg = self._shard_overload_cfg()
-        self.workers = [
-            ShardWorker(s, workload, shard_cfg, policy=policy,
-                        backend=backend, eventtime=cfg.eventtime,
-                        skew=cfg.skew,
-                        lateness_horizon=cfg.lateness_horizon,
-                        obs=Observability.disabled() if cfg.obs else None,
-                        clock=clock)
-            for s in range(cfg.n_shards)]
+        self._mode = cfg.drive_mode
+        if self._mode == "process":
+            from .procdrive import ProcShardWorker
+            self.workers = [
+                ProcShardWorker(s, workload, shard_cfg, policy=policy,
+                                backend=backend, eventtime=cfg.eventtime,
+                                skew=cfg.skew,
+                                lateness_horizon=cfg.lateness_horizon,
+                                obs=cfg.obs, clock=clock)
+                for s in range(cfg.n_shards)]
+            for w in self.workers:       # spawns overlap; then handshake
+                w.wait_ready()
+        else:
+            self.workers = [
+                ShardWorker(s, workload, shard_cfg, policy=policy,
+                            backend=backend, eventtime=cfg.eventtime,
+                            skew=cfg.skew,
+                            lateness_horizon=cfg.lateness_horizon,
+                            obs=Observability.disabled() if cfg.obs
+                            else None,
+                            clock=clock)
+                for s in range(cfg.n_shards)]
         self.pane = self.workers[0].pane
         self.admission = GlobalAdmissionController(
             workload, cfg.overload, mode=cfg.admission, pane=self.pane)
@@ -326,7 +387,7 @@ class ShardedHamletService:
         self.drive_wall_s = 0.0     # measured wall clock across drive cycles
         self._pool = (ThreadPoolExecutor(
             max_workers=cfg.n_shards, thread_name_prefix="shard")
-            if cfg.parallel and cfg.n_shards > 1 else None)
+            if self._mode == "thread" and cfg.n_shards > 1 else None)
         self._clock = clock
 
     def _shard_overload_cfg(self) -> OverloadConfig:
@@ -360,11 +421,11 @@ class ShardedHamletService:
         subs = self._route(chunk)
         if self.admission.mode == "per_shard":
             subs = [self.admission.admit_for_shard(
-                sub, self.workers[s].rt.controller.state())
+                sub, self.workers[s].controller_state())
                 for s, sub in enumerate(subs)]
         self.router_busy_s += self._clock() - c0
         hb = self._max_seen - self.cfg.skew if self.cfg.eventtime else None
-        if self._pool is not None:
+        if self._pool is not None or self._mode == "process":
             # offers ride the worker tasks: ingest + drive overlap per shard
             self._drive(subs, hb)
             return
@@ -393,14 +454,31 @@ class ShardedHamletService:
     def _drive(self, subs: list[EventBatch] | None = None,
                hb: int | None = None) -> None:
         """One drive cycle.  Serial mode: drive every worker in turn, then
-        feed the aligner.  Parallel mode (``cfg.parallel``): dispatch one
-        task per worker onto the thread pool — (offer, heartbeat, drive) —
-        and let the workers meet at the aligner's concurrent rendezvous;
-        the cycle's wall clock is *measured*, not modeled.  Rebalance
-        commits stay on the caller thread, strictly between cycles."""
+        feed the aligner.  Thread mode: dispatch one task per worker onto
+        the thread pool — (offer, heartbeat, drive) — and let the workers
+        meet at the aligner's concurrent rendezvous; the cycle's wall
+        clock is *measured*, not modeled.  Process mode: dispatch one
+        ``cycle`` command per worker process, collect the replies (each
+        carries the post-drive frontier), then feed the aligner in shard
+        order — the same frontier sequence as the serial drive.
+        Rebalance commits stay on the caller thread, strictly between
+        cycles."""
         self._maybe_commit_moves()
         self.drive_cycles += 1
         c0 = self._clock()
+        if self._mode == "process":
+            safe = self._max_seen
+            for s, w in enumerate(self.workers):
+                w.cycle_async(subs[s] if subs is not None else None,
+                              safe, hb)
+            fronts = [w.cycle_wait() for w in self.workers]
+            self.drive_wall_s += self._clock() - c0
+            c0 = self._clock()
+            for f in fronts:
+                self.aligner.update(f)
+            self.aligner.align()
+            self.router_busy_s += self._clock() - c0
+            return
         if self._pool is not None:
             safe = self._max_seen
             futs = [self._pool.submit(
@@ -458,7 +536,7 @@ class ShardedHamletService:
                     f"reached (moves={self._moves})")
         self._drive()
         for w in self.workers:
-            w.rt.shutdown()       # joins per-shard pipelined flush workers
+            w.shutdown()       # joins flush workers / worker processes
         if self._pool is not None:
             self._pool.shutdown(wait=True)
             self._pool = None
@@ -470,6 +548,11 @@ class ShardedHamletService:
         handoff boundary.  Only the two involved shards barrier (cap their
         pane clocks at the boundary); the move commits — open-window state
         handed off, placement overridden — once both reach it."""
+        if self._mode == "process":
+            raise NotImplementedError(
+                "rebalance is not supported with parallel='process': the "
+                "open-window instance handoff would require shipping live "
+                "engine state across the process boundary")
         g, dst = int(group), int(to_shard)
         if not (0 <= dst < self.cfg.n_shards):
             raise ValueError(f"shard {dst} out of range")
@@ -576,17 +659,17 @@ class ShardedHamletService:
     def stats(self) -> RunStats:
         """Fleet RunStats (count fields are shard-count invariant; wall
         timers sum)."""
-        return RunStats.merged([w.rt.stats for w in self.workers])
+        return RunStats.merged([w.stats() for w in self.workers])
 
     def error_report(self) -> dict:
         """Global certificate: router + shard accountants, cell-exact."""
         return self.admission.global_accountant(
-            [w.rt.accountant for w in self.workers]).report()
+            [w.accountant() for w in self.workers]).report()
 
     def window_bound(self, query: str, group: int, w0: int):
         """Global ``3^s`` / subset bound for one window (all accountants)."""
         return self.admission.global_accountant(
-            [w.rt.accountant for w in self.workers]).window_bound(
+            [w.accountant() for w in self.workers]).window_bound(
                 query, group, w0)
 
     def collect(self) -> dict:
@@ -602,6 +685,7 @@ class ShardedHamletService:
                 "busy_s": self.router_busy_s,
                 "chunks": self.chunks,
                 "parallel": self.cfg.parallel,
+                "drive_mode": self._mode,
                 "drive_cycles": self.drive_cycles,
                 "drive_wall_s": round(self.drive_wall_s, 4),
             },
@@ -609,10 +693,12 @@ class ShardedHamletService:
             "stats": {k: v for k, v in vars(self.stats()).items()},
         }
         if self.cfg.obs:
+            regs = [w.obs_registry() for w in self.workers]
             merged = Observability.disabled()
-            for w in self.workers:
-                merged.merge_from(w.obs)
+            for r in regs:
+                if r is not None:
+                    merged.registry.merge(r)
             out["metrics"] = merged.registry.collect()
-            out["shard_metrics"] = [w.obs.registry.collect()
-                                    for w in self.workers]
+            out["shard_metrics"] = [r.collect() if r is not None else {}
+                                    for r in regs]
         return out

@@ -23,9 +23,10 @@ from repro.core.engine import HamletRuntime, vals_equal
 from repro.core.optimizer import DynamicPolicy, FlopPolicy
 from repro.core.plan_cache import PanePlanCache
 from repro.eventtime import EventTimeConfig, EventTimeRuntime
-from repro.obs import (LAG_BUCKETS, LATENCY_MS_BUCKETS, PHASES, Counter,
-                       Histogram, MetricsRegistry, Observability,
-                       SharingAuditLog, Tracer, jsonl_to_chrome)
+from repro.obs import (LAG_BUCKETS, LATENCY_MS_BUCKETS, PHASES,
+                       SERVE_LATENCY_MS_BUCKETS, Counter, Histogram,
+                       MetricsRegistry, Observability, SharingAuditLog,
+                       Tracer, jsonl_to_chrome)
 from repro.overload import OverloadConfig
 from repro.overload.runtime import OverloadMetrics, OverloadRuntime, PaneMetric
 from repro.streams.generator import (NAMED_STREAMS, DisorderConfig,
@@ -387,6 +388,26 @@ def test_histogram_quantile_overflow_reports_tracked_max():
     assert h.quantile(0.99) == 9000.0      # tracked max, not edge 4.0
     assert h.quantile(1.0) == 9000.0
     assert h.quantile(0.1) == 1.0          # still bucket-edge semantics
+
+
+def test_serve_latency_buckets_resolve_mid_range_quantiles():
+    # regression: paced-session delivery latencies live in the 10-500 ms
+    # regime, and with the engine-phase layout every quantile snapped to
+    # a coarse edge (the committed BENCH_serving.json once showed
+    # p50 == 25.0 exactly — bucket edge, not a measurement).  A mid-bucket
+    # population must resolve to a nearby serving-layout edge instead.
+    coarse = Histogram("lat", LATENCY_MS_BUCKETS)
+    fine = Histogram("serve.lat", SERVE_LATENCY_MS_BUCKETS)
+    for _ in range(100):
+        coarse.observe(37.0)
+        fine.observe(37.0)
+    assert coarse.quantile(0.5) == 50.0     # snaps a full coarse bucket up
+    assert fine.quantile(0.5) == 40.0       # adjacent fine edge (+8%)
+    # the sub-100 ms steps that make that resolution hold are a layout
+    # contract: consecutive edges within ~35% through the paced regime
+    edges = SERVE_LATENCY_MS_BUCKETS
+    steps = [b / a for a, b in zip(edges, edges[1:]) if 5.0 <= a < 100.0]
+    assert steps and max(steps) <= 1.35
 
 
 def test_histogram_quantile_zero_skips_empty_leading_buckets():

@@ -249,6 +249,40 @@ def test_continuous_batcher_watermark_and_seal():
     chunk, boundary = cb.seal()
     assert boundary == 20 and len(chunk) == 10
     assert cb.sealed_events == 20 and len(cb) == 5
+    cb.release(0)           # all closed: the watermark HOLDS (only an
+    assert cb.watermark() == 20  # explicit drain finalizes the tail)
+    assert cb.seal() == (None, 20)
+
+
+def test_session_opening_after_all_others_closed_keeps_its_stream():
+    """A transient empty session set must not finalize: a wire client can
+    connect a moment after an earlier client already submitted, closed,
+    and had its panes pumped.  The late session's (time-overlapping)
+    stream must still produce its windows rather than being pre-sealed
+    into straggler territory."""
+    wl, stream = _dataset("ridesharing")
+    gpt = 3
+    fe = ServingFrontend(
+        wl, backend="overload",
+        overload=OverloadConfig(shed_policy="none", micro_batch=4),
+        groups_per_tenant=gpt)
+    p0, p1 = _by_tenant(stream, 2, groups_per_tenant=gpt)
+    hi = int(stream.time.max()) + 1
+    sA = fe.open_session(tenant=1)
+    sA.submit(p1)
+    sA.advance_to(hi)
+    sA.close()
+    fe.pump()               # empty session set: pump must hold, not seal
+    sB = fe.open_session(tenant=0)
+    sB.submit(p0)
+    sB.advance_to(hi)
+    sB.close()
+    res = fe.drain()
+    ref = OverloadRuntime(
+        wl, OverloadConfig(shed_policy="none", micro_batch=4)).run(stream)
+    _assert_same(res, ref, "late-opening session")
+    got_b = [d for d in sB.poll() if d.kind != "retract"]
+    assert got_b and all(d.group < gpt for d in got_b)
 
 
 def test_sessions_fill_shared_microbatches():

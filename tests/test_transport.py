@@ -1,0 +1,447 @@
+"""Wire transport for the serving front-end: frame codec roundtrips,
+loopback bitwise parity with the in-process path (ordered and event-time
+disordered), credit-based backpressure bounds, disconnect races, and
+socket/thread lifecycle hygiene."""
+
+import os
+import struct
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.engine import HamletRuntime, vals_equal
+from repro.core.events import EventBatch
+from repro.core.pattern import EventType, Kleene, Seq
+from repro.core.query import Query, Workload
+from repro.eventtime.config import EventTimeConfig
+from repro.overload.config import OverloadConfig
+from repro.overload.runtime import OverloadRuntime
+from repro.serve import CreditGate, ServingClient, ServingFrontend, \
+    ServingServer
+from repro.serve.session import Delivery
+from repro.serve.transport import (decode_chunk, decode_deliveries,
+                                   encode_chunk, encode_deliveries)
+from repro.streams.generator import (NAMED_STREAMS, RIDESHARING_SCHEMA,
+                                     SMARTHOME_SCHEMA, STOCK_SCHEMA,
+                                     TAXI_SCHEMA, DisorderConfig,
+                                     apply_disorder)
+
+DATASETS = {
+    "ridesharing": (RIDESHARING_SCHEMA, "Travel", ("Request", "Accept")),
+    "stock": (STOCK_SCHEMA, "Quote", ("Buy", "Sell")),
+    "smarthome": (SMARTHOME_SCHEMA, "Measure", ("Load", "Work")),
+    "taxi": (TAXI_SCHEMA, "Travel", ("Request", "Pickup")),
+}
+
+STREAM_KW = {"ridesharing": dict(events_per_minute=250, minutes=1,
+                                 n_groups=6),
+             "stock": dict(events_per_minute=300, minutes=1, n_groups=6),
+             "smarthome": dict(events_per_minute=300, minutes=1,
+                               n_groups=6),
+             "taxi": dict(events_per_minute=250, minutes=1, n_groups=6)}
+
+
+def _wl(schema, kleene, heads, within=20, slide=10):
+    k = EventType(kleene)
+    qs = [Query(f"q{i}", Seq(EventType(h), Kleene(k)),
+                within=within, slide=slide)
+          for i, h in enumerate(heads)]
+    qs.append(Query("qk", Kleene(k), within=within, slide=slide))
+    return Workload(schema, qs)
+
+
+def _dataset(name):
+    schema, kleene, heads = DATASETS[name]
+    return (_wl(schema, kleene, heads),
+            NAMED_STREAMS[name](**STREAM_KW[name]))
+
+
+def _by_tenant(stream, n_tenants, groups_per_tenant=2):
+    parts = []
+    for t in range(n_tenants):
+        lo, hi = t * groups_per_tenant, (t + 1) * groups_per_tenant
+        mask = (stream.group >= lo) & (stream.group < hi)
+        parts.append(stream.select(np.flatnonzero(mask)))
+    return parts
+
+
+def _frontend(wl, **kw):
+    kw.setdefault("backend", "overload")
+    kw.setdefault("overload",
+                  OverloadConfig(shed_policy="none", micro_batch=4))
+    kw.setdefault("groups_per_tenant", 2)
+    return ServingFrontend(wl, **kw)
+
+
+def _wait_sessions_closed(fe, n, timeout=30.0):
+    """CLOSE frames are processed by the server loop asynchronously; the
+    owner must not drain before every session's close has landed."""
+    deadline = time.perf_counter() + timeout
+    while True:
+        sess = fe.summary()["sessions"]
+        if len(sess) >= n and all(s["closed"] for s in sess.values()):
+            return
+        assert time.perf_counter() < deadline, "sessions never closed"
+        time.sleep(0.005)
+
+
+def _assert_same(a, b, ctx=""):
+    assert set(a) == set(b), ctx
+    for k in a:
+        assert vals_equal(a[k], b[k]), (ctx, k)
+
+
+# ----------------------------------------------------------------- codec
+
+
+def test_chunk_codec_roundtrip_is_zero_copy():
+    wl, stream = _dataset("stock")
+    payload = encode_chunk(stream)
+    back = decode_chunk(wl.schema, payload)
+    for col in ("type_id", "time", "attrs", "group", "seq"):
+        a, b = getattr(stream, col), getattr(back, col)
+        if a is None:
+            assert b is None
+            continue
+        assert np.array_equal(a, b), col
+        assert not b.flags.owndata, f"{col} was copied, not viewed"
+    empty = stream.select(np.arange(0))
+    assert len(decode_chunk(wl.schema, encode_chunk(empty))) == 0
+
+
+def test_delivery_codec_roundtrip_values_and_interning():
+    ds = [
+        Delivery("emit", "q0", 3, 40, {"count": 7.0, "sum": float("nan")},
+                 0, 1.25),
+        Delivery("retract", "q0", 3, 40, None, 1, 0.5),
+        Delivery("amend", "q1", -2, 50,
+                 {"count": 9, "arr": np.arange(3.0)}, 2, 2000.0),
+    ]
+    t_enc, back = decode_deliveries(encode_deliveries(ds, 123.5))
+    assert t_enc == 123.5
+    assert len(back) == len(ds)
+    for a, b in zip(ds, back):
+        assert (a.kind, a.query, a.group, a.w0, a.revision) == \
+            (b.kind, b.query, b.group, b.w0, b.revision)
+        assert b.latency_ms == pytest.approx(a.latency_ms)
+    assert back[0].vals["count"] == 7.0
+    assert type(back[0].vals["count"]) is float
+    assert np.isnan(back[0].vals["sum"])
+    assert back[1].vals is None
+    assert back[2].vals["count"] == 9 and type(back[2].vals["count"]) is int
+    assert np.array_equal(back[2].vals["arr"], np.arange(3.0))
+    # one intern table per frame: "q0" appears once in the payload
+    assert encode_deliveries(ds, 0.0).count(b"q0") == 1
+
+
+# ------------------------------------------------------- loopback parity
+
+
+@pytest.mark.parametrize("name", sorted(DATASETS))
+def test_loopback_parity_sweep(name):
+    """Three socket clients trickling tenant splits through the server are
+    bitwise equal to the single-threaded batch run, and each END frame
+    carries exactly the subscribed subset."""
+    wl, stream = _dataset(name)
+    ref = OverloadRuntime(
+        wl, OverloadConfig(shed_policy="none", micro_batch=4)).run(stream)
+    parts = _by_tenant(stream, 3)
+    fe = _frontend(wl)
+    srv = ServingServer(fe)
+    host, port = srv.start()
+    out = {}
+    # sessions must all exist before anyone submits, else an early
+    # closer lets the seal pass a late opener's first events — the same
+    # open-before-trickle contract the in-process tests follow
+    opened = threading.Barrier(3)
+
+    def run_client(t):
+        c = ServingClient(host, port, tenant=t)
+        opened.wait(timeout=30.0)
+        for c0 in range(0, len(parts[t]), 40):
+            c.submit(parts[t].select(
+                np.arange(c0, min(c0 + 40, len(parts[t])))))
+        c.close()
+        got = list(c.deliveries())
+        out[t] = (c.results, got)
+        c.shutdown()
+
+    threads = [threading.Thread(target=run_client, args=(t,))
+               for t in range(3)]
+    try:
+        for th in threads:
+            th.start()
+        _wait_sessions_closed(fe, 3)
+        res = srv.drain()
+        for th in threads:
+            th.join(timeout=30.0)
+            assert not th.is_alive()
+    finally:
+        srv.stop()
+    _assert_same(res, ref, name)
+    n_deliver = 0
+    for t in range(3):
+        end_res, got = out[t]
+        _assert_same(end_res,
+                     {k: v for k, v in ref.items() if k[1] // 2 == t},
+                     (name, t))
+        assert all(d.group // 2 == t for d in got), "cross-tenant delivery"
+        n_deliver += len(got)
+    assert n_deliver == len(ref)
+    summ = srv.summary()
+    assert summ["frames_in"] > 0 and summ["bytes_out"] > 0
+    assert summ["disconnects"] == 0
+
+
+def test_loopback_eventtime_disorder_parity():
+    """Disordered arrivals over the socket (chunk-local sort, producer seq
+    riding the wire) repair to the in-order batch run bitwise."""
+    wl, stream = _dataset("taxi")
+    t_end = ((int(stream.time.max()) // 10) + 1) * 10
+    ref = HamletRuntime(wl).run(stream, t_end=t_end)
+    ds = apply_disorder(stream, DisorderConfig(fraction=0.3, max_skew=6,
+                                               seed=5))
+    base = ds.base
+    fe = _frontend(wl, backend="eventtime",
+                   eventtime=EventTimeConfig(skew=8), micro_batch=2,
+                   skew=8, overload=None)
+    srv = ServingServer(fe)
+    host, port = srv.start()
+    clients = [ServingClient(host, port, tenant=t) for t in range(3)]
+    try:
+        rng = np.random.default_rng(7)
+        cur = 0
+        while cur < len(base):
+            n = int(rng.integers(20, 60))
+            idx = ds.order[cur:min(cur + n, len(base))]
+            sub = EventBatch.from_unsorted(
+                base.schema, base.type_id[idx], base.time[idx],
+                base.attrs[idx], base.group[idx], seq=base.seq[idx])
+            clients[int(rng.integers(0, 3))].submit(sub)
+            cur += n
+        for c in clients:
+            c.advance_to(t_end)
+            c.close()
+        _wait_sessions_closed(fe, 3)
+        srv.drain()
+        got = {k: v for k, v in fe.results().items() if k in ref}
+        _assert_same(got, ref)
+        for c in clients:
+            c.wait_end()
+    finally:
+        for c in clients:
+            c.shutdown()
+        srv.stop()
+
+
+# ----------------------------------------------------------- backpressure
+
+
+class _FakeFE:
+    def __init__(self):
+        self.sealed = 0
+        self.staged = 0
+
+    def sealed_to(self):
+        return self.sealed
+
+    def staged_events(self):
+        return self.staged
+
+
+class _Rec:
+    def __init__(self):
+        self.counts = {}
+        self.blocked = []
+
+    def count(self, name, n=1):
+        self.counts[name] = self.counts.get(name, 0) + n
+
+    def observe_blocked(self, sid, ms):
+        self.blocked.append((sid, ms))
+
+
+def test_credit_gate_withholds_and_regrant_is_lossless():
+    fe, rec = _FakeFE(), _Rec()
+    gate = CreditGate(fe, window=10, staging_high=5, obs=rec)
+    assert gate.register(1) == 10
+    gate.on_submit(1, 4, t_max=10, now=0.0)
+    gate.on_submit(1, 6, t_max=20, now=0.0)     # balance 0 -> blocked
+    fe.sealed, fe.staged = 15, 9                # first submit consumed,
+    assert gate.poll(1, now=1.0) == 0           # but gate is shut
+    assert gate.withheld == 4
+    assert rec.counts["serve.credits_withheld"] == 4
+    fe.sealed, fe.staged = 25, 2                # gate open, all freed
+    assert gate.poll(1, now=2.0) == 10          # withheld credits regrant
+    assert gate.granted == 10
+    assert rec.counts["serve.credits_granted"] == 10
+    assert rec.blocked and rec.blocked[0][0] == 1
+    assert rec.blocked[0][1] == pytest.approx(2000.0)   # blocked 0.0->2.0s
+    gate.forget(1)
+    assert gate.poll(1, now=3.0) == 0           # unknown session: no-op
+    gate.on_submit(1, 5, t_max=30, now=3.0)     # post-forget: dropped
+    assert gate.summary()["inflight"] == {}
+
+
+def test_backpressure_bounds_staging_and_never_sheds():
+    """A producer much faster than the seal: the credit window caps what
+    it can hold in flight, so staging stays bounded and nothing is shed —
+    overload surfaces as client blocked time, not loss."""
+    from repro.obs import Observability
+
+    wl, stream = _dataset("ridesharing")
+    window, chunk, high = 48, 16, 1 << 10
+    obs = Observability()
+    fe = _frontend(wl, session_admission=True, obs=obs)
+    srv = ServingServer(fe, credit_window=window, staging_high=high)
+    host, port = srv.start()
+    try:
+        c = ServingClient(host, port, tenant=0, groups="all")
+        for c0 in range(0, len(stream), chunk):
+            c.submit(stream.select(
+                np.arange(c0, min(c0 + chunk, len(stream)))))
+        c.close()
+        _wait_sessions_closed(fe, 1)
+        res = srv.drain()
+        c.wait_end()
+        c.shutdown()
+    finally:
+        srv.stop()
+    summ = fe.summary()
+    assert summ["session_shed"] == 0, "compliant client was shed"
+    assert summ["sessions"][c.sid]["submitted"] == len(stream)
+    # hard bound: staged events never exceed the gate plus the session's
+    # window (plus one in-transit chunk), however fast the producer pushes
+    assert summ["staging"]["hwm"] <= high + window + chunk
+    gate = srv.summary()["credit"]
+    # credit conservation: everything submitted beyond the initial window
+    # had to be granted back first
+    assert gate["granted"] >= len(stream) - window
+    assert c.blocked_s > 0.0, "producer never hit the credit wall"
+    assert res, "no results through the backpressured session"
+    metrics = obs.collect(serving=fe)["metrics"]
+    assert metrics["serve.credits_granted"] >= len(stream) - window
+    assert metrics["serve.staging_hwm"] == summ["staging"]["hwm"]
+    blocked = [k for k in metrics if k.startswith("serve.blocked_ms.")]
+    assert blocked, "blocked-time histogram series missing"
+
+
+# ------------------------------------------------------ disconnect races
+
+
+def test_client_disconnect_mid_stream_frees_session_and_credits():
+    """A hard socket drop (no CLOSE, no BYE) must close the session, free
+    its credit state, and leave the surviving session's results bitwise
+    intact — and drain() must not hang on the dead connection."""
+    wl, stream = _dataset("ridesharing")
+    ref = OverloadRuntime(
+        wl, OverloadConfig(shed_policy="none", micro_batch=4)).run(stream)
+    parts = _by_tenant(stream, 2)
+    fe = _frontend(wl)
+    srv = ServingServer(fe)
+    host, port = srv.start()
+    try:
+        victim = ServingClient(host, port, tenant=0)
+        survivor = ServingClient(host, port, tenant=1)
+        victim.submit(parts[0].select(np.arange(min(40, len(parts[0])))))
+        victim.kill()                          # mid-stream, no CLOSE
+        survivor.submit(parts[1])
+        survivor.close()
+        deadline = time.perf_counter() + 30.0
+        while True:
+            sess = fe.summary()["sessions"]
+            if (srv.disconnects == 1
+                    and sess[victim.sid]["closed"]
+                    and sess[survivor.sid]["closed"]):
+                break
+            assert time.perf_counter() < deadline, "drop never detected"
+            time.sleep(0.005)
+        assert victim.sid not in srv.gate.summary()["inflight"]
+        srv.drain(timeout=30.0)
+        end = survivor.wait_end()
+        survivor.shutdown()
+    finally:
+        srv.stop()
+    # group independence: the survivor's subscribed windows are untouched
+    # by the victim's partial submission
+    _assert_same(end, {k: v for k, v in ref.items() if k[1] // 2 == 1})
+    with pytest.raises(ConnectionError):
+        list(victim.deliveries())              # cut, not drained
+
+
+def test_dead_client_blocked_on_credits_unblocks():
+    """submit(block=True) waiting for credits must raise, not hang, when
+    the connection dies underneath it."""
+    wl, stream = _dataset("ridesharing")
+    fe = _frontend(wl)
+    srv = ServingServer(fe, credit_window=8)
+    host, port = srv.start()
+    try:
+        c = ServingClient(host, port, tenant=0)
+        err = []
+
+        def push():
+            try:
+                # single huge batch can never fit the window of 8
+                c.submit(stream, timeout=30.0)
+            except (ConnectionError, TimeoutError) as e:
+                err.append(e)
+
+        th = threading.Thread(target=push)
+        th.start()
+        time.sleep(0.05)
+        c.kill()
+        th.join(timeout=10.0)
+        assert not th.is_alive(), "submit hung on a dead connection"
+        assert err and isinstance(err[0], ConnectionError)
+    finally:
+        srv.stop()
+
+
+# -------------------------------------------------------------- hygiene
+
+
+def test_no_leaked_threads_or_fds_after_stop():
+    fds_before = len(os.listdir("/proc/self/fd"))
+    before = set(threading.enumerate())
+    wl, stream = _dataset("ridesharing")
+    parts = _by_tenant(stream, 2)
+    fe = _frontend(wl)
+    srv = ServingServer(fe)
+    host, port = srv.start()
+    clients = [ServingClient(host, port, tenant=t) for t in range(2)]
+    for t, c in enumerate(clients):
+        c.submit(parts[t])
+        c.close()
+    _wait_sessions_closed(fe, 2)
+    srv.drain()
+    for c in clients:
+        c.wait_end()
+        c.shutdown()
+    srv.stop()
+    leaked = [t for t in threading.enumerate()
+              if t not in before and t.is_alive()
+              and "ThreadPoolExecutor" not in repr(t)
+              and "asyncio" not in t.name]
+    assert not leaked, leaked
+    assert len(os.listdir("/proc/self/fd")) <= fds_before, "fd leak"
+
+
+def test_bad_frame_type_drops_connection_cleanly():
+    wl, _ = _dataset("ridesharing")
+    fe = _frontend(wl)
+    srv = ServingServer(fe)
+    host, port = srv.start()
+    try:
+        c = ServingClient(host, port, tenant=0)
+        c._send(99, b"junk")                  # protocol violation
+        deadline = time.perf_counter() + 10.0
+        while not c._dead:
+            assert time.perf_counter() < deadline
+            time.sleep(0.005)
+        c.kill()
+        assert fe.summary()["sessions"][c.sid]["closed"]
+    finally:
+        srv.stop()
